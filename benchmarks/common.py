@@ -1,0 +1,52 @@
+"""Shared benchmark substrate: the paper's LLaMA-7B workloads (Table III),
+row-subsampling for CPU runtime, and CSV helpers.
+
+Cycle counts scale linearly in matrix rows (banks process disjoint row
+sets in lockstep; stripes per bank are proportional to rows), so we
+simulate ``rows / scale`` rows and multiply cycles back — validated by
+``test_scaling_linearity`` in the benchmark self-checks.  DRAM core clock
+1.2 GHz converts cycles to microseconds.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.pruning import magnitude_prune
+
+# Table III: LLaMA-7B matrices
+WORKLOADS = {
+    "attention.wk": (4096, 4096),
+    "attention.wo": (4096, 4096),
+    "attention.wq": (4096, 4096),
+    "attention.wv": (4096, 4096),
+    "feed_forward.w1": (11008, 4096),
+    "feed_forward.w2": (4096, 11008),
+    "feed_forward.w3": (11008, 4096),
+}
+
+SPARSITIES = (0.5, 0.6, 0.7, 0.8, 0.9)
+DRAM_GHZ = 1.2
+SCALE = int(os.environ.get("REPRO_BENCH_SCALE", "16"))
+
+
+def workload_matrix(name: str, sparsity: float, scale: int | None = None,
+                    seed: int = 0) -> tuple[np.ndarray, int]:
+    """Pruned weight matrix for a Table III layer, row-subsampled by
+    ``scale``.  Returns (matrix, scale_used)."""
+    scale = SCALE if scale is None else scale
+    r, c = WORKLOADS[name]
+    rows = max(64, r // scale)
+    actual_scale = r / rows
+    rng = np.random.default_rng(seed + hash(name) % 1000)
+    w = magnitude_prune(rng.standard_normal((rows, c)), sparsity)
+    return w, actual_scale
+
+
+def cycles_to_us(cycles: float) -> float:
+    return cycles / (DRAM_GHZ * 1e3)
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.3f},{derived}"

@@ -1,0 +1,50 @@
+"""Figure 10: speedup of Ideal Non-PIM / Newton / SpaceA / ESPIM /
+Ideal-ESPIM over the GPU reference — full model across sparsities 50-90%,
+plus per-layer at 90%."""
+from __future__ import annotations
+
+from repro.core.pim_sim import simulate_matrix
+from repro.core.sdds import ESPIMConfig
+
+from benchmarks.common import (SPARSITIES, WORKLOADS, csv_row, cycles_to_us,
+                               workload_matrix)
+
+ARCHS = ("ideal_nonpim", "newton", "spacea", "espim", "espim_ideal")
+
+
+def run(scale: int | None = None, sparsities=SPARSITIES,
+        layers=tuple(WORKLOADS)) -> list[str]:
+    rows: list[str] = []
+    cfg = ESPIMConfig()
+    # full model across sparsities (cycle-weighted aggregate over layers)
+    for s in sparsities:
+        agg = {a: 0.0 for a in ARCHS + ("gpu",)}
+        for name in layers:
+            w, sc = workload_matrix(name, s)
+            reps = simulate_matrix(w, cfg, archs=ARCHS + ("gpu",))
+            for a in agg:
+                agg[a] += reps[a].cycles * sc
+        for a in ARCHS:
+            rows.append(csv_row(
+                f"fig10/full_model/s{int(s*100)}/{a}",
+                cycles_to_us(agg[a]),
+                f"speedup_vs_gpu={agg['gpu']/agg[a]:.1f}x"))
+        rows.append(csv_row(
+            f"fig10/full_model/s{int(s*100)}/espim_vs_newton",
+            cycles_to_us(agg["espim"]),
+            f"speedup={agg['newton']/agg['espim']:.2f}x"))
+    # per-layer at 90%
+    for name in layers:
+        w, sc = workload_matrix(name, 0.9)
+        reps = simulate_matrix(w, cfg, archs=("espim", "newton", "gpu"))
+        rows.append(csv_row(
+            f"fig10/layer/{name}/s90/espim",
+            cycles_to_us(reps["espim"].cycles * sc),
+            f"vs_gpu={reps['gpu'].cycles/reps['espim'].cycles:.0f}x,"
+            f"vs_newton={reps['newton'].cycles/reps['espim'].cycles:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

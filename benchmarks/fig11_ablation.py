@@ -1,0 +1,42 @@
+"""Figure 11: isolating ESPIM's optimizations — fine-grained base,
++decoupled prefetch, +switch-conflict reorder, +greedy balance (full),
+and the brute-force 16x11 switch."""
+from __future__ import annotations
+
+from repro.core.pim_sim import espim_cycles
+from repro.core.sdds import ESPIMConfig, schedule_matrix
+
+from benchmarks.common import csv_row, cycles_to_us, workload_matrix
+
+STEPS = [
+    ("base_finegrained", dict(prefetch=False, reorder=False, balance=False)),
+    ("+prefetch", dict(prefetch=True, reorder=False, balance=False)),
+    ("+reorder", dict(prefetch=True, reorder=True, balance=False)),
+    ("+balance(full)", dict(prefetch=True, reorder=True, balance=True)),
+    ("large_switch", dict(prefetch=True, reorder=True, balance=True,
+                          full_switch=True)),
+]
+LAYERS = ("attention.wq", "feed_forward.w1", "feed_forward.w2")
+
+
+def run(scale: int | None = None, sparsities=(0.5, 0.7, 0.9)) -> list[str]:
+    rows = []
+    for s in sparsities:
+        base_cycles = None
+        for step_name, kw in STEPS:
+            total = 0.0
+            for layer in LAYERS:
+                w, sc = workload_matrix(layer, s)
+                sched, _ = schedule_matrix(w, ESPIMConfig(**kw))
+                total += espim_cycles(sched, ESPIMConfig(**kw)).cycles * sc
+            if base_cycles is None:
+                base_cycles = total
+            rows.append(csv_row(
+                f"fig11/s{int(s*100)}/{step_name}", cycles_to_us(total),
+                f"speedup_vs_base={base_cycles/total:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

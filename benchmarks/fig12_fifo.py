@@ -1,0 +1,34 @@
+"""Figure 12: sensitivity to iFIFO/eFIFO depth (2/4/8/16 entries)."""
+from __future__ import annotations
+
+from repro.core.pim_sim import espim_cycles
+from repro.core.sdds import ESPIMConfig, schedule_matrix
+
+from benchmarks.common import csv_row, cycles_to_us, workload_matrix
+
+LAYERS = ("attention.wq", "feed_forward.w2")
+
+
+def run(scale: int | None = None, sparsities=(0.7, 0.9),
+        depths=(2, 4, 8, 16)) -> list[str]:
+    rows = []
+    for s in sparsities:
+        for layer in LAYERS:
+            base = None
+            for depth in depths:
+                cfg = ESPIMConfig(fifo_depth=depth)
+                w, sc = workload_matrix(layer, s)
+                sched, _ = schedule_matrix(w, cfg)
+                cyc = espim_cycles(sched, cfg).cycles * sc
+                if base is None:
+                    base = cyc
+                rows.append(csv_row(
+                    f"fig12/{layer}/s{int(s*100)}/fifo{depth}",
+                    cycles_to_us(cyc),
+                    f"speedup_vs_fifo2={base/cyc:.3f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,34 @@
+"""Figure 13: sensitivity to the number of banks (8/16/32)."""
+from __future__ import annotations
+
+from repro.core.pim_sim import espim_cycles
+from repro.core.sdds import ESPIMConfig, schedule_matrix
+
+from benchmarks.common import csv_row, cycles_to_us, workload_matrix
+
+LAYERS = ("attention.wq", "feed_forward.w1")
+
+
+def run(scale: int | None = None, sparsities=(0.7, 0.9),
+        banks=(8, 16, 32)) -> list[str]:
+    rows = []
+    for s in sparsities:
+        for layer in LAYERS:
+            base = None
+            for nb in banks:
+                cfg = ESPIMConfig(n_banks=nb)
+                w, sc = workload_matrix(layer, s)
+                sched, _ = schedule_matrix(w, cfg)
+                cyc = espim_cycles(sched, cfg).cycles * sc
+                if base is None:
+                    base = cyc
+                rows.append(csv_row(
+                    f"fig13/{layer}/s{int(s*100)}/banks{nb}",
+                    cycles_to_us(cyc),
+                    f"speedup_vs_8banks={base/cyc:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

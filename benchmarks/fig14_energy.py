@@ -1,0 +1,52 @@
+"""Figure 14: energy normalized to the GPU's conventional DRAM —
+access / compute / rest breakdown for Newton and ESPIM."""
+from __future__ import annotations
+
+from repro.core.energy import espim_energy, gpu_dram_energy, newton_energy
+from repro.core.pim_sim import simulate_matrix
+from repro.core.sdds import ESPIMConfig
+
+from benchmarks.common import (SPARSITIES, csv_row, cycles_to_us,
+                               workload_matrix)
+
+LAYERS = ("attention.wq", "feed_forward.w1", "feed_forward.w2")
+
+
+def run(scale: int | None = None, sparsities=SPARSITIES) -> list[str]:
+    rows = []
+    cfg = ESPIMConfig()
+    for s in sparsities:
+        tot_n, tot_e, tot_base = 0.0, 0.0, 0.0
+        acc = {"access": 0.0, "compute": 0.0, "rest": 0.0}
+        cyc = 0.0
+        for layer in LAYERS:
+            w, sc = workload_matrix(layer, s)
+            reps = simulate_matrix(w, cfg, archs=("espim",))
+            sched = reps["espim"].schedule
+            base = gpu_dram_energy(*w.shape).total * sc
+            en = newton_energy(w.shape[0], w.shape[1],
+                               int((w != 0).sum()))
+            ee = espim_energy(sched)
+            tot_base += base
+            tot_n += en.total * sc
+            tot_e += ee.total * sc
+            acc["access"] += ee.access * sc
+            acc["compute"] += ee.compute * sc
+            acc["rest"] += ee.rest * sc
+            cyc += reps["espim"].cycles * sc
+        rows.append(csv_row(
+            f"fig14/s{int(s*100)}/newton", cycles_to_us(cyc),
+            f"energy_vs_gpu_dram={tot_n/tot_base:.2f}x"))
+        rows.append(csv_row(
+            f"fig14/s{int(s*100)}/espim", cycles_to_us(cyc),
+            f"energy_vs_gpu_dram={tot_e/tot_base:.2f}x;"
+            f"access={acc['access']/tot_base:.2f};"
+            f"compute={acc['compute']/tot_base:.2f};"
+            f"rest={acc['rest']/tot_base:.2f};"
+            f"saving_vs_newton={(1-tot_e/tot_n)*100:.0f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,53 @@
+"""Kernel micro-benchmarks: ESPIM ELL spmv vs dense MV on this host's
+backend (jnp reference path — interpret-mode Pallas timing is meaningless
+on CPU), plus pack statistics.  On TPU the same harness times the Pallas
+kernels natively."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pruning import magnitude_prune
+from repro.core.sparse_format import pack_ell
+from repro.kernels import ops
+
+from benchmarks.common import csv_row
+
+
+def _time(fn, *args, iters=5):
+    fn(*args).block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(scale=None) -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for (r, c), s in (((1024, 4096), 0.9), ((2048, 2048), 0.8)):
+        w = magnitude_prune(rng.standard_normal((r, c)).astype(np.float32), s)
+        pack = pack_ell(w)
+        dev = ops.pack_to_device(pack)
+        x = jnp.asarray(rng.standard_normal(c), jnp.float32)
+        wd = jnp.asarray(w)
+
+        sparse_fn = jax.jit(lambda v, cc, xx: (
+            ops.espim_spmv(v, cc, xx, impl="ref")))
+        dense_fn = jax.jit(lambda ww, xx: ww @ xx)
+        us_sparse = _time(sparse_fn, dev.values, dev.cols, x)
+        us_dense = _time(dense_fn, wd, x)
+        rows.append(csv_row(
+            f"kernels/espim_spmv/{r}x{c}_s{int(s*100)}", us_sparse,
+            f"dense_us={us_dense:.1f};speedup={us_dense/us_sparse:.2f}x;"
+            f"pad_frac={pack.stats.padding_frac:.2f};L={pack.stats.ell_width}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,171 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x
+mesh) cell from the compiled dry-run artifacts.
+
+  compute    = dot_FLOPs_per_device / peak_FLOP/s        (197 TF/s bf16)
+  memory     = dot_stream_bytes_per_device / HBM_bw      (819 GB/s)
+  collective = collective_operand_bytes_per_device / link_bw (50 GB/s)
+
+Conventions (see DESIGN.md / EXPERIMENTS.md):
+  * the dry-run stores the *per-device* SPMD program's costs with while
+    bodies scaled by trip count (launch/hlo_analysis.py), so dividing by
+    per-chip peak directly gives per-chip seconds — algebraically equal to
+    total/(chips x peak);
+  * memory uses dot operand+result stream bytes — the TPU-fusion estimate
+    (weights and activations enter dots; elementwise traffic fuses);
+  * collective bytes follow the assignment's "sum operand sizes" rule on
+    the per-device program.
+
+MODEL_FLOPS = 6·N·D (train), 2·N·D (prefill), 2·N_active·B (decode), and
+the ratio MODEL_FLOPS / HLO_FLOPs flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config
+from repro.models import factory
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+_param_cache: dict[str, tuple[float, float]] = {}
+
+
+def param_counts(arch: str) -> tuple[float, float]:
+    """(total params, active params) from the real init shapes."""
+    if arch in _param_cache:
+        return _param_cache[arch]
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(
+        lambda: factory.init_params(cfg, jax.random.PRNGKey(0)))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = active = 0.0
+    for kp, leaf in flat:
+        n = 1.0
+        for d in leaf.shape:
+            n *= d
+        total += n
+        path = jax.tree_util.keystr(kp)
+        if "moe" in path and ("w_gate" in path or "w_up" in path
+                              or "w_down" in path):
+            active += n * cfg.experts_per_token / max(1, cfg.n_experts)
+        else:
+            active += n
+    _param_cache[arch] = (total, active)
+    return total, active
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Global useful FLOPs for the cell (6ND / 2ND / 2·N_active·B)."""
+    shape = SHAPES[shape_name]
+    total, active = param_counts(arch)
+    if shape.kind == "train":
+        return 6.0 * active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * active * shape.global_batch * shape.seq_len
+    return 2.0 * active * shape.global_batch  # decode: one token per seq
+
+
+def _suggest(dom: str, cell: dict) -> str:
+    arch, shape = cell["arch"], cell["shape"]
+    if dom == "compute":
+        return ("compute-bound: reduce redundant FLOPs (remat policy, "
+                "cheaper logits/CE) or accept — already near the useful-"
+                "work limit")
+    if dom == "memory":
+        if SHAPES[shape].kind == "decode":
+            return ("weight/KV streams dominate: quantize KV or shard the "
+                    "cache further; batch more requests per weight read")
+        return ("activation/weight streams dominate: larger microbatch per "
+                "FSDP gather, or fuse/shrink saved activations")
+    return ("collective-bound: re-shard to cut resharding all-to-alls, "
+            "overlap FSDP gathers with compute, or compress the DP "
+            "all-reduce")
+
+
+def analyze_cell(cell: dict) -> dict:
+    hc = cell["hlo_cost"]
+    n_dev = cell.get("n_devices", 256)
+    compute = hc["dot_flops"] / PEAK_FLOPS
+    memory = hc["dot_bytes"] / HBM_BW
+    collective = hc["collective_total_bytes"] / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(cell["arch"], cell["shape"])
+    useful_frac = mf / max(1.0, hc["dot_flops"] * n_dev)
+    # roofline fraction: useful work at peak vs the modeled step time
+    ideal = mf / n_dev / PEAK_FLOPS
+    return {
+        "arch": cell["arch"],
+        "shape": cell["shape"],
+        "mesh": cell["mesh"],
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_flops_ratio": useful_frac,
+        "roofline_fraction": ideal / max(bound, 1e-30),
+        "suggestion": _suggest(dom, cell),
+        "temp_bytes": cell.get("memory", {}).get("temp_size_in_bytes", 0),
+    }
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            d = json.load(fh)
+        # skip extra artifacts (e.g. the distributed-spmv cell) that are
+        # not standard (arch x shape) cells
+        if d.get("status") == "ok" and d.get("shape") in SHAPES:
+            out.append(d)
+    return out
+
+
+def run(scale=None, mesh: str = "single") -> list[str]:
+    rows = []
+    for cell in load_cells(mesh):
+        a = analyze_cell(cell)
+        rows.append(
+            f"roofline/{a['arch']}/{a['shape']}/{mesh},"
+            f"{max(a['compute_s'], a['memory_s'], a['collective_s'])*1e6:.1f},"
+            f"dominant={a['dominant']};"
+            f"compute={a['compute_s']*1e3:.2f}ms;"
+            f"memory={a['memory_s']*1e3:.2f}ms;"
+            f"collective={a['collective_s']*1e3:.2f}ms;"
+            f"useful_ratio={a['useful_flops_ratio']:.2f};"
+            f"roofline_frac={a['roofline_fraction']:.2f}")
+    return rows
+
+
+def markdown_table(mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | useful/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for cell in load_cells(mesh):
+        a = analyze_cell(cell)
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['compute_s']*1e3:.2f} | "
+            f"{a['memory_s']*1e3:.2f} | {a['collective_s']*1e3:.2f} | "
+            f"**{a['dominant']}** | {a['useful_flops_ratio']:.2f} | "
+            f"{a['roofline_fraction']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(markdown_table(mesh))

@@ -1,0 +1,44 @@
+"""Benchmark harness: one function per paper table/figure plus the
+roofline report.  Prints ``name,us_per_call,derived`` CSV.
+
+Scale note: PIM figures run the Table III LLaMA-7B matrices row-subsampled
+by REPRO_BENCH_SCALE (default 16; cycles scale back linearly — see
+benchmarks/common.py).  Set REPRO_BENCH_SCALE=1 for the full matrices.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig10_speedup, fig11_ablation, fig12_fifo,
+                            fig13_banks, fig14_energy, kernels_bench,
+                            roofline, table4_area)
+
+    suites = [
+        ("table4", table4_area.run),
+        ("fig10", fig10_speedup.run),
+        ("fig11", fig11_ablation.run),
+        ("fig12", fig12_fifo.run),
+        ("fig13", fig13_banks.run),
+        ("fig14", fig14_energy.run),
+        ("kernels", kernels_bench.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001 - report and continue
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}",
+                  file=sys.stderr)
+            raise
+        for r in rows:
+            print(r)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

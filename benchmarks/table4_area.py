@@ -1,0 +1,33 @@
+"""Table IV: area over conventional DRAM for Newton, ESPIM sparse-only,
+and the flexible sparse+dense configuration."""
+from __future__ import annotations
+
+from repro.core.energy import area_table
+from repro.core.sdds import ESPIMConfig
+
+from benchmarks.common import csv_row
+
+
+def run(scale: int | None = None) -> list[str]:
+    t = area_table(ESPIMConfig())
+    rows = [
+        csv_row("table4/newton", 0.0,
+                f"area_over_dram={t['newton']['total']*100:.1f}%"),
+        csv_row("table4/espim_sparse_only", 0.0,
+                f"area_over_dram={t['espim_sparse_only']['total']*100:.1f}%;"
+                f"over_newton="
+                f"{t['espim_over_newton_sparse_only']*100:.1f}%"),
+        csv_row("table4/espim_flexible", 0.0,
+                f"area_over_dram={t['espim_flexible']['total']*100:.1f}%;"
+                f"over_newton={t['espim_over_newton_flexible']*100:.1f}%"),
+    ]
+    for comp, v in t["espim_sparse_only"].items():
+        if comp != "total":
+            rows.append(csv_row(f"table4/components/{comp}", 0.0,
+                                f"area={v*100:.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

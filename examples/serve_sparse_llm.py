@@ -1,0 +1,50 @@
+"""The paper's deployment scenario: serve an LM whose projections were
+magnitude-pruned and packed into the ESPIM format, with batched continuous
+decoding, and compare the sparse projections' outputs against the
+dense-pruned reference.
+
+Run:  PYTHONPATH=src python examples/serve_sparse_llm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.espim_linear import ESPIMLinear
+from repro.core.pruning import magnitude_prune
+from repro.models import factory
+from repro.serve.engine import Request, ServeEngine
+
+SPARSITY = 0.9
+
+cfg = get_config("llama7b-espim", reduced=True)
+params = factory.init_params(cfg, jax.random.PRNGKey(0))
+
+# --- flexible dense/sparse projections (Section III-I) ---------------------
+# Pack every attention projection of layer 0 through ESPIMLinear and verify
+# against the dense-pruned reference.
+print(f"packing layer-0 projections at {SPARSITY:.0%} sparsity:")
+rng = np.random.default_rng(0)
+for name in ("wq", "wk", "wv", "wo"):
+    w = np.asarray(params["layers"]["attn"][name][0], np.float32).T
+    lin = ESPIMLinear.from_dense(w, prune_sparsity=SPARSITY)
+    x = rng.standard_normal(w.shape[1]).astype(np.float32)
+    y = np.asarray(lin(jnp.asarray(x), impl="ref"))
+    ref = magnitude_prune(w, SPARSITY) @ x
+    print(f"  {name}: sparse path={lin.sparse}, "
+          f"max err vs dense-pruned = {np.abs(y - ref).max():.2e}")
+
+# --- batched serving --------------------------------------------------------
+eng = ServeEngine(cfg, params, batch_slots=4, max_len=96)
+prompts = [[1, 5, 9], [2, 4], [7, 7, 7, 7], [3], [8, 1], [6, 2, 4]]
+for rid, p in enumerate(prompts):
+    eng.submit(Request(rid=rid, prompt=p, max_new_tokens=12))
+t0 = time.time()
+stats = eng.run()
+dt = time.time() - t0
+print(f"\nserved {stats.requests_completed} requests / "
+      f"{stats.tokens_generated} tokens in {dt:.1f}s "
+      f"({stats.tokens_generated / dt:.1f} tok/s on CPU, "
+      f"{stats.steps} engine steps, continuous batching over 4 slots)")

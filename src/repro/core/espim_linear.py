@@ -1,0 +1,140 @@
+"""ESPIMLinear — the paper's flexible dense/sparse datapath (Section III-I)
+as a first-class JAX projection layer, plus the cluster-level "bank"
+distribution of the sparse MV.
+
+Flexible configuration: a projection holds either a dense weight (Newton's
+16-MAC path) or an ESPIM ELL pack (11-MAC + FIFOs + switch path).  The
+choice is made offline from the measured weight sparsity, exactly as the
+paper power-gates one datapath or the other; the output contract is
+identical either way.
+
+Distribution: the paper's banks consume a shared vector broadcast in
+lockstep while holding disjoint matrix rows.  One hierarchy level up, the
+same structure is ``shard_map`` over the ``model`` mesh axis: each device
+holds a disjoint packed row range (equal-sized: SDDS balancing already
+equalized work), the dense ``x`` is replicated (the ICI broadcast), and each
+device runs the ESPIM kernel over its rows.  The final unscatter is a pure
+output-layout permutation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.pruning import magnitude_prune
+from repro.core.sparse_format import ELLPack, pack_ell, shard_ell
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+__all__ = ["ESPIMLinear", "espim_matvec_sharded", "make_sharded_weights"]
+
+
+@dataclasses.dataclass
+class ESPIMLinear:
+    """Projection y = W @ x (+ b), W of shape (n_out, n_in).
+
+    ``sparse`` selects the datapath.  ``from_dense`` measures sparsity and
+    picks it (optionally pruning first), mirroring Section III-I.
+    """
+
+    n_out: int
+    n_in: int
+    sparse: bool
+    weights: object  # EspimWeights if sparse else jnp dense (n_out, n_in)
+    bias: jnp.ndarray | None = None
+    density: float = 1.0
+
+    @classmethod
+    def from_dense(
+        cls,
+        w: np.ndarray,
+        bias: np.ndarray | None = None,
+        *,
+        prune_sparsity: float | None = None,
+        sparse_threshold: float = 0.5,
+        row_tile: int = 128,
+        dtype=jnp.float32,
+    ) -> "ESPIMLinear":
+        w = np.asarray(w)
+        if prune_sparsity is not None:
+            w = magnitude_prune(w, prune_sparsity)
+        density = float((w != 0).mean())
+        sparse = density < sparse_threshold
+        if sparse:
+            pack = pack_ell(w, row_tile=row_tile)
+            weights = ops.pack_to_device(pack, dtype=dtype)
+        else:
+            weights = jnp.asarray(w, dtype=dtype)
+        b = None if bias is None else jnp.asarray(bias, dtype=jnp.float32)
+        return cls(w.shape[0], w.shape[1], sparse, weights, b, density)
+
+    def __call__(self, x: jnp.ndarray, *, impl: str | None = None) -> jnp.ndarray:
+        """x: (n_in,) or (..., n_in) -> (n_out,) or (..., n_out)."""
+        squeeze = x.ndim == 1
+        xb = x.reshape(-1, self.n_in) if not squeeze else x[None, :]
+        if self.sparse:
+            y = ops.espim_matvec(self.weights, xb.T, impl=impl).T
+        else:
+            y = xb.astype(jnp.float32) @ self.weights.astype(jnp.float32).T
+        if self.bias is not None:
+            y = y + self.bias
+        y = y.reshape(x.shape[:-1] + (self.n_out,)) if not squeeze else y[0]
+        return y
+
+
+# --------------------------------------------------------------------------
+# Distributed sparse MV (devices as banks)
+# --------------------------------------------------------------------------
+def make_sharded_weights(
+    w: np.ndarray,
+    n_shards: int,
+    *,
+    prune_sparsity: float | None = None,
+    row_tile: int = 128,
+) -> dict:
+    """Offline: prune + pack + re-layout for shard_map over ``model``."""
+    w = np.asarray(w)
+    if prune_sparsity is not None:
+        w = magnitude_prune(w, prune_sparsity)
+    pack = pack_ell(w, row_tile=row_tile)
+    return shard_ell(pack, n_shards)
+
+
+def espim_matvec_sharded(
+    sharded: dict,
+    x: jnp.ndarray,
+    mesh,
+    axis: str = "model",
+    *,
+    impl: str | None = "ref",
+) -> jnp.ndarray:
+    """y (n_rows,) = W @ x with W's packed rows sharded over ``axis``.
+
+    x is replicated (the broadcast); each device computes its packed rows;
+    the unscatter runs sharded as well (each device owns a disjoint output
+    slice of the packed order; the permutation to original row order is an
+    all-to-all the compiler lays out).
+    """
+    values = jnp.asarray(sharded["values"])   # (S, per, L)
+    cols = jnp.asarray(sharded["cols"])       # (S, per, L)
+    perm = jnp.asarray(sharded["perm"])       # (S, per)
+    n_rows = sharded["n_rows"]
+
+    def bank(values_s, cols_s, x_rep):
+        # one "bank": local packed rows x replicated vector
+        yp = ops.espim_spmv(values_s[0], cols_s[0], x_rep, impl=impl)
+        return yp[None]
+
+    yp = jax.shard_map(
+        bank,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P()),
+        out_specs=P(axis),
+        check_vma=False,
+    )(values, cols, x)
+    return kref.scatter_rows_ref(yp.reshape(-1), perm.reshape(-1), n_rows)

@@ -1,0 +1,454 @@
+"""Static Data-Dependent Scheduling (SDDS) — faithful to Sections III-D/E/F/G.
+
+SDDS is the paper's central mechanism: because the sparsity pattern is static
+and known at training time, the *entire cycle-level command stream* of the
+sparse MV (which slots broadcast a new vector slice ``COMP-BR``, which stall
+and re-use the latched slice ``COMP-NoBR``, where index-only prefetch reads
+``LOAD-IDX`` go, and where dummy/invalid cells pad the compressed matrix) is
+derived **once, offline**, by simulating the machine.  The host then replays
+the stream; the DRAM-side datapath stays headless.
+
+This module implements that offline construction as two slot-stepped
+machines, selected by ``ESPIMConfig.prefetch``:
+
+* machine A (Section III-D, no decoupling): each compute slot consumes at
+  most one cell per MAC and only if the cell's column falls in the currently
+  latched vector slice; otherwise the compressed matrix gets an invalid cell.
+* machine B (Sections III-E/F, full ESPIM): per-MAC iFIFO (prefetched
+  indices) and eFIFO (extracted vector elements) decouple the column-reads
+  from the broadcasts; the 4x11 simplified switch constrains extraction to
+  ascending index-range chains within each t_CCD window; SDDS's reorder pass
+  permutes same-slice cells into ascending-range chains to dodge conflicts.
+
+Load balance (Section III-G): SparTen's greedy scheme assigns rows to banks
+round-robin by density, then co-locates the densest and the sparsest row *on
+the same MAC* — their cells intermingled in increasing column order with a
+per-cell ``select`` bit steering accumulation into one of two output buffers.
+That is why ``rows_per_mac = 2``: each MAC's stream is the column-merged pair,
+and the pair's combined nnz is what the greedy sort equalizes.
+
+The broadcast-advance rule is global across banks (the banks run in lockstep
+off one broadcast bus): the next slice is broadcast only when no bank has a
+pending cell (in an iFIFO or still unread in its stream) matching the current
+slice — the paper's "current slice consumed fully across all the banks".
+Per-MAC column order is non-decreasing in slice (reorder only permutes within
+a slice), which makes this rule sufficient for correctness; ``verify=True``
+executes the dataflow and checks it against a numpy dot product.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.core.pruning import sparten_balance
+
+__all__ = ["ESPIMConfig", "Schedule", "build_bank_streams", "schedule_matrix"]
+
+
+# --------------------------------------------------------------------------
+# Configuration (Table I commands, Table II DRAM parameters)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ESPIMConfig:
+    n_banks: int = 16
+    macs_per_bank: int = 11          # k: sparse cells per 256-bit column read
+    dense_macs_per_bank: int = 16    # Newton / flexible-dense path
+    slice_elems: int = 16            # vector slice per broadcast (256 bits)
+    fifo_depth: int = 8              # iFIFO and eFIFO entries per MAC
+    tccd: int = 4                    # DRAM cycles between column reads
+    switch_ranges: int = 4           # simplified switch: 4 ranges x 4 elems
+    cols_per_dram_row: int = 32      # 8K bits / 256-bit column I/O
+    vector_row_elems: int = 512      # 1KB DRAM row / 2B element
+    idx_per_mac_idxread: int = 3     # ~23 spare bits/MAC in an idx-only read
+    decouple_dist: int = 6           # prefetch depth targeted at stripe start
+    rows_per_mac: int = 2            # select bit + 2 output buffers (III-G)
+    # DRAM timing (Table II, DRAM cycles)
+    t_rcd: int = 10
+    t_rp: int = 10
+    t_ras: int = 24
+    t_rtp: int = 5
+    # feature toggles (Figure 11 ablation)
+    prefetch: bool = True
+    reorder: bool = True
+    balance: bool = True
+    full_switch: bool = False        # brute-force 16x11 switch
+
+    @property
+    def range_width(self) -> int:
+        return self.slice_elems // self.switch_ranges
+
+    @property
+    def slices_per_vector_row(self) -> int:
+        return self.vector_row_elems // self.slice_elems
+
+    def replace(self, **kw) -> "ESPIMConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# --------------------------------------------------------------------------
+# Schedule result
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Schedule:
+    """Counters of the statically derived command stream (Table I)."""
+
+    comp_br: int = 0        # compute + broadcast slots
+    comp_nobr: int = 0      # compute + stalled-broadcast slots
+    load_idx: int = 0       # index-only prefetch column reads
+    all_act: int = 0        # all-bank activations
+    rdres_elems: int = 0    # result elements read out to host
+    load_gb_bytes: int = 0  # vector bytes loaded into the global buffer
+    mac_ops: int = 0        # real multiply-accumulates executed
+    dummy_cells: int = 0    # invalid/placeholder cells in the compressed matrix
+    ififo_pushes: int = 0
+    efifo_pushes: int = 0
+    nnz: int = 0
+    n_stripes: int = 0
+    vector_rows: int = 0
+
+    @property
+    def compute_slots(self) -> int:
+        return self.comp_br + self.comp_nobr
+
+    @property
+    def column_reads(self) -> int:
+        return self.compute_slots + self.load_idx
+
+    @property
+    def broadcasts(self) -> int:
+        return self.comp_br
+
+    @property
+    def stalls(self) -> int:
+        return self.comp_nobr
+
+    def merge(self, other: "Schedule") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+
+
+# --------------------------------------------------------------------------
+# Bank stream construction (load balance + fine-grained interleaving order)
+# --------------------------------------------------------------------------
+def build_bank_streams(pattern: np.ndarray, cfg: ESPIMConfig) -> list[list[int]]:
+    """Assign matrix rows to banks; returns per-bank row-id lists in
+    processing order.  With ``cfg.balance``, SparTen's greedy balance
+    (Section III-G); otherwise round-robin original order."""
+    pattern = np.asarray(pattern)
+    n_rows = pattern.shape[0]
+    nnz_per_row = (pattern != 0).sum(axis=1)
+    if cfg.balance:
+        assign = sparten_balance(nnz_per_row, cfg.n_banks)
+        return [list(r) for r in assign.bank_rows]
+    return [list(range(b, n_rows, cfg.n_banks)) for b in range(cfg.n_banks)]
+
+
+def _reorder_in_slice(cols: np.ndarray, tags: np.ndarray, cfg: ESPIMConfig):
+    """SDDS's switch-conflict-avoiding reorder (Section III-F).
+
+    Within each vector slice, permute a MAC's cells into ascending-range
+    chains: deal one index per range per pass (ranges in ascending order) so
+    consecutive cells land in different mux ranges and extract in one t_CCD
+    window instead of forcing head-of-line stalls.  Slice order is preserved
+    (the broadcast-advance rule relies on per-MAC slice monotonicity).
+    """
+    if cols.size <= 1:
+        return cols, tags
+    out_c = np.empty_like(cols)
+    out_t = np.empty_like(tags)
+    slice_ids = cols // cfg.slice_elems
+    pos = 0
+    start = 0
+    for end in range(1, cols.size + 1):
+        if end == cols.size or slice_ids[end] != slice_ids[start]:
+            n = end - start
+            if n > 1:
+                rel = cols[start:end] % cfg.slice_elems
+                rng = rel // cfg.range_width
+                buckets: list[deque] = [deque() for _ in range(cfg.switch_ranges)]
+                for i in range(start, end):
+                    buckets[int(rng[i - start])].append(i)
+                emitted = []
+                while len(emitted) < n:
+                    for b in buckets:
+                        if b:
+                            emitted.append(b.popleft())
+                out_c[pos : pos + n] = cols[emitted]
+                out_t[pos : pos + n] = tags[emitted]
+            else:
+                out_c[pos : pos + n] = cols[start:end]
+                out_t[pos : pos + n] = tags[start:end]
+            pos += n
+            start = end
+    return out_c, out_t
+
+
+# --------------------------------------------------------------------------
+# Slot machines
+# --------------------------------------------------------------------------
+class _MacState:
+    """Per-(bank, MAC) stream + FIFO state for one (vector-row, stripe).
+
+    ``cols`` is the column-merged stream of this MAC's ``rows_per_mac`` rows
+    (relative to the vector-row base); ``tags`` is the per-cell select bit;
+    ``rows`` maps tag -> original matrix row id (or None).
+    """
+
+    __slots__ = ("cols", "tags", "rows", "slices", "ranges", "ip", "vp",
+                 "ififo", "efifo")
+
+    def __init__(self, cols: np.ndarray, tags: np.ndarray, rows, cfg: ESPIMConfig):
+        self.cols = cols
+        self.tags = tags
+        self.rows = rows
+        self.slices = cols // cfg.slice_elems
+        self.ranges = (cols % cfg.slice_elems) // cfg.range_width
+        self.ip = 0  # next index to load into the iFIFO
+        self.vp = 0  # next value to multiply (paired with eFIFO head)
+        self.ififo: deque = deque()
+        self.efifo: deque = deque()
+
+    @property
+    def n(self) -> int:
+        return len(self.cols)
+
+    def done(self) -> bool:
+        return self.vp >= self.n
+
+
+class _ExecCtx:
+    """Optional dataflow execution for verify mode."""
+
+    __slots__ = ("x_row", "values", "lo", "acc")
+
+    def __init__(self, x_row, values, lo, n_macs, rows_per_mac):
+        self.x_row = x_row
+        self.values = values
+        self.lo = lo
+        self.acc = np.zeros((n_macs, rows_per_mac), dtype=np.float64)
+
+    def fire(self, mi: int, m: _MacState) -> None:
+        c = m.cols[m.vp]
+        t = m.tags[m.vp]
+        row = m.rows[t]
+        self.acc[mi, t] += self.values[row, self.lo + c] * self.x_row[c]
+
+
+def _machine_prefetch(
+    macs: list[_MacState], cfg: ESPIMConfig, sched: Schedule, ctx: _ExecCtx | None
+) -> None:
+    """Machine B: full ESPIM with decoupled prefetch + simplified switch."""
+    n_slices = cfg.slices_per_vector_row
+    total = sum(m.n for m in macs)
+    if total == 0:
+        return
+    # --- prologue LOAD-IDX reads establish the decoupling distance -------
+    need = -(-min(cfg.decouple_dist, cfg.fifo_depth)
+             // max(1, cfg.idx_per_mac_idxread))
+    for _ in range(max(0, need)):
+        pushed_any = False
+        for m in macs:
+            for _ in range(cfg.idx_per_mac_idxread):
+                if m.ip < m.n and len(m.ififo) < cfg.fifo_depth:
+                    m.ififo.append(m.ip)
+                    m.ip += 1
+                    sched.ififo_pushes += 1
+                    pushed_any = True
+        if pushed_any:
+            sched.load_idx += 1
+
+    cur = -1  # latched slice id; first COMP-BR latches slice 0
+    guard, max_slots = 0, 64 * (total + n_slices * len(macs) + 64)
+    while not all(m.done() for m in macs):
+        guard += 1
+        if guard > max_slots:  # pragma: no cover - safety net
+            raise RuntimeError("SDDS prefetch machine failed to converge (bug)")
+        # ---- broadcast-advance decision (global across banks) -----------
+        blocked = False
+        for m in macs:
+            if m.ififo:
+                if m.slices[m.ififo[0]] <= cur:
+                    blocked = True
+                    break
+            elif m.ip < m.n:
+                # empty iFIFO with unread indices: conservative stall
+                # (Section III-E case 1) once something is latched.
+                if cur >= 0 and m.slices[m.ip] <= cur:
+                    blocked = True
+                    break
+        if blocked or cur + 1 >= n_slices:
+            sched.comp_nobr += 1
+        else:
+            sched.comp_br += 1
+            cur += 1
+        # ---- compute: column-read values x eFIFO heads -------------------
+        for mi, m in enumerate(macs):
+            if m.vp < m.n and m.efifo:
+                m.efifo.popleft()
+                if ctx is not None:
+                    ctx.fire(mi, m)
+                m.vp += 1
+                sched.mac_ops += 1
+            else:
+                sched.dummy_cells += 1
+        # ---- index side of the normal column read ------------------------
+        for m in macs:
+            if m.ip < m.n:
+                if len(m.ififo) < cfg.fifo_depth:
+                    m.ififo.append(m.ip)
+                    m.ip += 1
+                    sched.ififo_pushes += 1
+                else:
+                    sched.dummy_cells += 1  # placeholder, dropped at the bank
+        # ---- switch: extract matching elements into eFIFOs ---------------
+        if cur >= 0:
+            for m in macs:
+                last_range, pulled = -1, 0
+                while (
+                    m.ififo
+                    and m.slices[m.ififo[0]] == cur
+                    and len(m.efifo) < cfg.fifo_depth
+                ):
+                    head = m.ififo[0]
+                    if cfg.full_switch:
+                        if pulled >= cfg.tccd:
+                            break
+                    else:
+                        r = m.ranges[head]
+                        if r <= last_range:
+                            break
+                        last_range = r
+                    m.ififo.popleft()
+                    m.efifo.append(head)
+                    pulled += 1
+                    sched.efifo_pushes += 1
+
+
+def _machine_basic(
+    macs: list[_MacState], cfg: ESPIMConfig, sched: Schedule, ctx: _ExecCtx | None
+) -> None:
+    """Machine A (Section III-D): no decoupling; one cell per MAC per slot,
+    and only when it matches the latched slice."""
+    n_slices = cfg.slices_per_vector_row
+    if sum(m.n for m in macs) == 0:
+        return
+    cur = -1
+    guard, max_slots = 0, 64 * (sum(m.n for m in macs) + n_slices * len(macs) + 64)
+    while not all(m.done() for m in macs):
+        guard += 1
+        if guard > max_slots:  # pragma: no cover
+            raise RuntimeError("SDDS basic machine failed to converge (bug)")
+        blocked = any(
+            (not m.done()) and cur >= 0 and m.slices[m.vp] <= cur for m in macs
+        )
+        if blocked or cur + 1 >= n_slices:
+            sched.comp_nobr += 1
+        else:
+            sched.comp_br += 1
+            cur += 1
+        for mi, m in enumerate(macs):
+            if not m.done() and m.slices[m.vp] == cur:
+                if ctx is not None:
+                    ctx.fire(mi, m)
+                m.vp += 1
+                sched.mac_ops += 1
+            else:
+                sched.dummy_cells += 1
+
+
+# --------------------------------------------------------------------------
+# Whole-matrix scheduling
+# --------------------------------------------------------------------------
+def schedule_matrix(
+    pattern: np.ndarray,
+    cfg: ESPIMConfig = ESPIMConfig(),
+    values: np.ndarray | None = None,
+    x: np.ndarray | None = None,
+    verify: bool = False,
+) -> tuple[Schedule, np.ndarray | None]:
+    """Run SDDS over a full matrix.
+
+    ``pattern`` is the (R, C) sparse weight matrix (or boolean pattern).
+    With ``verify=True`` the machines also execute the dataflow — each MAC
+    accumulates value*element exactly when the schedule fires it, through
+    the select-bit output buffers — and the resulting ``y`` is returned for
+    comparison against ``values @ x``.
+
+    Returns ``(Schedule, y_or_None)``.
+    """
+    pattern = np.asarray(pattern)
+    n_rows, n_cols = pattern.shape
+    if verify:
+        if values is None:
+            values = pattern.astype(np.float64)
+        if x is None:
+            rng = np.random.default_rng(0)
+            x = rng.standard_normal(n_cols)
+        values = np.asarray(values, dtype=np.float64)
+        x = np.asarray(x, dtype=np.float64)
+
+    bank_rows = build_bank_streams(pattern, cfg)
+    cols_by_row = [np.nonzero(pattern[r])[0].astype(np.int64)
+                   for r in range(n_rows)]
+
+    k = cfg.macs_per_bank
+    rpm = cfg.rows_per_mac
+    rows_per_stripe = k * rpm
+    n_stripes = max(
+        (-(-len(rows) // rows_per_stripe) for rows in bank_rows if rows),
+        default=0,
+    )
+    n_vr = max(1, -(-n_cols // cfg.vector_row_elems))
+    sched = Schedule(nnz=int((pattern != 0).sum()), n_stripes=n_stripes,
+                     vector_rows=n_vr)
+    y = np.zeros(n_rows, dtype=np.float64) if verify else None
+    machine = _machine_prefetch if cfg.prefetch else _machine_basic
+
+    for vr in range(n_vr):
+        lo = vr * cfg.vector_row_elems
+        hi = min(n_cols, lo + cfg.vector_row_elems)
+        sched.load_gb_bytes += (hi - lo) * 2
+        x_row = x[lo:hi] if verify else None
+        for s in range(n_stripes):
+            slots_before = sched.column_reads
+            macs: list[_MacState] = []
+            for b in range(cfg.n_banks):
+                window = bank_rows[b][s * rows_per_stripe : (s + 1) * rows_per_stripe]
+                for j in range(k):
+                    pair = window[j * rpm : (j + 1) * rpm]
+                    segs, tags = [], []
+                    rows_of_mac: list = [None] * rpm
+                    for t, r in enumerate(pair):
+                        rows_of_mac[t] = r
+                        c = cols_by_row[r]
+                        seg = c[(c >= lo) & (c < hi)] - lo
+                        segs.append(seg)
+                        tags.append(np.full(seg.size, t, dtype=np.int8))
+                    if segs:
+                        cat = np.concatenate(segs)
+                        tag = np.concatenate(tags)
+                        order = np.argsort(cat, kind="stable")
+                        cat, tag = cat[order], tag[order]
+                    else:
+                        cat = np.empty(0, np.int64)
+                        tag = np.empty(0, np.int8)
+                    if cfg.reorder and cfg.prefetch:
+                        cat, tag = _reorder_in_slice(cat, tag, cfg)
+                    macs.append(_MacState(cat, tag, rows_of_mac, cfg))
+            ctx = (
+                _ExecCtx(x_row, values, lo, len(macs), rpm) if verify else None
+            )
+            machine(macs, cfg, sched, ctx)
+            if verify:
+                for mi, m in enumerate(macs):
+                    for t, r in enumerate(m.rows):
+                        if r is not None:
+                            y[r] += ctx.acc[mi, t]
+            slots = sched.column_reads - slots_before
+            sched.all_act += -(-max(slots, 1) // cfg.cols_per_dram_row)
+            sched.rdres_elems += sum(
+                1 for m in macs for r in m.rows if r is not None
+            )
+    return sched, y

@@ -1,0 +1,213 @@
+"""ESPIM packed sparse formats — the TPU adaptation of Section III-B/C.
+
+The paper packs k=11 consecutive sparse rows per DRAM row (fine-grained
+interleaving) so one 16-element vector-slice broadcast is reused by all k
+rows, and lets SDDS pad the compressed matrix with invalid cells where the
+schedule stalls.  On TPU the equivalent packing is a *row-tile ELL* layout:
+
+  values[R_pad, L], cols[R_pad, L]   (L = padded nnz per row)
+
+where a row-tile of 128 rows (lane width) shares the VMEM residency of the
+dense activation vector ``x`` — the broadcast analogue — and the ELL padding
+slots are the static stalls.  SparTen balancing (``row_tile_balance``)
+permutes rows so every tile's max nnz, and therefore L, is near the mean:
+this is the load-balance contribution doing exactly its original job of
+minimizing dead slots.
+
+All packing is offline host-side numpy (it is part of SDDS compilation);
+kernels consume the arrays as jnp inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.pruning import row_tile_balance
+
+__all__ = ["PackStats", "ELLPack", "pack_ell", "ell_to_dense", "shard_ell"]
+
+LANE = 128  # TPU lane width: the adaptation of the paper's 16-elt slice
+
+
+@dataclasses.dataclass(frozen=True)
+class PackStats:
+    n_rows: int
+    n_cols: int
+    nnz: int
+    ell_width: int          # L
+    padded_slots: int       # R_pad * L
+    padding_frac: float     # 1 - nnz / padded_slots  (the "stall" fraction)
+    density: float
+    tile_widths: tuple      # per-tile max nnz before global padding
+
+    def __str__(self) -> str:  # pragma: no cover - debug aid
+        return (
+            f"PackStats({self.n_rows}x{self.n_cols}, nnz={self.nnz}, "
+            f"L={self.ell_width}, pad={self.padding_frac:.3f})"
+        )
+
+
+@dataclasses.dataclass
+class ELLPack:
+    """Row-tile ELL pack of a sparse matrix W (n_rows x n_cols).
+
+    Rows are permuted by ``perm`` (packed position -> original row id;
+    -1 marks pad rows added to round up to the row tile).  ``cols`` is
+    column-ascending per row (the paper's slice order); pad slots have
+    ``valid == False``, ``values == 0``, ``cols == 0``.
+    """
+
+    values: np.ndarray  # (R_pad, L) float32
+    cols: np.ndarray    # (R_pad, L) int32
+    valid: np.ndarray   # (R_pad, L) bool
+    perm: np.ndarray    # (R_pad,) int64
+    n_rows: int
+    n_cols: int
+    row_tile: int
+    stats: PackStats
+
+    @property
+    def r_pad(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def ell_width(self) -> int:
+        return self.values.shape[1]
+
+    def scatter_rows(self, y_packed: np.ndarray) -> np.ndarray:
+        """Map packed-row outputs back to original row order."""
+        out_shape = (self.n_rows,) + tuple(y_packed.shape[1:])
+        y = np.zeros(out_shape, dtype=y_packed.dtype)
+        keep = self.perm >= 0
+        y[self.perm[keep]] = y_packed[keep]
+        return y
+
+    def gather_perm(self) -> np.ndarray:
+        """Inverse permutation: original row id -> packed position."""
+        inv = np.full(self.n_rows, -1, dtype=np.int64)
+        keep = self.perm >= 0
+        inv[self.perm[keep]] = np.nonzero(keep)[0]
+        return inv
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pack_ell(
+    w: np.ndarray,
+    row_tile: int = LANE,
+    balance: bool = True,
+    width_multiple: int = 8,
+) -> ELLPack:
+    """Pack a (possibly sparse) dense-storage matrix into row-tile ELL.
+
+    ``width_multiple`` rounds L up for sublane-aligned VMEM tiles (the
+    analogue of the paper's column-granular reads).
+    """
+    w = np.asarray(w)
+    if w.ndim != 2:
+        raise ValueError(f"expected 2-D matrix, got shape {w.shape}")
+    n_rows, n_cols = w.shape
+    nnz_per_row = (w != 0).sum(axis=1)
+    nnz = int(nnz_per_row.sum())
+
+    if balance and n_rows > 1:
+        perm_rows = row_tile_balance(nnz_per_row, row_tile)
+    else:
+        perm_rows = np.arange(n_rows, dtype=np.int64)
+
+    r_pad = _round_up(max(n_rows, 1), row_tile)
+    perm = np.full(r_pad, -1, dtype=np.int64)
+    perm[:n_rows] = perm_rows
+
+    ell_w = int(nnz_per_row.max()) if n_rows else 0
+    ell_w = max(width_multiple, _round_up(max(ell_w, 1), width_multiple))
+
+    values = np.zeros((r_pad, ell_w), dtype=np.float32)
+    cols = np.zeros((r_pad, ell_w), dtype=np.int32)
+    valid = np.zeros((r_pad, ell_w), dtype=bool)
+
+    tile_widths = []
+    for t in range(0, r_pad, row_tile):
+        tile_max = 0
+        for i in range(t, min(t + row_tile, r_pad)):
+            src = perm[i]
+            if src < 0:
+                continue
+            (nz,) = np.nonzero(w[src])
+            tile_max = max(tile_max, nz.size)
+            values[i, : nz.size] = w[src, nz]
+            cols[i, : nz.size] = nz
+            valid[i, : nz.size] = True
+        tile_widths.append(tile_max)
+
+    padded = r_pad * ell_w
+    stats = PackStats(
+        n_rows=n_rows,
+        n_cols=n_cols,
+        nnz=nnz,
+        ell_width=ell_w,
+        padded_slots=padded,
+        padding_frac=1.0 - (nnz / padded if padded else 0.0),
+        density=nnz / max(1, n_rows * n_cols),
+        tile_widths=tuple(tile_widths),
+    )
+    return ELLPack(
+        values=values,
+        cols=cols,
+        valid=valid,
+        perm=perm,
+        n_rows=n_rows,
+        n_cols=n_cols,
+        row_tile=row_tile,
+        stats=stats,
+    )
+
+
+def ell_to_dense(pack: ELLPack) -> np.ndarray:
+    """Inverse of ``pack_ell`` (property-test oracle)."""
+    w = np.zeros((pack.n_rows, pack.n_cols), dtype=pack.values.dtype)
+    for i in range(pack.r_pad):
+        src = pack.perm[i]
+        if src < 0:
+            continue
+        sel = pack.valid[i]
+        w[src, pack.cols[i, sel]] = pack.values[i, sel]
+    return w
+
+
+def shard_ell(pack: ELLPack, n_shards: int) -> dict:
+    """Re-layout an ELLPack for ``shard_map`` over the ``model`` axis.
+
+    Devices are the cluster-level "banks": each holds a contiguous packed
+    row range; the dense x is replicated (the ICI broadcast).  Returns
+    stacked arrays with a leading shard dim and a uniform per-shard width
+    (the global L — banks operate in lockstep, exactly as in the paper).
+    """
+    r_pad = pack.r_pad
+    if r_pad % n_shards != 0:
+        # pad packed rows up to a multiple of n_shards * row_tile
+        new_rpad = _round_up(r_pad, n_shards * pack.row_tile)
+        pad = new_rpad - r_pad
+        pack = ELLPack(
+            values=np.pad(pack.values, ((0, pad), (0, 0))),
+            cols=np.pad(pack.cols, ((0, pad), (0, 0))),
+            valid=np.pad(pack.valid, ((0, pad), (0, 0))),
+            perm=np.pad(pack.perm, (0, pad), constant_values=-1),
+            n_rows=pack.n_rows,
+            n_cols=pack.n_cols,
+            row_tile=pack.row_tile,
+            stats=pack.stats,
+        )
+        r_pad = new_rpad
+    per = r_pad // n_shards
+    return {
+        "values": pack.values.reshape(n_shards, per, pack.ell_width),
+        "cols": pack.cols.reshape(n_shards, per, pack.ell_width),
+        "perm": pack.perm.reshape(n_shards, per),
+        "n_rows": pack.n_rows,
+        "n_cols": pack.n_cols,
+        "pack": pack,
+    }

@@ -1,0 +1,61 @@
+"""Deterministic synthetic token pipeline with exact-resume semantics.
+
+Batches are a pure function of (seed, step): resuming from a checkpoint
+needs only the step counter — no iterator state to lose on preemption, and
+every data-parallel host computes exactly its own shard (host sharding by
+slicing the global batch).  This is the property a production loader must
+provide (tf.data checkpointing / grain index); here it holds by
+construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+__all__ = ["PipelineConfig", "SyntheticPipeline"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    seed: int = 0
+    vocab_size: int = 32000
+    seq_len: int = 1024
+    global_batch: int = 8
+
+
+class SyntheticPipeline:
+    """Zipf-ish synthetic LM stream; labels are next-token shifted."""
+
+    def __init__(self, cfg: PipelineConfig):
+        self.cfg = cfg
+
+    @classmethod
+    def for_model(cls, mcfg: ModelConfig, shape: ShapeConfig, seed: int = 0):
+        return cls(PipelineConfig(seed=seed, vocab_size=mcfg.vocab_size,
+                                  seq_len=shape.seq_len,
+                                  global_batch=shape.global_batch))
+
+    def batch_at(self, step: int) -> dict:
+        c = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(c.seed), step)
+        # heavier-tailed than uniform: square a uniform draw
+        u = jax.random.uniform(key, (c.global_batch, c.seq_len + 1))
+        tokens = (jnp.square(u) * c.vocab_size).astype(jnp.int32)
+        tokens = jnp.clip(tokens, 0, c.vocab_size - 1)
+        return {
+            "tokens": tokens[:, :-1],
+            "labels": tokens[:, 1:],
+        }
+
+    # --- exact-resume state ------------------------------------------------
+    def state(self, step: int) -> dict:
+        return {"seed": self.cfg.seed, "step": int(step)}
+
+    @classmethod
+    def restore(cls, mcfg: ModelConfig, shape: ShapeConfig, state: dict):
+        pipe = cls.for_model(mcfg, shape, seed=state["seed"])
+        return pipe, state["step"]

@@ -1,0 +1,64 @@
+"""Dense tiled MV Pallas kernel — the Newton-datapath analogue.
+
+Used as (a) the dense half of the flexible dense/sparse configuration
+(Section III-I) and (b) the baseline the sparse kernel is compared against
+in the benchmarks.  MXU-aligned (128-multiple) tiles; accumulation across
+the C-chunk grid dimension in f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dense_mv_pallas"]
+
+
+def _dense_mv_kernel(w_ref, x_ref, out_ref):
+    j = pl.program_id(1)
+    w = w_ref[...].astype(jnp.float32)        # (RT, CT)
+    x = x_ref[...].astype(jnp.float32)        # (CT,)
+    partial = jnp.dot(w, x)                   # (RT,) on the MXU
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c", "interpret"))
+def dense_mv_pallas(
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    block_r: int = 128,
+    block_c: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y (R,) f32 = w (R, C) @ x (C,).  R, C padded to tile multiples."""
+    r, c = w.shape
+    pad_r = (-r) % block_r
+    block_c = min(block_c, c)
+    pad_c = (-c) % block_c
+    if pad_r or pad_c:
+        w = jnp.pad(w, ((0, pad_r), (0, pad_c)))
+        x = jnp.pad(x, (0, pad_c))
+    rp, cp = w.shape
+
+    out = pl.pallas_call(
+        _dense_mv_kernel,
+        grid=(rp // block_r, cp // block_c),
+        in_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_c,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_r,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rp,), jnp.float32),
+        interpret=interpret,
+    )(w, x)
+    return out[:r]

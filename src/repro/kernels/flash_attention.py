@@ -1,0 +1,116 @@
+"""Flash attention as a Pallas TPU kernel (prefill path).
+
+The roofline table (EXPERIMENTS.md) shows long-sequence prefill cells
+memory-dominated by f32 score materialization between the QK and PV
+matmuls of the chunked-JAX attention.  This kernel keeps the online-
+softmax state (m, l, acc) and the score tile in VMEM scratch across the
+KV grid dimension, so HBM sees only Q/K/V/O streams — the standard TPU
+remedy, validated here in interpret mode against the pure-JAX oracle.
+
+Layout: q/k/v as (BH, S, hd); grid (BH, n_q, n_kv) with kv innermost;
+out block revisited across kv steps; causal masking from program ids.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, scale: float, blk_q: int, blk_k: int,
+                  seq_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (blk_q, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (blk_k, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = q @ k.T                                       # (blk_q, blk_k)
+
+    q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (blk_q, blk_k), 0)
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (blk_q, blk_k), 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask = mask & (q_pos >= k_pos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "blk_q", "blk_k", "interpret"))
+def flash_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q/k/v: (BH, S, hd) -> out (BH, S, hd).  S padded to block size;
+    GQA repeat and (B, S, H, hd) reshapes live in the caller."""
+    bh, s, hd = q.shape
+    blk_q = min(blk_q, s)
+    blk_k = min(blk_k, s)
+    pad_q = (-s) % blk_q
+    pad_k = (-s) % blk_k
+    if pad_q or pad_k:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    sq, sk = q.shape[1], k.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, scale=scale, blk_q=blk_q,
+        blk_k=blk_k, seq_len=s)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, sq // blk_q, sk // blk_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :s]

@@ -1,0 +1,115 @@
+"""Public jit'd wrappers for the kernels package.
+
+Dispatch policy: Pallas kernels run natively on TPU and in ``interpret=True``
+mode elsewhere (this container is CPU-only; interpret mode executes the
+kernel body in Python for correctness validation).  ``impl="ref"`` forces
+the pure-jnp oracle — used by the tests and as the lowering path inside
+large jitted graphs where a Python-interpreted kernel would be wasteful.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse_format import ELLPack
+from repro.kernels import ref as _ref
+from repro.kernels.dense_mv import dense_mv_pallas
+from repro.kernels.espim_spmv import espim_spmv_batched_pallas, espim_spmv_pallas
+
+__all__ = [
+    "on_tpu",
+    "espim_spmv",
+    "espim_spmv_batched",
+    "dense_mv",
+    "espim_matvec",
+    "EspimWeights",
+    "pack_to_device",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str | None) -> str:
+    if impl is None:
+        return "pallas"
+    if impl not in ("pallas", "ref"):
+        raise ValueError(f"unknown impl {impl!r}")
+    return impl
+
+
+def espim_spmv(values, cols, x, *, impl: str | None = None) -> jnp.ndarray:
+    """ELL sparse MV: (R_pad, L) x (M,) -> (R_pad,) f32."""
+    if _resolve(impl) == "ref":
+        return _ref.espim_spmv_ref(values, cols, x)
+    return espim_spmv_pallas(values, cols, x, interpret=not on_tpu())
+
+
+def espim_spmv_batched(values, cols, x, *, impl: str | None = None) -> jnp.ndarray:
+    """Batched ELL sparse MV: (R_pad, L) x (M, B) -> (R_pad, B) f32."""
+    if _resolve(impl) == "ref":
+        return _ref.espim_spmv_batched_ref(values, cols, x)
+    return espim_spmv_batched_pallas(values, cols, x, interpret=not on_tpu())
+
+
+def dense_mv(w, x, *, impl: str | None = None) -> jnp.ndarray:
+    """Dense MV (Newton-analogue path)."""
+    if _resolve(impl) == "ref":
+        return _ref.dense_mv_ref(w, x)
+    return dense_mv_pallas(w, x, interpret=not on_tpu())
+
+
+# --------------------------------------------------------------------------
+# High-level packed-weights API
+# --------------------------------------------------------------------------
+class EspimWeights:
+    """Device-resident ESPIM pack of one weight matrix (W @ x semantics,
+    W of shape (n_out, n_in))."""
+
+    def __init__(self, values, cols, perm, n_rows: int, n_cols: int):
+        self.values = values          # (R_pad, L)
+        self.cols = cols              # (R_pad, L) int32
+        self.perm = perm              # (R_pad,) int32, -1 = pad row
+        self.n_rows = n_rows
+        self.n_cols = n_cols
+
+    def tree_flatten(self):
+        return (self.values, self.cols, self.perm), (self.n_rows, self.n_cols)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+jax.tree_util.register_pytree_node(
+    EspimWeights,
+    lambda w: w.tree_flatten(),
+    lambda aux, ch: EspimWeights.tree_unflatten(aux, ch),
+)
+
+
+def pack_to_device(pack: ELLPack, dtype=jnp.float32) -> EspimWeights:
+    """Move an offline ELLPack onto the device arrays the kernels consume."""
+    return EspimWeights(
+        values=jnp.asarray(pack.values, dtype=dtype),
+        cols=jnp.asarray(pack.cols, dtype=jnp.int32),
+        perm=jnp.asarray(np.asarray(pack.perm), dtype=jnp.int32),
+        n_rows=pack.n_rows,
+        n_cols=pack.n_cols,
+    )
+
+
+def espim_matvec(w: EspimWeights, x: jnp.ndarray, *, impl: str | None = None
+                 ) -> jnp.ndarray:
+    """y (n_rows,) or (n_rows, B) = W @ x with packed-row unscatter."""
+    if x.ndim == 1:
+        yp = espim_spmv(w.values, w.cols, x, impl=impl)
+    elif x.ndim == 2:
+        yp = espim_spmv_batched(w.values, w.cols, x, impl=impl)
+    else:
+        raise ValueError(f"x must be 1-D or 2-D, got {x.shape}")
+    return _ref.scatter_rows_ref(yp, w.perm, w.n_rows)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth the Pallas kernels are swept against in
+``tests/test_kernels.py`` (shapes x dtypes, ``assert_allclose``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["espim_spmv_ref", "espim_spmv_batched_ref", "dense_mv_ref",
+           "scatter_rows_ref"]
+
+
+def espim_spmv_ref(values: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """ELL sparse matrix-vector product.
+
+    values, cols: (R_pad, L); x: (M,).  Pad slots carry value 0 (their col
+    id is arbitrary but in-range), so they contribute nothing.
+    Returns y_packed: (R_pad,) in f32.
+    """
+    xv = jnp.take(x, cols, axis=0)                      # (R_pad, L)
+    return jnp.sum(values.astype(jnp.float32) * xv.astype(jnp.float32), axis=1)
+
+
+def espim_spmv_batched_ref(values: jnp.ndarray, cols: jnp.ndarray,
+                           x: jnp.ndarray) -> jnp.ndarray:
+    """Batched ELL MV: x is (M, B); returns (R_pad, B) f32."""
+    xv = jnp.take(x, cols, axis=0)                      # (R_pad, L, B)
+    return jnp.einsum(
+        "rl,rlb->rb", values.astype(jnp.float32), xv.astype(jnp.float32)
+    )
+
+
+def dense_mv_ref(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Dense MV oracle (Newton's datapath analogue): w (R, C) @ x (C,)."""
+    return jnp.dot(w.astype(jnp.float32), x.astype(jnp.float32))
+
+
+def scatter_rows_ref(y_packed: jnp.ndarray, perm: jnp.ndarray, n_rows: int
+                     ) -> jnp.ndarray:
+    """Map packed-row outputs back to original row ids (perm < 0 = pad)."""
+    keep = perm >= 0
+    safe = jnp.where(keep, perm, 0)
+    out_shape = (n_rows,) + tuple(y_packed.shape[1:])
+    zeros = jnp.zeros(out_shape, dtype=y_packed.dtype)
+    contrib = jnp.where(
+        keep.reshape(keep.shape + (1,) * (y_packed.ndim - 1)), y_packed, 0
+    )
+    return zeros.at[safe].add(contrib)

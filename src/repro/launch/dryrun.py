@@ -1,0 +1,191 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step).lower(**specs).compile()`` must succeed on the
+16x16 single-pod mesh AND the 2x16x16 multi-pod mesh for every cell, and
+the compiled artifact yields the memory/cost/collective numbers the
+roofline analysis (benchmarks/roofline.py) consumes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+      --shape train_4k --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+Results are cached as JSON under experiments/dryrun/.
+"""
+# The VERY FIRST lines, before ANY other import: jax locks the device
+# count on first init.  Do NOT set this anywhere global (conftest etc.).
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs.base import SHAPES  # noqa: E402
+from repro.configs.registry import (  # noqa: E402
+    ASSIGNED, get_config, skip_reason)
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.optim.adamw import OptConfig  # noqa: E402
+from repro.serve.serve_step import prefill_fn, serve_step_fn  # noqa: E402
+from repro.sharding import partition  # noqa: E402
+from repro.train import train_step as ts  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+def _entry_fn_and_specs(cfg, shape, mesh, ocfg):
+    """(callable, kwargs-of-ShapeDtypeStruct, in_shardings, donate)."""
+    sp = S.input_specs(cfg, shape, ocfg)
+    if shape.kind == "train":
+        fn = partial(ts.train_step_fn, cfg, ocfg)
+        in_sh = (partition.named(
+                     mesh, ts.param_state_pspecs(sp["state"], mesh)),
+                 partition.named(
+                     mesh, partition.batch_pspecs(sp["batch"], mesh)))
+        return fn, (sp["state"], sp["batch"]), in_sh, (0,)
+    if shape.kind == "prefill":
+        fn = partial(prefill_fn, cfg)
+        in_sh = (partition.named(
+                     mesh, partition.param_pspecs(sp["params"], mesh)),
+                 partition.named(
+                     mesh, partition.batch_pspecs(sp["batch"], mesh)))
+        return fn, (sp["params"], sp["batch"]), in_sh, ()
+    fn = partial(serve_step_fn, cfg)
+    in_sh = (partition.named(
+                 mesh, partition.serve_param_pspecs(
+                     sp["params"], mesh, global_batch=shape.global_batch)),
+             partition.named(
+                 mesh, partition.cache_pspecs(sp["cache"], mesh)),
+             partition.named(
+                 mesh, partition.batch_pspecs(sp["batch"], mesh)))
+    return fn, (sp["params"], sp["cache"], sp["batch"]), in_sh, (1,)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             ocfg: OptConfig | None = None, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode" and cfg.family not in ("ssm",):
+        # serving deployment default: int8 KV cache with exact score-folded
+        # scales (hillclimb iter 6; EXPERIMENTS.md section Perf)
+        cfg = cfg.replace(kv_cache_dtype="int8")
+    ocfg = ocfg or OptConfig()
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, in_sh, donate = _entry_fn_and_specs(cfg, shape, mesh, ocfg)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(fn, in_shardings=in_sh,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    hcost = analyze_hlo(hlo).as_dict()
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "mesh_shape": list(mesh.devices.shape),
+        "n_devices": int(mesh.devices.size),
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        # raw XLA cost analysis (per called-computation, loops NOT scaled)
+        "xla_flops_per_device": float(cost.get("flops", -1)),
+        "xla_bytes_per_device": float(cost.get("bytes accessed", -1)),
+        # trip-count-scaled HLO analysis (per-device program)
+        "hlo_cost": hcost,
+        "memory": {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+        "hlo_bytes": len(hlo),
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x "
+              f"{'multi' if multi_pod else 'single'}] OK "
+              f"compile={t_compile:.0f}s "
+              f"dotflops/dev={hcost['dot_flops']:.3g} "
+              f"dotbytes/dev={hcost['dot_bytes']:.3g} "
+              f"coll/dev={hcost['collective_total_bytes']:.3g}B "
+              f"temp={result['memory'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB")
+        print("  memory_analysis:", {k: f"{v/2**30:.2f}GiB"
+                                     for k, v in result["memory"].items()})
+    return result
+
+
+def cell_path(arch, shape_name, mesh_name):
+    return os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh_name}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_name in meshes:
+                path = cell_path(arch, shape_name, mesh_name)
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[{arch} x {shape_name} x {mesh_name}] cached "
+                              f"({prev['status']})")
+                        continue
+                try:
+                    res = run_cell(arch, shape_name, mesh_name == "multi")
+                except Exception as e:  # noqa: BLE001 - report, keep sweeping
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    failures.append((arch, shape_name, mesh_name, str(e)))
+                    print(f"[{arch} x {shape_name} x {mesh_name}] FAILED: "
+                          f"{type(e).__name__}: {str(e)[:300]}")
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f4 in failures:
+            print("  ", f4[:3], f4[3][:150])
+        raise SystemExit(1)
+    print("\nAll requested dry-run cells passed.")
+
+
+if __name__ == "__main__":
+    main()

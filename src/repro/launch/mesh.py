@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else sees the real device count).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Axes: ``data`` (batch / FSDP), ``model`` (TP/EP), and ``pod`` (the
+    second data-parallel tier across ICI-islands) when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Whatever this host has (tests / examples)."""
+    n = jax.device_count()
+    mp = min(model_parallel, n)
+    return jax.make_mesh((n // mp, mp), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,80 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run contract.
+
+``input_specs`` returns weak-type-correct, shardable specs with **no device
+allocation** for each (arch, shape) cell:
+  train   -> the full train-state + batch for ``train_step``
+  prefill -> params + batch for ``prefill_fn``
+  decode  -> params + KV-cache + one-token batch for ``serve_step``
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import factory
+from repro.optim.adamw import OptConfig
+from repro.train import train_step as ts
+
+__all__ = ["train_batch_specs", "prefill_batch_specs", "decode_batch_specs",
+           "cache_specs", "params_specs", "state_specs", "input_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((b, s), jnp.int32),
+             "labels": _sds((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["embeddings"] = _sds((b, s, cfg.d_model), cfg.cdtype)
+        batch["vis_mask"] = _sds((b, s), jnp.bool_)
+        batch["positions3"] = _sds((3, b, s), jnp.int32)
+    if cfg.family == "audio":
+        batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), cfg.cdtype)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    batch = train_batch_specs(cfg, shape)
+    batch.pop("labels")
+    return batch
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    return {"tokens": _sds((shape.global_batch, 1), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Decode cache at depth seq_len (the cache the new token attends to)."""
+    return jax.eval_shape(
+        lambda: factory.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: factory.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def state_specs(cfg: ModelConfig, ocfg: OptConfig | None = None):
+    ocfg = ocfg or OptConfig()
+    return jax.eval_shape(
+        lambda: ts.init_train_state(cfg, ocfg, jax.random.PRNGKey(0)))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                ocfg: OptConfig | None = None) -> dict:
+    """Everything the cell's entry point consumes, as specs."""
+    if shape.kind == "train":
+        return {"state": state_specs(cfg, ocfg),
+                "batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": params_specs(cfg),
+                "batch": prefill_batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        return {"params": params_specs(cfg),
+                "cache": cache_specs(cfg, shape),
+                "batch": decode_batch_specs(cfg, shape)}
+    raise ValueError(f"unknown shape kind {shape.kind!r}")

@@ -1,0 +1,58 @@
+"""Training launcher: ``python -m repro.launch.train --arch granite-3-2b
+--steps 200 [--reduced] [--microbatches N] [--compress-grads]``.
+
+On this CPU container use ``--reduced`` (the smoke-scale config); the full
+configs are exercised through the dry-run.  On a real cluster the same
+entry point runs under ``jax.distributed.initialize()`` with the
+production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_config
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.optim.adamw import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 mesh (requires 256 devices)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else make_local_mesh())
+    ocfg = OptConfig(peak_lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                     decay_steps=args.steps)
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                         log_every=10, microbatches=args.microbatches,
+                         compress_grads=args.compress_grads)
+    tr = Trainer(cfg, shape, mesh, ocfg, tcfg)
+    kind, step = tr.init_or_resume()
+    print(f"{kind} at step {step}; devices={jax.device_count()} "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    tr.train(args.steps - step)
+    tr.save()
+    print(f"done at step {tr.step}; checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

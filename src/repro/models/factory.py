@@ -1,0 +1,76 @@
+"""Family dispatch: one uniform model API over the six families.
+
+  init_params(cfg, key)            -> params pytree (stacked layers)
+  apply_train(cfg, params, batch)  -> (logits, aux_loss)
+  init_cache(cfg, B, max_len)      -> decode cache pytree
+  decode_step(cfg, params, cache, batch) -> (logits, cache)
+  loss_fn(cfg, params, batch)      -> (loss, metrics)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba, moe, rwkv, transformer, vlm, whisper
+
+__all__ = ["get_family", "init_params", "apply_train", "init_cache",
+           "decode_step", "loss_fn", "cross_entropy"]
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": moe,
+    "vlm": vlm,
+    "hybrid": mamba,
+    "ssm": rwkv,
+    "audio": whisper,
+}
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def get_family(cfg: ModelConfig):
+    try:
+        return _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r}") from None
+
+
+def init_params(cfg: ModelConfig, key):
+    return get_family(cfg).init_params(cfg, key)
+
+
+def apply_train(cfg: ModelConfig, params, batch: dict):
+    mod = get_family(cfg)
+    out = mod.forward(cfg, params, batch)
+    if isinstance(out, tuple):
+        return out  # (logits, aux) — MoE
+    return out, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    return get_family(cfg).init_cache(cfg, batch_size, max_len)
+
+
+def decode_step(cfg: ModelConfig, params, cache: dict, batch: dict):
+    return get_family(cfg).decode_step(cfg, params, cache, batch)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None):
+    """Token-mean CE in f32.  logits (B, S, V); labels (B, S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict):
+    logits, aux = apply_train(cfg, params, batch)
+    ce = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    loss = ce + MOE_AUX_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}

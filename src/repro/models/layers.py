@@ -1,0 +1,335 @@
+"""Shared model layers: norms, rotary embeddings (incl. M-RoPE), GQA
+attention with an online-softmax chunked (flash-style) implementation,
+and the MLP variants used by the assigned architectures.
+
+Conventions:
+  activations x: (B, S, D);  q: (B, S, H, hd);  k/v: (B, S, KV, hd).
+  Computation in ``compute_dtype`` (bf16 by default) with f32 softmax/norm
+  statistics and f32 attention accumulators.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm", "layer_norm", "init_dense", "dense",
+    "rope_angles", "apply_rope", "apply_mrope",
+    "flash_attention", "attention_decode", "repeat_kv",
+    "mlp_gated", "mlp_relu2", "act_fn",
+]
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Sharding hints
+# --------------------------------------------------------------------------
+def shard_hint(x: jnp.ndarray, *logical) -> jnp.ndarray:
+    """Re-anchor sharding propagation inside scans.
+
+    XLA's propagation through while loops sometimes replicates loop-carried
+    activations (e.g. the q-block accumulator in chunked attention),
+    silently multiplying per-device FLOPs.  This helper pins logical dims
+    ("batch" -> the ambient mesh's ('pod','data') axes, "model" -> 'model',
+    None -> unspecified) wherever an ambient mesh exists; it is a no-op
+    otherwise, and skips any axis whose extent does not divide the dim.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    names = mesh.axis_names
+    spec = []
+    for dim, kind in zip(x.shape, logical):
+        if kind == "batch":
+            axes = tuple(a for a in ("pod", "data") if a in names)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            spec.append(axes if (axes and dim % size == 0) else None)
+        elif kind == "model":
+            ok = "model" in names and dim % mesh.shape["model"] == 0
+            spec.append("model" if ok else None)
+        else:
+            spec.append(None)
+    spec += [None] * (x.ndim - len(spec))
+    from jax.sharding import PartitionSpec as _P
+    return jax.lax.with_sharding_constraint(x, _P(*spec))
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Dense / init
+# --------------------------------------------------------------------------
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+            ).astype(dtype)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None):
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (...,) -> cos/sin of shape (..., head_dim//2), f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x (..., S, H, hd); cos/sin (..., S, hd//2) -> rotated x (half style)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def apply_rope(q, k, positions, theta: float = 1e4):
+    """Standard RoPE. positions: (B, S)."""
+    cos, sin = rope_angles(positions, q.shape[-1], theta)
+    return _rotate(q, cos, sin), _rotate(k, cos, sin)
+
+
+def apply_mrope(q, k, positions3, theta: float, sections=(16, 24, 24)):
+    """Qwen2-VL multimodal RoPE: the rotary half-dim is split into
+    (temporal, height, width) sections, each driven by its own position id.
+
+    positions3: (3, B, S).  ``sections`` are half-dim section widths and
+    must sum to head_dim // 2 (default matches head_dim=128: 16+24+24=64).
+    """
+    half = q.shape[-1] // 2
+    if sum(sections) != half:
+        # derive proportional sections
+        base = half // 8
+        sections = (2 * base, 3 * base, half - 5 * base)
+    cos_parts, sin_parts = [], []
+    for i, width in enumerate(sections):
+        lo = sum(sections[:i])
+        freqs = 1.0 / (
+            theta ** (jnp.arange(lo, lo + width, dtype=jnp.float32) / half)
+        )
+        ang = positions3[i].astype(jnp.float32)[..., None] * freqs
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+    cos = jnp.concatenate(cos_parts, axis=-1)
+    sin = jnp.concatenate(sin_parts, axis=-1)
+    return _rotate(q, cos, sin), _rotate(k, cos, sin)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+def repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    b, s, kv, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, d)).reshape(
+        b, s, kv * n_rep, d
+    )
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    bias: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Online-softmax chunked attention (pure JAX; O(S * chunk) memory).
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd) with H % KV == 0.
+    Returns (B, Sq, H, hd) in q.dtype.  ``causal`` aligns the *ends* of the
+    q and kv sequences (standard for Sq == Skv; decode uses
+    ``attention_decode``).
+    """
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    k = repeat_kv(k, h // kvh)
+    v = repeat_kv(v, h // kvh)
+    scale = 1.0 / np.sqrt(hd)
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    pad_q = (-sq) % q_chunk
+    pad_kv = (-skv) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    sq_p, skv_p = sq + pad_q, skv + pad_kv
+    n_q, n_kv = sq_p // q_chunk, skv_p // kv_chunk
+
+    # (B, H, S, hd) layout for matmuls; pin shardings so the q-block scan
+    # cannot replicate batch/heads (see shard_hint)
+    qt = q.transpose(0, 2, 1, 3).reshape(b, h, n_q, q_chunk, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(b, h, n_kv, kv_chunk, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(b, h, n_kv, kv_chunk, hd)
+    qt = shard_hint(qt, "batch", "model", None, None, None)
+    kt = shard_hint(kt, "batch", "model", None, None, None)
+    vt = shard_hint(vt, "batch", "model", None, None, None)
+
+    q_pos_base = jnp.arange(q_chunk)
+    kv_pos_base = jnp.arange(kv_chunk)
+    offset = skv - sq  # align sequence ends for causal masking
+
+    def q_block(carry, qi):
+        qb = jax.lax.dynamic_index_in_dim(qt, qi, axis=2, keepdims=False)
+        # mixed precision: operands stream at the model dtype (bf16 on the
+        # big configs), accumulation in f32 — the native TPU matmul mode;
+        # halves the QK/PV operand traffic on every train/prefill cell
+        qb = (qb.astype(jnp.float32) * scale).astype(q.dtype)
+        q_pos = qi * q_chunk + q_pos_base
+
+        def kv_block(state, ki):
+            m, l, acc = state
+            kb = jax.lax.dynamic_index_in_dim(kt, ki, axis=2, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vt, ki, axis=2, keepdims=False)
+            s_ = jnp.einsum("bhqd,bhkd->bhqk", qb, kb,
+                            preferred_element_type=jnp.float32)
+            kv_pos = ki * kv_chunk + kv_pos_base
+            mask = kv_pos[None, :] < skv  # kv padding
+            if causal:
+                mask = mask & (
+                    q_pos[:, None] + offset >= kv_pos[None, :]
+                )
+            s_ = jnp.where(mask[None, None], s_, NEG_INF)
+            if bias is not None:
+                s_ = s_ + jax.lax.dynamic_slice(
+                    bias,
+                    (0, 0, qi * q_chunk, ki * kv_chunk),
+                    (1, bias.shape[1], q_chunk, kv_chunk),
+                ).astype(jnp.float32)
+            m_new = jnp.maximum(m, s_.max(axis=-1))
+            p = jnp.exp(s_ - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(q.dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, h, q_chunk), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, q_chunk), jnp.float32),
+            shard_hint(jnp.zeros((b, h, q_chunk, hd), jnp.float32),
+                       "batch", "model", None, None),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_block, init, jnp.arange(n_kv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return carry, shard_hint(out.astype(q.dtype),
+                                 "batch", "model", None, None)
+
+    _, blocks = jax.lax.scan(q_block, None, jnp.arange(n_q))
+    blocks = shard_hint(blocks, None, "batch", "model", None, None)
+    # blocks: (n_q, B, H, qc, hd) -> (B, Sq, H, hd)
+    out = blocks.transpose(1, 0, 3, 2, 4).reshape(b, sq_p, h, hd)
+    return out[:, :sq]
+
+
+def attention_decode(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    cache_len,
+    k_scale: jnp.ndarray | None = None,
+    v_scale: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Single-step decode attention over a KV cache.
+
+    q: (B, 1, H, hd); k/v_cache: (B, S_max, KV, hd) (bf16 or int8 with
+    (B, S_max, KV) scales); cache_len: scalar or
+    (B,) valid lengths (entries at index >= cache_len are masked).
+
+    Grouped-query form: the cache is contracted UN-repeated.  Materializing
+    repeat_kv(k_cache) at H heads forces SPMD to reshard the (huge) cache
+    to the q projection's head sharding — GBs of collective-permute per
+    layer; contracting against (KV, rep)-factored q makes the tiny q side
+    carry the reshard instead (hillclimb iter 2, EXPERIMENTS.md Perf).
+    """
+    b, _, h, hd = q.shape
+    _, s_max, kvh, _ = k_cache.shape
+    rep = h // kvh
+    qg = q.reshape(b, 1, kvh, rep, hd).astype(jnp.float32) / np.sqrt(hd)
+    s_ = jnp.einsum("bqkrd,bskd->bkrqs", qg,
+                    k_cache.astype(jnp.float32))  # (B, KV, rep, 1, S)
+    if k_scale is not None:
+        # int8 cache: q.(k*s) == (q.k_int8)*s — the dot streams int8 and
+        # the per-token-per-head scale folds into the scores exactly
+        s_ = s_ * k_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None,
+                                                                None, :]
+    pos = jnp.arange(s_max)
+    lens = jnp.asarray(cache_len)
+    lens = lens[:, None] if lens.ndim == 1 else lens[None, None]
+    mask = pos[None, :] < lens  # (B, S) or (1, S)
+    s_ = jnp.where(mask[:, None, None, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    if v_scale is not None:
+        # fold v scales into the probabilities: sum_s (p*s_v) . v_int8
+        p = p * v_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None,
+                                                               None, :]
+    out = jnp.einsum("bkrqs,bskd->bqkrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return partial(jax.nn.gelu, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def mlp_gated(x, w_gate, w_up, w_down, activation: str = "silu"):
+    """LLaMA-style gated MLP: down( act(x@gate) * (x@up) )."""
+    act = act_fn(activation)
+    return dense(act(dense(x, w_gate)) * dense(x, w_up), w_down)
+
+
+def mlp_relu2(x, w_up, w_down, activation: str = "relu2"):
+    """Non-gated MLP (nemotron-4: squared-ReLU)."""
+    return dense(act_fn(activation)(dense(x, w_up)), w_down)

@@ -1,0 +1,353 @@
+"""Mamba2 (SSD) blocks and the zamba2-2.7b hybrid LM.
+
+The SSD scan uses the chunked (block-parallel) formulation from the Mamba2
+paper: intra-chunk quadratic attention-like term + inter-chunk state
+recurrence via ``lax.scan`` — sub-quadratic in sequence length, which is why
+zamba2 runs the ``long_500k`` cell.
+
+zamba2 structure (per arXiv:2411.15242, simplified as noted in DESIGN.md):
+a stack of Mamba2 layers with a single *shared* attention+MLP block applied
+every ``attn_every`` layers (weight reuse across applications; each
+application keeps its own KV cache slot).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+__all__ = ["init_params", "forward", "init_cache", "decode_step",
+           "ssd_chunked", "ssd_step", "mamba2_apply", "mamba2_step"]
+
+GROUPS = 1  # B/C projection groups
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_state
+
+
+# --------------------------------------------------------------------------
+# SSD core
+# --------------------------------------------------------------------------
+def ssd_chunked(x, dt, a, bmat, cmat, chunk: int = 128, init_state=None):
+    """Chunked selective-state-space scan.
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus); a: (H,) negative;
+    bmat/cmat: (B, S, G, N).  Returns (y (B, S, H, P), final_state
+    (B, H, P, N)).
+    """
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    xc = L.shard_hint(xc, "batch", None, None, "model", None)
+    dtc = L.shard_hint(dtc, "batch", None, None, "model")
+
+    da = dtc * a.astype(jnp.float32)              # (B, nc, Lc, H)
+    cs = jnp.cumsum(da, axis=2)                   # inclusive cumsum
+    # intra-chunk: y[t] += sum_{j<=t} exp(cs[t]-cs[j]) (C_t.B_j) dt_j x_j
+    cb = jnp.einsum("bctgn,bcjgn->bcgtj", cc, bc)  # (B, nc, G, Lc, Lc)
+    cb = jnp.repeat(cb, rep, axis=2)               # (B, nc, H, Lc, Lc)
+    # build decay matrix L[t, j] = exp(cs[t] - cs[j]) for j <= t
+    cst = cs.transpose(0, 1, 3, 2)                 # (B, nc, H, Lc)
+    dec = jnp.exp(cst[..., :, None] - cst[..., None, :])
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dec = jnp.where(tri, dec, 0.0)
+    dx = dtc[..., None] * xc                        # (B, nc, Lc, H, P)
+    y_intra = jnp.einsum("bchtj,bcjhp->bcthp", cb * dec, dx)
+
+    # chunk states: S_c = sum_j exp(cs[last]-cs[j]) dt_j x_j (x) B_j
+    decay_to_end = jnp.exp(cst[..., -1:] - cst)     # (B, nc, H, Lc)
+    bfull = jnp.repeat(bc, rep, axis=3)             # (B, nc, Lc, H? ) wrong axis
+    bfull = jnp.repeat(bc.reshape(b, nc, chunk, g, 1, n), rep, axis=4
+                       ).reshape(b, nc, chunk, h, n)
+    states = jnp.einsum("bchl,bclhp,bclhn->bchpn",
+                        decay_to_end, dx, bfull)    # (B, nc, H, P, N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cst[..., -1])             # (B, nc, H)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def scan_fn(state, inp):
+        st_c, dec_c = inp                           # (B,H,P,N), (B,H)
+        out = state
+        state = state * dec_c[..., None, None] + st_c
+        return state, out
+
+    states = L.shard_hint(states, "batch", None, "model", None, None)
+    final, prev_states = jax.lax.scan(
+        scan_fn, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+    prev_states = L.shard_hint(prev_states, "batch", None, "model", None,
+                               None)
+
+    # y_inter[t] = exp(cs[t]) * C_t . prev_state
+    cfull = jnp.repeat(cc.reshape(b, nc, chunk, g, 1, n), rep, axis=4
+                       ).reshape(b, nc, chunk, h, n)
+    y_inter = jnp.einsum("bclhn,bchpn,bchl->bclhp",
+                         cfull, prev_states, jnp.exp(cst))
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    return y, final
+
+
+def ssd_step(state, x_t, dt_t, a, b_t, c_t):
+    """One-token SSD update.  state: (B, H, P, N); x_t: (B, H, P);
+    dt_t: (B, H); b_t/c_t: (B, G, N)."""
+    bsz, h, p = x_t.shape
+    g = b_t.shape[1]
+    rep = h // g
+    bf = jnp.repeat(b_t, rep, axis=1)  # (B, H, N)
+    cf = jnp.repeat(c_t, rep, axis=1)
+    da = jnp.exp(dt_t.astype(jnp.float32) * a.astype(jnp.float32))
+    state = (state * da[..., None, None]
+             + jnp.einsum("bhp,bhn->bhpn", dt_t[..., None] * x_t, bf))
+    y = jnp.einsum("bhpn,bhn->bhp", state, cf)
+    return y, state
+
+
+# --------------------------------------------------------------------------
+# Mamba2 layer
+# --------------------------------------------------------------------------
+def init_mamba_layer(key, cfg: ModelConfig):
+    d_inner, n_heads, n = _dims(cfg)
+    conv_ch = d_inner + 2 * GROUPS * n
+    k1, k2, k3 = jax.random.split(key, 3)
+    proj_out = 2 * d_inner + 2 * GROUPS * n + n_heads
+    return {
+        "in_proj": L.init_dense(k1, cfg.d_model, proj_out, cfg.dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_kernel, conv_ch),
+                                     jnp.float32) * 0.1).astype(cfg.dtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.dtype),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),       # A = -exp(0) = -1
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), cfg.dtype),
+        "out_proj": L.init_dense(k3, d_inner, cfg.d_model, cfg.dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, z):
+    d_inner, n_heads, n = _dims(cfg)
+    zg = z[..., :d_inner]
+    xbc = z[..., d_inner : 2 * d_inner + 2 * GROUPS * n]
+    dt = z[..., 2 * d_inner + 2 * GROUPS * n :]
+    return zg, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over sequence.  xbc: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :]
+        for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def mamba2_apply(cfg: ModelConfig, p, x, init_state=None):
+    """x: (B, S, D) -> (y, final_ssm_state)."""
+    d_inner, n_heads, n = _dims(cfg)
+    b, s, _ = x.shape
+    zg, xbc, dt = _split_proj(cfg, L.dense(x, p["in_proj"]))
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :d_inner].reshape(b, s, n_heads, cfg.ssm_head_dim)
+    bmat = xbc[..., d_inner : d_inner + GROUPS * n].reshape(b, s, GROUPS, n)
+    cmat = xbc[..., d_inner + GROUPS * n :].reshape(b, s, GROUPS, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, state = ssd_chunked(xs, dt, a, bmat, cmat)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(zg), p["norm_w"], cfg.norm_eps)
+    return L.dense(y, p["out_proj"]), state
+
+
+def mamba2_step(cfg: ModelConfig, p, x, conv_state, ssm_state):
+    """One-token step.  x: (B, 1, D); conv_state: (B, K-1, C);
+    ssm_state: (B, H, P, N)."""
+    d_inner, n_heads, n = _dims(cfg)
+    b = x.shape[0]
+    zg, xbc, dt = _split_proj(cfg, L.dense(x, p["in_proj"]))
+    window = jnp.concatenate([conv_state, xbc], axis=1)  # (B, K, C)
+    conv_state = window[:, 1:]
+    out = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(jnp.float32)
+                     ) + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(out)[:, None, :].astype(x.dtype)
+    xs = xbc[..., :d_inner].reshape(b, n_heads, cfg.ssm_head_dim)
+    bmat = xbc[..., d_inner : d_inner + GROUPS * n].reshape(b, GROUPS, n)
+    cmat = xbc[..., d_inner + GROUPS * n :].reshape(b, GROUPS, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]
+    a = -jnp.exp(p["a_log"])
+    y, ssm_state = ssd_step(ssm_state, xs.astype(jnp.float32), dt, a,
+                            bmat.astype(jnp.float32),
+                            cmat.astype(jnp.float32))
+    y = y + p["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(zg), p["norm_w"], cfg.norm_eps)
+    return L.dense(y, p["out_proj"]), conv_state, ssm_state
+
+
+# --------------------------------------------------------------------------
+# zamba2 hybrid LM
+# --------------------------------------------------------------------------
+def _n_apps(cfg: ModelConfig) -> int:
+    if not cfg.attn_every:
+        return 0
+    return -(-cfg.n_layers // cfg.attn_every)
+
+
+def _init_layer(key, cfg: ModelConfig):
+    return {"ln": T.init_norm(cfg), "mamba": init_mamba_layer(key, cfg)}
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ke, kl, ks, km, kh = jax.random.split(key, 5)
+    params = {
+        "embed": L.init_dense(ke, cfg.padded_vocab, cfg.d_model, cfg.dtype,
+                              scale=0.02),
+        "layers": T.stack_layer_init(_init_layer, kl, cfg.n_layers, cfg),
+        "final_norm": T.init_norm(cfg),
+    }
+    if cfg.attn_every:
+        params["shared_attn"] = {
+            "ln1": T.init_norm(cfg),
+            "attn": T.init_attn_layer(ks, cfg),
+            "ln2": T.init_norm(cfg),
+            "mlp": T.init_mlp_layer(km, cfg),
+        }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(kh, cfg.d_model, cfg.padded_vocab,
+                                         cfg.dtype)
+    return params
+
+
+def _group_params(cfg: ModelConfig, stacked):
+    """Reshape stacked layer params (L, ...) -> (G, attn_every, ...).
+
+    The shared attention block fires at the start of each group, so the
+    hybrid is a clean nested scan — no per-layer conditional (which would
+    both bloat the HLO and defeat cost analysis)."""
+    g = cfg.n_layers // cfg.attn_every
+    if g * cfg.attn_every != cfg.n_layers:
+        raise ValueError("n_layers must be a multiple of attn_every")
+    return jax.tree.map(
+        lambda x: x.reshape((g, cfg.attn_every) + x.shape[1:]), stacked)
+
+
+def forward(cfg: ModelConfig, params, batch: dict) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = T.embed_tokens(cfg, params, tokens)
+    shared = params.get("shared_attn")
+
+    def mamba_body(h, lp):
+        m, _ = mamba2_apply(cfg, lp["mamba"], T._norm(cfg, lp["ln"], h))
+        return h + m, None
+
+    if shared is None:
+        h, _ = jax.lax.scan(T.remat_wrap(cfg, mamba_body), h,
+                            params["layers"])
+    else:
+        grouped = _group_params(cfg, params["layers"])
+
+        def group_body(h, gp):
+            a = T.attn_apply(cfg, shared["attn"],
+                             T._norm(cfg, shared["ln1"], h), positions)
+            h = h + a
+            h = h + T.mlp_apply(cfg, shared["mlp"],
+                                T._norm(cfg, shared["ln2"], h))
+            h, _ = jax.lax.scan(mamba_body, h, gp)
+            return h, None
+
+        h, _ = jax.lax.scan(T.remat_wrap(cfg, group_body), h, grouped)
+    return T.logits_from_hidden(cfg, params, h)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> dict:
+    d_inner, n_heads, n = _dims(cfg)
+    conv_ch = d_inner + 2 * GROUPS * n
+    cache = {
+        "conv": jnp.zeros(
+            (cfg.n_layers, batch_size, cfg.conv_kernel - 1, conv_ch),
+            cfg.cdtype),
+        "ssm": jnp.zeros(
+            (cfg.n_layers, batch_size, n_heads, cfg.ssm_head_dim, n),
+            jnp.float32),
+        "len": jnp.zeros((batch_size,), jnp.int32),
+    }
+    napp = _n_apps(cfg)
+    if napp:
+        cache["k"] = jnp.zeros(
+            (napp, batch_size, max_len, cfg.n_kv_heads, cfg.hd), cfg.cdtype)
+        cache["v"] = jnp.zeros_like(cache["k"])
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params, cache: dict, batch: dict):
+    tokens = batch["tokens"]
+    h = T.embed_tokens(cfg, params, tokens)
+    shared = params.get("shared_attn")
+    napp = _n_apps(cfg)
+
+    def mamba_body(h, xs):
+        lp, conv, ssm = xs
+        m, conv, ssm = mamba2_step(cfg, lp["mamba"],
+                                   T._norm(cfg, lp["ln"], h), conv, ssm)
+        return h + m, (conv, ssm)
+
+    if shared is None:
+        h, (conv_new, ssm_new) = jax.lax.scan(
+            mamba_body, h, (params["layers"], cache["conv"], cache["ssm"]))
+        logits = T.logits_from_hidden(cfg, params, h)
+        return logits, {"conv": conv_new, "ssm": ssm_new,
+                        "len": cache["len"] + 1}
+
+    grouped = _group_params(cfg, params["layers"])
+    conv_g = cache["conv"].reshape((napp, cfg.attn_every)
+                                   + cache["conv"].shape[1:])
+    ssm_g = cache["ssm"].reshape((napp, cfg.attn_every)
+                                 + cache["ssm"].shape[1:])
+
+    def group_body(h, xs):
+        gp, conv, ssm, kc, vc = xs
+        a, kc, vc, _, _ = T.attn_decode_apply(
+            cfg, shared["attn"], T._norm(cfg, shared["ln1"], h),
+            kc, vc, cache["len"])
+        h = h + a
+        h = h + T.mlp_apply(cfg, shared["mlp"],
+                            T._norm(cfg, shared["ln2"], h))
+        h, (conv, ssm) = jax.lax.scan(mamba_body, h, (gp, conv, ssm))
+        return h, (conv, ssm, kc, vc)
+
+    h, (conv_new, ssm_new, k_new, v_new) = jax.lax.scan(
+        group_body, h, (grouped, conv_g, ssm_g, cache["k"], cache["v"]))
+    logits = T.logits_from_hidden(cfg, params, h)
+    return logits, {
+        "conv": conv_new.reshape(cache["conv"].shape),
+        "ssm": ssm_new.reshape(cache["ssm"].shape),
+        "k": k_new, "v": v_new, "len": cache["len"] + 1,
+    }

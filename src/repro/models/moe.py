@@ -1,0 +1,159 @@
+"""Mixture-of-Experts decoder LMs — dbrx-132b (16e top-4), phi3.5-moe
+(16e top-2).
+
+Dispatch is group-wise with static capacity (MaxText-style): tokens are
+processed in groups of ``moe_group_size``; within a group a one-hot
+dispatch/combine pair routes at most ``capacity`` tokens to each expert
+(overflow drops, standard for capacity-based MoE).  The expert dimension is
+the EP shard axis (experts sharded over ``model``); the einsum formulation
+keeps every tensor static-shaped for pjit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+__all__ = ["init_params", "forward", "init_cache", "decode_step", "moe_block"]
+
+
+def init_moe_layer(key, cfg: ModelConfig):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": L.init_dense(kr, d, e, jnp.float32),  # router in f32
+        "w_gate": (jax.random.normal(kg, (e, d, f), jnp.float32)
+                   / jnp.sqrt(d)).astype(cfg.dtype),
+        "w_up": (jax.random.normal(ku, (e, d, f), jnp.float32)
+                 / jnp.sqrt(d)).astype(cfg.dtype),
+        "w_down": (jax.random.normal(kd, (e, f, d), jnp.float32)
+                   / jnp.sqrt(f)).astype(cfg.dtype),
+    }
+
+
+def _group_moe(cfg: ModelConfig, p, x):
+    """One dispatch group: x (Tg, D) -> (y (Tg, D), aux_loss)."""
+    tg = x.shape[0]
+    e, k = cfg.n_experts, cfg.experts_per_token
+    gate_logits = x.astype(jnp.float32) @ p["router"]          # (Tg, E)
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # (Tg, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(4, int(tg * k / e * cfg.capacity_factor) + 3 & ~3)
+    sel = jax.nn.one_hot(top_e, e, dtype=jnp.float32)          # (Tg, k, E)
+    # position of each (token, slot) within its expert queue
+    pos_in_e = (jnp.cumsum(sel.reshape(tg * k, e), axis=0)
+                .reshape(tg, k, e) - 1.0) * sel
+    keep = sel * (pos_in_e < capacity)
+    pos_oh = jax.nn.one_hot(pos_in_e.astype(jnp.int32), capacity,
+                            dtype=jnp.float32) * keep[..., None]
+    dispatch = pos_oh.sum(axis=1)                              # (Tg, E, C)
+    combine = jnp.einsum("tkec,tk->tec", pos_oh, top_p)        # (Tg, E, C)
+
+    xe = jnp.einsum("tec,td->ecd", dispatch.astype(cfg.cdtype),
+                    x.astype(cfg.cdtype))                      # (E, C, D)
+    xe = L.shard_hint(xe, "model", None, None)  # EP: experts on 'model'
+    h = L.act_fn(cfg.activation)(
+        jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(cfg.cdtype))
+    ) * jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(cfg.cdtype))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(cfg.cdtype))
+    ye = L.shard_hint(ye, "model", None, None)
+    y = jnp.einsum("tec,ecd->td", combine.astype(cfg.cdtype), ye)
+    y = L.shard_hint(y, "batch", None)
+
+    # Switch-style load-balance aux loss
+    me = probs.mean(axis=0)                                    # (E,)
+    ce = sel.sum(axis=1).mean(axis=0)                          # fraction routed
+    aux = e * jnp.sum(me * ce) / k
+    return y.astype(x.dtype), aux
+
+
+def moe_block(cfg: ModelConfig, p, x):
+    """x (B, S, D) -> (y, aux).  Groups tokens, scans groups under remat."""
+    b, s, d = x.shape
+    t = b * s
+    tg = min(cfg.moe_group_size, t)
+    pad = (-t) % tg
+    flat = x.reshape(t, d)
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    groups = flat.reshape(-1, tg, d)
+
+    def body(carry, xg):
+        y, aux = _group_moe(cfg, p, xg)
+        return carry + aux, y
+
+    aux, ys = jax.lax.scan(body, jnp.zeros((), jnp.float32), groups)
+    y = ys.reshape(-1, d)[:t].reshape(b, s, d)
+    return y, aux / groups.shape[0]
+
+
+def _init_layer(key, cfg: ModelConfig):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": T.init_norm(cfg),
+        "attn": T.init_attn_layer(ka, cfg),
+        "ln2": T.init_norm(cfg),
+        "moe": init_moe_layer(km, cfg),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    params = {
+        "embed": L.init_dense(ke, cfg.padded_vocab, cfg.d_model, cfg.dtype,
+                              scale=0.02),
+        "layers": T.stack_layer_init(_init_layer, kl, cfg.n_layers, cfg),
+        "final_norm": T.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(kh, cfg.d_model, cfg.padded_vocab,
+                                         cfg.dtype)
+    return params
+
+
+def forward(cfg: ModelConfig, params, batch: dict):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = T.embed_tokens(cfg, params, tokens)
+
+    def body(carry, lp):
+        h, aux = carry
+        hn = T._norm(cfg, lp["ln1"], h)
+        h = h + T.attn_apply(cfg, lp["attn"], hn, positions)
+        y, a = moe_block(cfg, lp["moe"], T._norm(cfg, lp["ln2"], h))
+        return (h + y, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(
+        T.remat_wrap(cfg, body), (h, jnp.zeros((), jnp.float32)),
+        params["layers"])
+    return T.logits_from_hidden(cfg, params, h), aux / cfg.n_layers
+
+
+init_cache = T.init_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache: dict, batch: dict):
+    tokens = batch["tokens"]
+    h = T.embed_tokens(cfg, params, tokens)
+
+    def body(carry, xs):
+        h = carry
+        lp, kc, vc = xs
+        a, kc, vc, _, _ = T.attn_decode_apply(
+            cfg, lp["attn"], T._norm(cfg, lp["ln1"], h), kc, vc, cache["len"])
+        h = h + a
+        y, _ = moe_block(cfg, lp["moe"], T._norm(cfg, lp["ln2"], h))
+        return h + y, (kc, vc)
+
+    h, (k_new, v_new) = jax.lax.scan(
+        body, h, (params["layers"], cache["k"], cache["v"]))
+    logits = T.logits_from_hidden(cfg, params, h)
+    return logits, {"k": k_new, "v": v_new, "len": cache["len"] + 1}

@@ -1,0 +1,204 @@
+"""RWKV6 ("Finch") — attention-free LM with data-dependent decay.
+
+Faithful structure: token-shift lerp mixes for (r, k, v, w, g), LoRA-style
+data-dependent decay ``w = exp(-exp(w0 + tanh(x @ A) @ B))``, per-head bonus
+``u``, grouped head-norm, squared-ReLU channel mix.  The WKV recurrence runs
+as a ``lax.scan`` over time for train/prefill and as an O(1) state update for
+decode — which is why rwkv6 runs the ``long_500k`` cell.
+
+state per head: (K, V) outer-product accumulator;
+  y_t = r_t . (state + (u * k_t) v_t^T);  state' = diag(w_t) state + k_t v_t^T
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+__all__ = ["init_params", "forward", "init_cache", "decode_step"]
+
+LORA_W = 64  # decay LoRA rank
+
+
+def _heads(cfg: ModelConfig):
+    hd = cfg.rwkv_head_dim
+    return cfg.d_model // hd, hd
+
+
+def init_time_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h, hd = _heads(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "mix": 0.5 * jnp.ones((5, d), cfg.dtype),  # r, k, v, w, g lerps
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_a": L.init_dense(ks[0], d, LORA_W, cfg.dtype, scale=0.01),
+        "w_b": L.init_dense(ks[1], LORA_W, d, cfg.dtype, scale=0.01),
+        "u": (jax.random.normal(ks[2], (h, hd), jnp.float32) * 0.1),
+        "wr": L.init_dense(ks[3], d, d, cfg.dtype),
+        "wk": L.init_dense(ks[4], d, d, cfg.dtype),
+        "wv": L.init_dense(ks[5], d, d, cfg.dtype),
+        "wg": L.init_dense(ks[6], d, d, cfg.dtype),
+        "wo": L.init_dense(ks[7], d, d, cfg.dtype),
+        "ln_x": jnp.ones((d,), cfg.dtype),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mix": 0.5 * jnp.ones((2, d), cfg.dtype),  # k, r lerps
+        "wk": L.init_dense(k1, d, f, cfg.dtype),
+        "wv": L.init_dense(k2, f, d, cfg.dtype),
+        "wr": L.init_dense(k3, d, d, cfg.dtype),
+    }
+
+
+def _shift(x, last):
+    """Token shift: x_{t-1} with ``last`` filling position 0.
+    x: (B, S, D); last: (B, D)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _head_norm(y, w, h, hd, eps):
+    """Per-head RMS norm (group-norm analogue). y: (B, S, H, hd)."""
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + eps)
+    b, s = y.shape[:2]
+    return (yf.reshape(b, s, h * hd) * w.astype(jnp.float32)).astype(y.dtype)
+
+
+def time_mix_apply(cfg: ModelConfig, p, x, last_x, state):
+    """x: (B, S, D); last_x: (B, D); state: (B, H, K, V) f32.
+    Returns (out, new_last_x, new_state)."""
+    b, s, d = x.shape
+    h, hd = _heads(cfg)
+    xs = _shift(x, last_x)
+    mix = p["mix"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + mix[i] * (xs - x) for i in range(5))
+    r = L.dense(xr, p["wr"]).reshape(b, s, h, hd)
+    k = L.dense(xk, p["wk"]).reshape(b, s, h, hd)
+    v = L.dense(xv, p["wv"]).reshape(b, s, h, hd)
+    g = L.dense(xg, p["wg"])
+    w = jnp.exp(-jnp.exp(
+        p["w0"]
+        + L.dense(jnp.tanh(L.dense(xw, p["w_a"])), p["w_b"]).astype(jnp.float32)
+    )).reshape(b, s, h, hd)  # (0, 1) decay per channel
+    u = p["u"]
+
+    def step(st, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
+                        v_t.astype(jnp.float32))
+        y = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                       st + u[None, :, :, None] * kv)
+        st = w_t.astype(jnp.float32)[..., None] * st + kv
+        return st, y
+
+    hint = lambda t: L.shard_hint(t, None, "batch", "model", None)
+    seq = (hint(r.transpose(1, 0, 2, 3)), hint(k.transpose(1, 0, 2, 3)),
+           hint(v.transpose(1, 0, 2, 3)), hint(w.transpose(1, 0, 2, 3)))
+    state = L.shard_hint(state, "batch", "model", None, None)
+    state, ys = jax.lax.scan(step, state, seq)
+    y = hint(ys).transpose(1, 0, 2, 3)  # (B, S, H, hd)
+    y = _head_norm(y, p["ln_x"], h, hd, cfg.norm_eps).astype(x.dtype)
+    y = y * jax.nn.silu(g)
+    return L.dense(y, p["wo"]).astype(x.dtype), x[:, -1, :], state
+
+
+def channel_mix_apply(cfg: ModelConfig, p, x, last_x):
+    xs = _shift(x, last_x)
+    mix = p["mix"].astype(x.dtype)
+    xk = x + mix[0] * (xs - x)
+    xr = x + mix[1] * (xs - x)
+    k = jnp.square(jax.nn.relu(L.dense(xk, p["wk"])))
+    out = jax.nn.sigmoid(L.dense(xr, p["wr"])) * L.dense(k, p["wv"])
+    return out.astype(x.dtype), x[:, -1, :]
+
+
+def _init_layer(key, cfg: ModelConfig):
+    kt, kc = jax.random.split(key)
+    return {
+        "ln1": T.init_norm(cfg),
+        "tm": init_time_mix(kt, cfg),
+        "ln2": T.init_norm(cfg),
+        "cm": init_channel_mix(kc, cfg),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    params = {
+        "embed": L.init_dense(ke, cfg.padded_vocab, cfg.d_model, cfg.dtype,
+                              scale=0.02),
+        "layers": T.stack_layer_init(_init_layer, kl, cfg.n_layers, cfg),
+        "final_norm": T.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(kh, cfg.d_model, cfg.padded_vocab,
+                                         cfg.dtype)
+    return params
+
+
+def _zero_states(cfg: ModelConfig, b):
+    h, hd = _heads(cfg)
+    return {
+        "tm_x": jnp.zeros((cfg.n_layers, b, cfg.d_model), cfg.cdtype),
+        "cm_x": jnp.zeros((cfg.n_layers, b, cfg.d_model), cfg.cdtype),
+        "wkv": jnp.zeros((cfg.n_layers, b, h, hd, hd), jnp.float32),
+    }
+
+
+def forward(cfg: ModelConfig, params, batch: dict) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = T.embed_tokens(cfg, params, tokens)
+    states = _zero_states(cfg, b)
+
+    def body(carry, xs):
+        h = carry
+        lp, tm_x, cm_x, wkv = xs
+        a, _, _ = time_mix_apply(cfg, lp["tm"], T._norm(cfg, lp["ln1"], h),
+                                 tm_x, wkv)
+        h = h + a
+        c, _ = channel_mix_apply(cfg, lp["cm"], T._norm(cfg, lp["ln2"], h),
+                                 cm_x)
+        return h + c, None
+
+    h, _ = jax.lax.scan(
+        T.remat_wrap(cfg, body), h,
+        (params["layers"], states["tm_x"], states["cm_x"], states["wkv"]))
+    return T.logits_from_hidden(cfg, params, h)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> dict:
+    st = _zero_states(cfg, batch_size)
+    st["len"] = jnp.zeros((batch_size,), jnp.int32)
+    return st
+
+
+def decode_step(cfg: ModelConfig, params, cache: dict, batch: dict):
+    tokens = batch["tokens"]
+    h = T.embed_tokens(cfg, params, tokens)
+
+    def body(carry, xs):
+        h = carry
+        lp, tm_x, cm_x, wkv = xs
+        a, tm_x, wkv = time_mix_apply(
+            cfg, lp["tm"], T._norm(cfg, lp["ln1"], h), tm_x, wkv)
+        h = h + a
+        c, cm_x = channel_mix_apply(
+            cfg, lp["cm"], T._norm(cfg, lp["ln2"], h), cm_x)
+        return h + c, (tm_x, cm_x, wkv)
+
+    h, (tm_x, cm_x, wkv) = jax.lax.scan(
+        body, h, (params["layers"], cache["tm_x"], cache["cm_x"],
+                  cache["wkv"]))
+    logits = T.logits_from_hidden(cfg, params, h)
+    return logits, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv,
+                    "len": cache["len"] + 1}

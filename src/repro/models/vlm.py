@@ -1,0 +1,44 @@
+"""Qwen2-VL-2b — VLM backbone with M-RoPE and dynamic-resolution stub.
+
+Per the assignment the vision frontend (ViT patch encoder) is a STUB:
+``input_specs()`` supplies precomputed patch embeddings (B, S, D) plus a
+``vis_mask`` marking which sequence positions are visual; the backbone
+splices them over the token embeddings.  M-RoPE drives rotary sections
+(temporal, height, width) from a (3, B, S) position tensor — for text
+positions all three components coincide (as in the reference model).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+__all__ = ["init_params", "forward", "init_cache", "decode_step",
+           "default_positions3"]
+
+init_params = T.init_params
+init_cache = T.init_cache
+
+
+def default_positions3(b: int, s: int, start: int = 0) -> jnp.ndarray:
+    pos = jnp.broadcast_to(
+        jnp.arange(start, start + s, dtype=jnp.int32), (b, s))
+    return jnp.broadcast_to(pos[None], (3, b, s))
+
+
+def forward(cfg: ModelConfig, params, batch: dict) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    if "positions3" not in batch:
+        batch = dict(batch, positions3=default_positions3(b, s))
+    return T.forward(cfg, params, batch)
+
+
+def decode_step(cfg: ModelConfig, params, cache: dict, batch: dict):
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    if "positions3" not in batch:
+        pos = cache["len"].astype(jnp.int32)[None, :, None]  # (1, B, 1)
+        batch = dict(batch, positions3=jnp.broadcast_to(pos, (3, b, 1)))
+    return T.decode_step(cfg, params, cache, batch)

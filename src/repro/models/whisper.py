@@ -1,0 +1,175 @@
+"""Whisper-small — encoder-decoder audio transformer (backbone only).
+
+Per the assignment the conv frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (B, T_enc, D) directly (the two conv+GELU
+layers of the real model are not the evaluated backbone).  Encoder:
+bidirectional self-attention with sinusoidal positions.  Decoder: causal
+self-attention + cross-attention with learned positions; LayerNorm and
+non-gated GELU MLPs throughout; tied output embedding (as in the original).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+__all__ = ["init_params", "forward", "encode", "init_cache", "prime_cross",
+           "decode_step"]
+
+
+def _sinusoid(n_pos: int, d: int) -> np.ndarray:
+    pos = np.arange(n_pos)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    out = np.zeros((n_pos, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": T.init_norm(cfg),
+        "attn": T.init_attn_layer(ka, cfg),
+        "ln2": T.init_norm(cfg),
+        "mlp": T.init_mlp_layer(km, cfg),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    ka, kc, km = jax.random.split(key, 3)
+    return {
+        "ln1": T.init_norm(cfg),
+        "self_attn": T.init_attn_layer(ka, cfg),
+        "ln_cross": T.init_norm(cfg),
+        "cross_attn": T.init_attn_layer(kc, cfg),
+        "ln2": T.init_norm(cfg),
+        "mlp": T.init_mlp_layer(km, cfg),
+    }
+
+
+def init_params(cfg: ModelConfig, key, max_pos: int = 32768) -> dict:
+    ke, kl, kd, kp = jax.random.split(key, 4)
+    return {
+        "embed": L.init_dense(ke, cfg.padded_vocab, cfg.d_model, cfg.dtype,
+                              scale=0.02),
+        "pos_embed": L.init_dense(kp, max_pos, cfg.d_model, cfg.dtype,
+                                  scale=0.02),
+        "enc_layers": T.stack_layer_init(_init_enc_layer, kl,
+                                         cfg.encoder_layers, cfg),
+        "enc_norm": T.init_norm(cfg),
+        "dec_layers": T.stack_layer_init(_init_dec_layer, kd, cfg.n_layers,
+                                         cfg),
+        "final_norm": T.init_norm(cfg),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, T_enc, D) stub conv-frontend output -> encoder states."""
+    b, t, d = frames.shape
+    h = frames.astype(cfg.cdtype) + jnp.asarray(
+        _sinusoid(t, d), cfg.cdtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def body(h, lp):
+        h = h + T.attn_apply(cfg, lp["attn"], T._norm(cfg, lp["ln1"], h),
+                             positions, causal=False)
+        h = h + T.mlp_apply(cfg, lp["mlp"], T._norm(cfg, lp["ln2"], h))
+        return h, None
+
+    h, _ = jax.lax.scan(T.remat_wrap(cfg, body), h, params["enc_layers"])
+    return T._norm(cfg, params["enc_norm"], h)
+
+
+def forward(cfg: ModelConfig, params, batch: dict) -> jnp.ndarray:
+    """Teacher-forced decode over the full target sequence.
+    batch: frames (B, T_enc, D), tokens (B, S)."""
+    enc = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = (T.embed_tokens(cfg, params, tokens)
+         + jnp.take(params["pos_embed"], jnp.arange(s), axis=0
+                    ).astype(cfg.cdtype)[None])
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(h, lp):
+        h = h + T.attn_apply(cfg, lp["self_attn"],
+                             T._norm(cfg, lp["ln1"], h), positions)
+        h = h + T.attn_apply(cfg, lp["cross_attn"],
+                             T._norm(cfg, lp["ln_cross"], h), positions,
+                             causal=False, kv_x=enc)
+        h = h + T.mlp_apply(cfg, lp["mlp"], T._norm(cfg, lp["ln2"], h))
+        return h, None
+
+    h, _ = jax.lax.scan(T.remat_wrap(cfg, body), h, params["dec_layers"])
+    return T.logits_from_hidden(cfg, params, h)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> dict:
+    kv_shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.hd)
+    cross_shape = (cfg.n_layers, batch_size, cfg.encoder_seq,
+                   cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(kv_shape, cfg.cdtype),
+        "v": jnp.zeros(kv_shape, cfg.cdtype),
+        "cross_k": jnp.zeros(cross_shape, cfg.cdtype),
+        "cross_v": jnp.zeros(cross_shape, cfg.cdtype),
+        "len": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def prime_cross(cfg: ModelConfig, params, cache: dict, frames: jnp.ndarray
+                ) -> dict:
+    """Run the encoder once and precompute every decoder layer's
+    cross-attention K/V (decode-time cross-attn is then cache-only)."""
+    enc = encode(cfg, params, frames)
+    b, t, _ = enc.shape
+
+    def per_layer(lp):
+        p = lp["cross_attn"]
+        k = L.dense(enc, p["wk"], p.get("bk")).reshape(
+            b, t, cfg.n_kv_heads, cfg.hd)
+        v = L.dense(enc, p["wv"], p.get("bv")).reshape(
+            b, t, cfg.n_kv_heads, cfg.hd)
+        return k, v
+
+    ck, cv = jax.vmap(per_layer)(params["dec_layers"])
+    return {**cache, "cross_k": ck, "cross_v": cv}
+
+
+def decode_step(cfg: ModelConfig, params, cache: dict, batch: dict):
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    pos = cache["len"]
+    h = (T.embed_tokens(cfg, params, tokens)
+         + jnp.take(params["pos_embed"],
+                    jnp.clip(pos, 0, params["pos_embed"].shape[0] - 1),
+                    axis=0).astype(cfg.cdtype)[:, None, :])
+    t_enc = cache["cross_k"].shape[2]
+
+    def body(carry, xs):
+        h = carry
+        lp, kc, vc, ck, cv = xs
+        a, kc, vc, _, _ = T.attn_decode_apply(
+            cfg, lp["self_attn"], T._norm(cfg, lp["ln1"], h), kc, vc, pos)
+        h = h + a
+        # cross attention over the fixed encoder cache
+        hn = T._norm(cfg, lp["ln_cross"], h)
+        p = lp["cross_attn"]
+        q = L.dense(hn, p["wq"], p.get("bq")).reshape(
+            b, 1, cfg.n_heads, cfg.hd)
+        x = L.attention_decode(q, ck, cv, jnp.full((b,), t_enc, jnp.int32))
+        h = h + L.dense(x.reshape(b, 1, cfg.n_heads * cfg.hd), p["wo"])
+        h = h + T.mlp_apply(cfg, lp["mlp"], T._norm(cfg, lp["ln2"], h))
+        return h, (kc, vc)
+
+    h, (k_new, v_new) = jax.lax.scan(
+        body, h, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    logits = T.logits_from_hidden(cfg, params, h)
+    return logits, {**cache, "k": k_new, "v": v_new, "len": cache["len"] + 1}

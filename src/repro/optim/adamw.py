@@ -1,0 +1,98 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping, and optional
+fp32 master params (for bf16 model params).  Pure pytree transforms — the
+optimizer state shards exactly like the params (ZeRO via the same
+PartitionSpecs)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "apply_updates", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    master_fp32: bool = True
+
+
+def lr_at(cfg: OptConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.peak_lr * step / jnp.maximum(1.0, cfg.warmup_steps)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(1.0, cfg.decay_steps - cfg.warmup_steps), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init_opt_state(cfg: OptConfig, params) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state = {
+        "mu": zeros,
+        "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    needs_master = cfg.master_fp32 and any(
+        p.dtype != jnp.float32 for p in jax.tree.leaves(params))
+    if needs_master:
+        # jnp.array(copy=True) so f32 leaves do not alias the param buffer
+        # (donation would otherwise see the same buffer twice)
+        state["master"] = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+    return state
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree))
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(cfg: OptConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    base = state.get("master", params)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        step_dir = (mu / b1c) / (jnp.sqrt(nu / b2c) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step_dir + cfg.weight_decay * pf)
+        return pf, mu, nu
+
+    flat_p, treedef = jax.tree.flatten(base)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+
+    new_params = jax.tree.map(
+        lambda m, p: m.astype(p.dtype), new_master, params)
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    if "master" in state:
+        new_state["master"] = new_master
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

@@ -1,0 +1,63 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Int8 uniform quantization with error feedback (1-bit-Adam-family trick):
+each step transmits q = round(g / scale) in int8 plus one f32 scale per
+tensor; the quantization residual is carried locally and added back next
+step, so the *accumulated* error is bounded and convergence matches fp32
+all-reduce in expectation.
+
+On a real cluster this wraps the DP all-reduce inside ``shard_map`` (reduce
+int8 partials, rescale); this module provides the quantizer, the error-
+feedback state, and a drop-in grad transform used by the trainer when
+``compress_grads=True``.  The unit tests bound the per-step and steady-state
+error.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_error_state", "compress_tree", "decompress_tree",
+           "ef_compress_grads"]
+
+
+def _quantize(g: jnp.ndarray):
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads):
+    return jax.tree.map(lambda g: _quantize(g), grads,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def decompress_tree(comp):
+    return jax.tree.map(lambda qs: _dequantize(*qs), comp,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_grads(grads, error_state):
+    """Error-feedback int8 round trip: returns (decompressed_grads,
+    new_error_state).  The decompressed value is what the all-reduce would
+    deliver; the residual stays local."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = _quantize(corrected)
+        deq = _dequantize(q, scale)
+        return deq, corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

@@ -1,0 +1,106 @@
+"""Cluster-runtime policies: heartbeat failure detection, straggler
+mitigation, and elastic re-meshing.
+
+On real hardware these hooks sit in the launcher (GKE/Borg restarts, the
+JAX coordination service surfaces missing hosts); the *policy* layer is
+hardware-independent and fully implemented + tested here:
+
+  * ``HeartbeatMonitor`` — per-worker liveness with a configurable timeout;
+    failed workers are reported to the elastic planner.
+  * ``StragglerDetector`` — per-step worker timings vs. rolling median;
+    persistent stragglers (> threshold x median for k consecutive steps)
+    are treated as soft failures (the cure at scale: drop the node and
+    re-mesh, not wait).
+  * ``plan_elastic_mesh`` — given surviving device count, picks the largest
+    valid (pod, data, model) mesh that preserves the model axis (TP degree
+    is fixed by the weight shapes) and shrinks data parallelism; the
+    checkpoint reshard path (checkpoint/ckpt.py) re-lays the state onto it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+
+__all__ = ["HeartbeatMonitor", "StragglerDetector", "plan_elastic_mesh",
+           "ElasticPlan"]
+
+
+class HeartbeatMonitor:
+    def __init__(self, workers: list, timeout: float = 30.0):
+        self.timeout = timeout
+        self.last_seen: dict = {w: 0.0 for w in workers}
+        self._failed: set = set()
+
+    def beat(self, worker, now: float) -> None:
+        if worker in self._failed:
+            return
+        self.last_seen[worker] = now
+
+    def failed(self, now: float) -> list:
+        out = [w for w, t in self.last_seen.items()
+               if w not in self._failed and now - t > self.timeout]
+        self._failed.update(out)
+        return sorted(self._failed)
+
+    def healthy(self, now: float) -> list:
+        self.failed(now)
+        return [w for w in self.last_seen if w not in self._failed]
+
+
+class StragglerDetector:
+    def __init__(self, threshold: float = 2.0, patience: int = 3):
+        self.threshold = threshold
+        self.patience = patience
+        self._strikes: dict = {}
+
+    def observe_step(self, timings: dict) -> list:
+        """timings: worker -> step seconds.  Returns persistent stragglers."""
+        if len(timings) < 2:
+            return []
+        med = statistics.median(timings.values())
+        out = []
+        for w, t in timings.items():
+            if t > self.threshold * max(med, 1e-9):
+                self._strikes[w] = self._strikes.get(w, 0) + 1
+                if self._strikes[w] >= self.patience:
+                    out.append(w)
+            else:
+                self._strikes[w] = 0
+        return sorted(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple
+    axis_names: tuple
+    dropped_devices: int
+    note: str
+
+
+def plan_elastic_mesh(n_healthy: int, model_parallel: int,
+                      pod_size: int | None = None) -> ElasticPlan:
+    """Largest usable mesh after failures.
+
+    TP degree (``model_parallel``) is pinned by the sharded weight shapes;
+    data parallelism absorbs the loss.  With ``pod_size`` set, whole pods
+    are the elastic unit (a failed node sidelines its pod's stragglers to
+    the spare pool — the standard multi-pod policy)."""
+    if n_healthy < model_parallel:
+        raise ValueError(
+            f"cannot re-mesh: {n_healthy} devices < TP degree "
+            f"{model_parallel}")
+    if pod_size:
+        pods = n_healthy // pod_size
+        if pods >= 2:
+            data = pod_size // model_parallel
+            used = pods * pod_size
+            return ElasticPlan((pods, data, model_parallel),
+                               ("pod", "data", "model"),
+                               n_healthy - used,
+                               f"{pods} full pods, data axis {data}")
+        n_healthy = min(n_healthy, pod_size)
+    data = n_healthy // model_parallel
+    used = data * model_parallel
+    return ElasticPlan((data, model_parallel), ("data", "model"),
+                       n_healthy - used,
+                       f"single pod, data axis shrunk to {data}")

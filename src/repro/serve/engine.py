@@ -1,0 +1,114 @@
+"""Batched serving engine with continuous batching.
+
+Fixed B decode slots over one shared KV cache; finished sequences free
+their slot, queued requests claim it (cache rows reset via per-slot length
+= 0 and prompt replay).  Prefill here is token-by-token replay through the
+decode path — correct by the decode/forward parity tests; a production
+deployment would use ``prefill_fn`` + cache splice, which the engine
+exposes as an upgrade point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import factory
+from repro.serve.serve_step import serve_step_fn
+
+__all__ = ["Request", "EngineStats", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new_tokens: int = 16
+    eos_id: int = -1  # -1: never stops early
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    tokens_generated: int = 0
+    requests_completed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int,
+                 max_len: int, temperature: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.cache = factory.init_cache(cfg, batch_slots, max_len)
+        self.slots: list[Request | None] = [None] * batch_slots
+        self.pending: deque[Request] = deque()
+        self.prompt_cursor = [0] * batch_slots
+        self.cur_token = np.zeros((batch_slots, 1), np.int32)
+        self.stats = EngineStats()
+        self._step = jax.jit(
+            lambda p, c, b: serve_step_fn(cfg, p, c, b,
+                                          temperature=temperature))
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def _reset_slot(self, i: int) -> None:
+        # zero the slot's cache length; stale K/V beyond len is masked out
+        self.cache = dict(self.cache)
+        self.cache["len"] = self.cache["len"].at[i].set(0)
+        for key in ("ssm", "conv", "wkv", "tm_x", "cm_x"):
+            if key in self.cache:
+                self.cache[key] = self.cache[key].at[:, i].set(0)
+
+    def _fill_slots(self) -> None:
+        for i in range(self.b):
+            if self.slots[i] is None and self.pending:
+                req = self.pending.popleft()
+                self.slots[i] = req
+                self.prompt_cursor[i] = 0
+                self._reset_slot(i)
+                self.cur_token[i, 0] = req.prompt[0]
+
+    def step(self) -> None:
+        """One engine tick: decode every active slot by one token."""
+        self._fill_slots()
+        if all(s is None for s in self.slots):
+            return
+        batch = {"tokens": jnp.asarray(self.cur_token)}
+        nxt, _, self.cache = self._step(self.params, self.cache, batch)
+        nxt = np.asarray(nxt)
+        self.stats.steps += 1
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.prompt_cursor[i] += 1
+            if self.prompt_cursor[i] < len(req.prompt):
+                # still prefilling: feed the next prompt token
+                self.cur_token[i, 0] = req.prompt[self.prompt_cursor[i]]
+                continue
+            tok = int(nxt[i, 0])
+            req.output.append(tok)
+            self.stats.tokens_generated += 1
+            self.cur_token[i, 0] = tok
+            seq_len = self.prompt_cursor[i] + len(req.output)
+            if (tok == req.eos_id or len(req.output) >= req.max_new_tokens
+                    or seq_len >= self.max_len - 1):
+                req.done = True
+                self.stats.requests_completed += 1
+                self.slots[i] = None
+
+    def run(self, max_steps: int = 10_000) -> EngineStats:
+        for _ in range(max_steps):
+            if not self.pending and all(s is None for s in self.slots):
+                break
+            self.step()
+        return self.stats

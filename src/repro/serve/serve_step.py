@@ -1,0 +1,56 @@
+"""The jitted serving step: one decode step + greedy/temperature sampling,
+with KV-cache shardings.  ``serve_step`` is what the decode-shape dry-run
+cells lower (one new token against a seq_len-deep cache)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import factory
+from repro.sharding import partition
+
+__all__ = ["serve_step_fn", "make_serve_step", "prefill_fn"]
+
+
+def serve_step_fn(cfg: ModelConfig, params, cache: dict, batch: dict,
+                  temperature: float = 0.0):
+    """Returns (next_tokens (B, 1), logits (B, 1, V), new_cache)."""
+    logits, cache = factory.decode_step(cfg, params, cache, batch)
+    last = logits[:, -1, :].astype(jnp.float32)
+    # mask vocab padding
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad = cfg.padded_vocab - cfg.vocab_size
+        last = jnp.concatenate(
+            [last[:, : cfg.vocab_size],
+             jnp.full((last.shape[0], pad), -1e30)], axis=-1)
+    if temperature > 0.0:
+        key = batch.get("rng", jax.random.PRNGKey(0))
+        nxt = jax.random.categorical(key, last / temperature, axis=-1)
+    else:
+        nxt = jnp.argmax(last, axis=-1)
+    return nxt[:, None].astype(jnp.int32), logits, cache
+
+
+def prefill_fn(cfg: ModelConfig, params, batch: dict):
+    """Full-sequence forward (the prefill-shape cells lower this)."""
+    logits, _ = factory.apply_train(cfg, params, batch)
+    return logits
+
+
+def make_serve_step(cfg: ModelConfig, mesh, params_shapes, cache_shapes,
+                    batch_shapes, donate_cache: bool = True):
+    pspecs = partition.serve_param_pspecs(params_shapes, mesh)
+    cspecs = partition.cache_pspecs(cache_shapes, mesh)
+    bspecs = partition.batch_pspecs(batch_shapes, mesh)
+    fn = partial(serve_step_fn, cfg)
+    return jax.jit(
+        fn,
+        in_shardings=(partition.named(mesh, pspecs),
+                      partition.named(mesh, cspecs),
+                      partition.named(mesh, bspecs)),
+        out_shardings=(None, None, partition.named(mesh, cspecs)),
+        donate_argnums=(1,) if donate_cache else (),
+    ), pspecs, cspecs, bspecs

@@ -1,0 +1,108 @@
+"""The training driver: data pipeline + sharded train step + checkpointing
++ fault-tolerance hooks, with exact resume."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.pipeline import SyntheticPipeline
+from repro.optim.adamw import OptConfig
+from repro.runtime.fault_tolerance import StragglerDetector
+from repro.sharding import partition
+from repro.train import train_step as ts
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    log_every: int = 10
+    microbatches: int = 1
+    compress_grads: bool = False
+    async_ckpt: bool = False
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 ocfg: OptConfig | None = None,
+                 tcfg: TrainerConfig | None = None):
+        self.cfg = cfg
+        self.shape = shape
+        self.mesh = mesh
+        self.ocfg = ocfg or OptConfig()
+        self.tcfg = tcfg or TrainerConfig()
+        self.pipe = SyntheticPipeline.for_model(cfg, shape,
+                                                seed=self.tcfg.seed)
+        self.straggler = StragglerDetector()
+        self.step = 0
+        self.state = None
+        self._build()
+
+    def _build(self):
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        state_shapes = jax.eval_shape(
+            lambda: ts.init_train_state(
+                self.cfg, self.ocfg, key,
+                compress_grads=self.tcfg.compress_grads))
+        batch_shapes = jax.eval_shape(lambda: self.pipe.batch_at(0))
+        self.step_fn, self.pspecs, self.bspecs = ts.make_train_step(
+            self.cfg, self.ocfg, self.mesh, state_shapes, batch_shapes,
+            microbatches=self.tcfg.microbatches,
+            compress_grads=self.tcfg.compress_grads)
+
+    def init_or_resume(self):
+        latest = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if latest is not None:
+            state, extra, step = ckpt.restore(
+                self.tcfg.ckpt_dir, latest, mesh=self.mesh,
+                specs=self.pspecs)
+            self.state = state
+            self.step = extra.get("data_state", {}).get("step", step)
+            return "resumed", self.step
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        with jax.set_mesh(self.mesh):
+            state = ts.init_train_state(
+                self.cfg, self.ocfg, key,
+                compress_grads=self.tcfg.compress_grads)
+        self.state = partition.logical_to_sharding(
+            state, self.pspecs, self.mesh)
+        self.step = 0
+        return "fresh", 0
+
+    def save(self, block: bool = True):
+        extra = {"data_state": self.pipe.state(self.step)}
+        if self.tcfg.async_ckpt and not block:
+            ckpt.save_async(self.tcfg.ckpt_dir, self.step, self.state, extra)
+        else:
+            ckpt.save(self.tcfg.ckpt_dir, self.step, self.state, extra)
+        ckpt.gc_keep_last(self.tcfg.ckpt_dir, self.tcfg.keep_ckpts)
+
+    def train(self, n_steps: int, log=print):
+        if self.state is None:
+            self.init_or_resume()
+        metrics = {}
+        with jax.set_mesh(self.mesh):
+            for _ in range(n_steps):
+                batch = self.pipe.batch_at(self.step)
+                batch = partition.logical_to_sharding(
+                    batch, self.bspecs, self.mesh)
+                t0 = time.time()
+                self.state, metrics = self.step_fn(self.state, batch)
+                self.step += 1
+                if self.step % self.tcfg.log_every == 0 and log:
+                    log(f"step {self.step}: "
+                        f"loss={float(metrics['loss']):.4f} "
+                        f"gnorm={float(metrics['grad_norm']):.3f} "
+                        f"{time.time()-t0:.2f}s/step")
+                if self.step % self.tcfg.ckpt_every == 0:
+                    self.save(block=not self.tcfg.async_ckpt)
+        return metrics

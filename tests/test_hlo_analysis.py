@@ -1,0 +1,68 @@
+"""HLO analyzer: trip-count scaling, dot FLOPs, collective accounting —
+validated against a hand-computable jitted program."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo, parse_hlo
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    hlo = _compile(lambda x, y: x @ y, a, b)
+    cost = analyze_hlo(hlo)
+    assert cost.dot_flops == 2 * 64 * 128 * 32
+
+
+def test_while_trip_count_scaling():
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def fn(x):
+        def body(c, _):
+            return c @ c, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    cost = analyze_hlo(_compile(fn, a))
+    # 10 iterations x one 64^3 matmul each
+    assert cost.dot_flops == pytest.approx(10 * 2 * 64 ** 3, rel=0.01)
+
+
+def test_nested_scan_scaling():
+    a = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def fn(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ ci, None
+            c, _ = jax.lax.scan(inner, c, None, length=4)
+            return c, None
+        out, _ = jax.lax.scan(outer, x, None, length=3)
+        return out
+
+    cost = analyze_hlo(_compile(fn, a))
+    assert cost.dot_flops == pytest.approx(12 * 2 * 32 ** 3, rel=0.01)
+
+
+def test_parse_entry_and_params():
+    a = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    comps, entry = parse_hlo(_compile(lambda x: x + 1, a))
+    assert entry is not None
+    ops = {i.op for i in comps[entry]["instrs"].values()}
+    assert "parameter" in ops
+
+
+def test_narrow_source_through_convert():
+    """bf16 inputs upcast to f32 by XLA:CPU must charge bf16 streams."""
+    a = jax.ShapeDtypeStruct((256, 256), jnp.bfloat16)
+    b = jax.ShapeDtypeStruct((256, 256), jnp.bfloat16)
+    cost = analyze_hlo(_compile(
+        lambda x, y: (x.astype(jnp.float32) @ y.astype(jnp.float32)), a, b))
+    # operands charged at bf16 (2B) not f32 (4B): 2 inputs * 128KiB + out
+    assert cost.dot_bytes <= 2 * 256 * 256 * 2 + 256 * 256 * 4 + 1024

@@ -1,0 +1,125 @@
+"""Layer-level numerics: flash attention vs naive, RoPE/M-RoPE, SSD
+chunked vs recurrence, RWKV shift semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.models.mamba import ssd_chunked, ssd_step
+
+RNG = np.random.default_rng(0)
+
+
+def _naive_attn(q, k, v, causal=True):
+    h, kv = q.shape[2], k.shape[2]
+    kk, vv = L.repeat_kv(k, h // kv), L.repeat_kv(v, h // kv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / np.sqrt(q.shape[-1])
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vv)
+
+
+@settings(max_examples=12, deadline=None)
+@given(sq=st.integers(1, 70), h=st.sampled_from([2, 4]),
+       kv=st.sampled_from([1, 2]), hd=st.sampled_from([8, 16]),
+       qc=st.sampled_from([8, 32]), kc=st.sampled_from([8, 16]),
+       causal=st.booleans(), seed=st.integers(0, 99))
+def test_flash_attention_property(sq, h, kv, hd, qc, kc, causal, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((2, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, sq, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, sq, kv, hd)), jnp.float32)
+    got = L.flash_attention(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
+    want = _naive_attn(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_cross_lengths():
+    q = jnp.asarray(RNG.standard_normal((1, 9, 2, 8)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 33, 2, 8)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 33, 2, 8)), jnp.float32)
+    got = L.flash_attention(q, k, v, causal=False, q_chunk=4, kv_chunk=8)
+    want = _naive_attn(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_attention_decode_masks_beyond_len():
+    b, s, kv, hd = 2, 16, 2, 8
+    kc = jnp.asarray(RNG.standard_normal((b, s, kv, hd)), jnp.float32)
+    vc = jnp.asarray(RNG.standard_normal((b, s, kv, hd)), jnp.float32)
+    q = jnp.asarray(RNG.standard_normal((b, 1, 4, hd)), jnp.float32)
+    lens = jnp.asarray([5, 9])
+    out = L.attention_decode(q, kc, vc, lens)
+    # poisoning cache beyond len must not change the output
+    kc2 = kc.at[0, 5:].set(1e3).at[1, 9:].set(-1e3)
+    out2 = L.attention_decode(q, kc2, vc, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=1e-6)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE scores depend only on relative positions."""
+    q = jnp.asarray(RNG.standard_normal((1, 4, 2, 16)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 4, 2, 16)), jnp.float32)
+    p0 = jnp.arange(4)[None, :]
+    q0, k0 = L.apply_rope(q, k, p0)
+    q1, k1 = L.apply_rope(q, k, p0 + 37)
+    s0 = jnp.einsum("bqhd,bkhd->bhqk", q0, k0)
+    s1 = jnp.einsum("bqhd,bkhd->bhqk", q1, k1)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mrope_text_equals_rope():
+    """With all three position components equal, M-RoPE must reduce to
+    standard RoPE (text tokens in qwen2-vl)."""
+    q = jnp.asarray(RNG.standard_normal((1, 6, 2, 128)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 6, 2, 128)), jnp.float32)
+    pos = jnp.arange(6)[None, :]
+    p3 = jnp.broadcast_to(pos[None], (3, 1, 6))
+    qa, ka = L.apply_rope(q, k, pos, theta=1e6)
+    qb, kb = L.apply_mrope(q, k, p3, theta=1e6)
+    np.testing.assert_allclose(np.asarray(qa), np.asarray(qb), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ka), np.asarray(kb), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.integers(3, 50), chunk=st.sampled_from([4, 16, 64]),
+       h=st.sampled_from([2, 4]), seed=st.integers(0, 99))
+def test_ssd_chunked_equals_recurrence(s, chunk, h, seed):
+    rng = np.random.default_rng(seed)
+    b, p, g, n = 2, 8, 1, 8
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((b, s, h)),
+                                     jnp.float32))
+    a = -jnp.exp(jnp.asarray(rng.standard_normal(h) * 0.3, jnp.float32))
+    bm = jnp.asarray(rng.standard_normal((b, s, g, n)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, s, g, n)), jnp.float32)
+    y, final = ssd_chunked(x, dt, a, bm, cm, chunk=chunk)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        yt, state = ssd_step(state, x[:, t], dt[:, t], a, bm[:, t], cm[:, t])
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.stack(ys, 1)),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), np.asarray(state),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_norms():
+    x = jnp.asarray(RNG.standard_normal((2, 3, 16)) * 5, jnp.float32)
+    w = jnp.ones(16)
+    y = L.rms_norm(x, w)
+    rms = np.sqrt((np.asarray(y) ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+    yl = L.layer_norm(x, w, jnp.zeros(16))
+    np.testing.assert_allclose(np.asarray(yl).mean(-1), 0.0, atol=1e-5)

@@ -1,0 +1,95 @@
+"""Cycle simulator + energy/area: the paper's quantitative anchors."""
+import numpy as np
+import pytest
+
+from repro.core.energy import (area_table, espim_energy, gpu_dram_energy,
+                               newton_energy)
+from repro.core.pim_sim import simulate_matrix
+from repro.core.pruning import magnitude_prune
+from repro.core.sdds import ESPIMConfig
+
+RNG = np.random.default_rng(0)
+DENSE = RNG.standard_normal((512, 1024))
+
+
+def _sim(sparsity, **kw):
+    w = magnitude_prune(DENSE, sparsity)
+    return simulate_matrix(w, ESPIMConfig(), **kw), w
+
+
+def test_espim_beats_newton_at_high_sparsity():
+    reps, _ = _sim(0.9)
+    # speedup_over(other) = other.cycles / self.cycles: > 1 == espim faster
+    assert reps["espim"].speedup_over(reps["newton"]) > 1
+    ratio = reps["newton"].cycles / reps["espim"].cycles
+    assert 2.0 < ratio < 6.9  # bounded by the 11/16*10 ceiling
+
+
+def test_speedup_grows_with_sparsity():
+    prev = 0.0
+    for s in (0.5, 0.7, 0.9):
+        reps, _ = _sim(s)
+        ratio = reps["newton"].cycles / reps["espim"].cycles
+        assert ratio > prev
+        prev = ratio
+
+
+def test_newton_insensitive_to_sparsity():
+    r1, _ = _sim(0.5)
+    r2, _ = _sim(0.9)
+    assert r1["newton"].cycles == r2["newton"].cycles
+
+
+def test_ideal_nonpim_catches_newton_at_high_sparsity():
+    """Figure 10: pin-bound ideal crosses Newton as sparsity rises."""
+    lo, _ = _sim(0.5)
+    hi, _ = _sim(0.9)
+    assert lo["ideal_nonpim"].cycles > lo["newton"].cycles
+    assert hi["ideal_nonpim"].cycles < hi["newton"].cycles
+
+
+def test_espim_ideal_is_lower_bound():
+    reps, _ = _sim(0.8, archs=("espim", "espim_ideal", "newton"))
+    assert reps["espim_ideal"].cycles <= reps["espim"].cycles
+
+
+def test_spacea_worse_than_newton_at_low_sparsity():
+    reps, _ = _sim(0.5)
+    assert reps["spacea"].cycles > reps["newton"].cycles
+    reps, _ = _sim(0.9)
+    assert reps["spacea"].cycles < reps["newton"].cycles  # improves
+
+
+def test_energy_savings_anchor():
+    """Section V-E: ESPIM saves energy vs Newton, more at higher sparsity,
+    up to ~63%; at 50% the saving is small."""
+    savings = []
+    for s in (0.5, 0.9):
+        reps, w = _sim(s)
+        base = gpu_dram_energy(*w.shape).total
+        en = newton_energy(w.shape[0], w.shape[1], int((w != 0).sum()))
+        ee = espim_energy(reps["espim"].schedule)
+        savings.append(1 - ee.total / en.total)
+    assert savings[0] < 0.2          # modest at 50%
+    assert 0.45 < savings[1] < 0.75  # large at 90%
+    # "rest" (FIFOs+switch) must be a visible but minor component
+    reps, w = _sim(0.5)
+    ee = espim_energy(reps["espim"].schedule)
+    assert 0 < ee.rest < 0.25 * ee.total
+
+
+def test_area_table_matches_paper():
+    """Table IV: sparse-only ~30.8%, flexible ~39.7%, Newton 25%."""
+    t = area_table()
+    assert t["newton"]["total"] == pytest.approx(0.25, rel=0.01)
+    assert t["espim_sparse_only"]["total"] == pytest.approx(0.308, abs=0.02)
+    assert t["espim_flexible"]["total"] == pytest.approx(0.397, abs=0.02)
+    # under 5% over Newton for sparse-only (the headline claim)
+    assert t["espim_over_newton_sparse_only"] < 0.07
+
+
+def test_area_scales_with_fifo_depth():
+    small = area_table(ESPIMConfig(fifo_depth=4))
+    big = area_table(ESPIMConfig(fifo_depth=16))
+    assert (big["espim_sparse_only"]["total"]
+            > small["espim_sparse_only"]["total"])

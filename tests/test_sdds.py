@@ -1,0 +1,115 @@
+"""SDDS scheduler: correctness (dataflow == dot product), invariants,
+ablation ordering, and hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pruning import magnitude_prune
+from repro.core.sdds import ESPIMConfig, schedule_matrix
+
+RNG = np.random.default_rng(0)
+
+
+def _rand_sparse(r, c, sparsity, seed=0):
+    rng = np.random.default_rng(seed)
+    return magnitude_prune(rng.standard_normal((r, c)), sparsity)
+
+
+CFGS = {
+    "basic": ESPIMConfig(n_banks=4, prefetch=False, reorder=False,
+                         balance=False),
+    "prefetch": ESPIMConfig(n_banks=4, reorder=False, balance=False),
+    "reorder": ESPIMConfig(n_banks=4, balance=False),
+    "full": ESPIMConfig(n_banks=4),
+    "fullswitch": ESPIMConfig(n_banks=4, full_switch=True),
+}
+
+
+@pytest.mark.parametrize("name", list(CFGS))
+def test_sdds_dataflow_matches_dot(name):
+    w = _rand_sparse(96, 1024, 0.88, seed=3)
+    x = RNG.standard_normal(1024)
+    sched, y = schedule_matrix(w, CFGS[name], values=w, x=x, verify=True)
+    np.testing.assert_allclose(y, w @ x, rtol=1e-10, atol=1e-10)
+    assert sched.mac_ops == sched.nnz  # every nnz fires exactly once
+
+
+def test_ablation_ordering():
+    """Each optimization must not hurt: basic >= prefetch >= reorder >=
+    balance(full); full switch is the lower bound (Figure 11)."""
+    w = _rand_sparse(176, 2048, 0.9, seed=1)
+    slots = {}
+    for name, cfg in CFGS.items():
+        sched, _ = schedule_matrix(w, cfg)
+        slots[name] = sched.compute_slots
+    assert slots["basic"] >= slots["prefetch"] >= slots["reorder"]
+    assert slots["reorder"] >= slots["full"] * 0.98  # balance helps or ties
+    assert slots["fullswitch"] <= slots["full"]
+    # "little gap" between simplified and brute-force switch (Section V-B)
+    assert slots["full"] <= slots["fullswitch"] * 1.35
+
+
+def test_broadcasts_bounded_by_slices():
+    """Every slice of every vector-row is broadcast at most once per
+    stripe: comp_br <= slices/vr * n_stripes * n_vr."""
+    w = _rand_sparse(96, 1024, 0.8, seed=2)
+    cfg = CFGS["full"]
+    sched, _ = schedule_matrix(w, cfg)
+    bound = cfg.slices_per_vector_row * sched.n_stripes * sched.vector_rows
+    assert sched.comp_br <= bound
+
+
+def test_fifo_depth_monotonic():
+    """Longer FIFOs absorb more irregularity (Figure 12)."""
+    w = _rand_sparse(176, 2048, 0.9, seed=4)
+    prev = None
+    for depth in (2, 4, 8, 16):
+        cfg = ESPIMConfig(n_banks=4, fifo_depth=depth)
+        sched, _ = schedule_matrix(w, cfg)
+        if prev is not None:
+            assert sched.compute_slots <= prev * 1.02
+        prev = sched.compute_slots
+
+
+def test_more_banks_fewer_slots():
+    """Compute scales with banks (Figure 13)."""
+    w = _rand_sparse(256, 1024, 0.9, seed=5)
+    s8, _ = schedule_matrix(w, ESPIMConfig(n_banks=8))
+    s16, _ = schedule_matrix(w, ESPIMConfig(n_banks=16))
+    assert s16.compute_slots < s8.compute_slots
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    r=st.integers(8, 40),
+    c=st.integers(32, 600),
+    sparsity=st.floats(0.3, 0.95),
+    banks=st.sampled_from([2, 4]),
+    depth=st.sampled_from([2, 8]),
+    prefetch=st.booleans(),
+    seed=st.integers(0, 10_000),
+)
+def test_property_schedule_correct(r, c, sparsity, banks, depth, prefetch,
+                                   seed):
+    """For arbitrary patterns/configs the statically derived schedule must
+    execute the exact dot product with every nnz fired exactly once."""
+    rng = np.random.default_rng(seed)
+    w = magnitude_prune(rng.standard_normal((r, c)), sparsity)
+    x = rng.standard_normal(c)
+    cfg = ESPIMConfig(n_banks=banks, fifo_depth=depth, prefetch=prefetch)
+    sched, y = schedule_matrix(w, cfg, values=w, x=x, verify=True)
+    np.testing.assert_allclose(y, w @ x, rtol=1e-9, atol=1e-9)
+    assert sched.mac_ops == sched.nnz
+    assert sched.comp_nobr >= 0 and sched.comp_br >= 0
+
+
+def test_empty_and_dense_edge_cases():
+    x = RNG.standard_normal(64)
+    w0 = np.zeros((8, 64))
+    sched, y = schedule_matrix(w0, ESPIMConfig(n_banks=2), values=w0, x=x,
+                               verify=True)
+    np.testing.assert_allclose(y, 0)
+    wd = RNG.standard_normal((8, 64))  # fully dense through the sparse path
+    sched, y = schedule_matrix(wd, ESPIMConfig(n_banks=2), values=wd, x=x,
+                               verify=True)
+    np.testing.assert_allclose(y, wd @ x, rtol=1e-9)

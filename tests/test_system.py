@@ -1,0 +1,61 @@
+"""End-to-end behaviour: train a tiny LM, serve it, prune + pack its
+projections through the ESPIM pipeline, and check the whole SDDS->cycles
+->energy reporting chain runs on a real weight matrix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_config
+from repro.core.energy import espim_energy, gpu_dram_energy, newton_energy
+from repro.core.espim_linear import ESPIMLinear
+from repro.core.pim_sim import simulate_matrix
+from repro.core.pruning import magnitude_prune
+from repro.core.sdds import ESPIMConfig
+from repro.models import factory
+from repro.optim.adamw import OptConfig
+from repro.serve.engine import Request, ServeEngine
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def test_train_then_serve_then_espim(tmp_path):
+    cfg = get_config("llama7b-espim", reduced=True)
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    tr = Trainer(cfg, shape, mesh,
+                 OptConfig(warmup_steps=2, decay_steps=100, peak_lr=1e-3),
+                 TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=100,
+                               log_every=1000))
+    tr.init_or_resume()
+    first = float(tr.train(1)["loss"])
+    last = float(tr.train(20)["loss"])
+    assert last < first, "training must reduce loss"
+
+    # ---- serve the trained params ----------------------------------------
+    params = tr.state["params"]
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64)
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=[1, 2, 3], max_new_tokens=5))
+    stats = eng.run()
+    assert stats.requests_completed == 3
+
+    # ---- ESPIM pipeline on a trained projection ---------------------------
+    w = np.asarray(params["layers"]["attn"]["wq"][0], np.float32).T
+    lin = ESPIMLinear.from_dense(w, prune_sparsity=0.85)
+    assert lin.sparse
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(w.shape[1]),
+                    jnp.float32)
+    y = np.asarray(lin(x, impl="ref"))
+    wp = magnitude_prune(w, 0.85)
+    np.testing.assert_allclose(y, wp @ np.asarray(x), rtol=3e-4, atol=3e-4)
+
+    # ---- SDDS -> cycles -> energy on the same trained matrix --------------
+    reps = simulate_matrix(wp, ESPIMConfig(n_banks=8),
+                           archs=("espim", "newton"))
+    assert reps["espim"].cycles < reps["newton"].cycles
+    eg = gpu_dram_energy(*wp.shape).total
+    ee = espim_energy(reps["espim"].schedule).normalized(eg)
+    en = newton_energy(wp.shape[0], wp.shape[1],
+                       int((wp != 0).sum())).normalized(eg)
+    assert ee.total < en.total

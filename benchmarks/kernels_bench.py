@@ -1,9 +1,24 @@
-"""Kernel micro-benchmarks: ESPIM ELL spmv vs dense MV on this host's
-backend (jnp reference path — interpret-mode Pallas timing is meaningless
-on CPU), plus pack statistics.  On TPU the same harness times the Pallas
-kernels natively."""
+"""Kernel micro-benchmarks.
+
+Two suites, both timed on this host's backend through the jnp lowering
+paths (interpret-mode Pallas timing is meaningless on CPU; on TPU the same
+harness times the Pallas kernels natively by passing ``impl=None``):
+
+* ``unbatched``: ESPIM chunked-ELL spmv vs dense MV on the seed shapes,
+  plus pack statistics — continuity with earlier PRs' CSV rows.
+* ``batched_decode``: the serving hot path.  Old = the seed einsum
+  formulation (materializes the (R_pad, L, B) gathered tensor); new = the
+  fused per-chunk gather-accumulate over the column-chunked pack (peak
+  intermediate (R_pad, Lc, B), one chunk at a time).  Swept over batch
+  widths and chunk sizes on Table III LLaMA-7B serving matrices at the
+  paper's 90% sparsity.
+
+Besides the CSV rows, writes machine-readable ``BENCH_kernels.json`` in
+the working directory so the perf trajectory is tracked across PRs.
+"""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -11,33 +26,45 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pruning import magnitude_prune
-from repro.core.sparse_format import pack_ell
-from repro.kernels import ops
+from repro.core.sparse_format import chunk_pack, pack_ell
+from repro.kernels import ops, ref
 
 from benchmarks.common import csv_row
+
+JSON_PATH = "BENCH_kernels.json"
+
+# the decode sweep: Table III serving matrices (paper Section IV) at the
+# headline 90% sparsity, batch widths around continuous-batching slots
+DECODE_SHAPES = (
+    ("attention.wq", 4096, 4096, 0.9),
+    ("feed_forward.w2", 4096, 11008, 0.9),
+)
+DECODE_BATCH = (8, 16, 32)
+DECODE_CHUNKS = (512, 1024)
 
 
 def _time(fn, *args, iters=5):
     fn(*args).block_until_ready()  # compile + warm
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(iters):
+        t0 = time.perf_counter()
         out = fn(*args)
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / iters * 1e6
+        out.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
-def run(scale=None) -> list[str]:
-    rows = []
+def _bench_unbatched(rows: list[str], report: dict) -> None:
     rng = np.random.default_rng(0)
     for (r, c), s in (((1024, 4096), 0.9), ((2048, 2048), 0.8)):
         w = magnitude_prune(rng.standard_normal((r, c)).astype(np.float32), s)
         pack = pack_ell(w)
-        dev = ops.pack_to_device(pack)
+        dev = ops.pack_to_device(chunk_pack(pack, ops.DEFAULT_CHUNK_COLS))
         x = jnp.asarray(rng.standard_normal(c), jnp.float32)
         wd = jnp.asarray(w)
 
-        sparse_fn = jax.jit(lambda v, cc, xx: (
-            ops.espim_spmv(v, cc, xx, impl="ref")))
+        sparse_fn = jax.jit(lambda v, cc, xx: ops.espim_spmv(
+            v, cc, xx, chunk_cols=dev.chunk_cols, impl="ref"))
         dense_fn = jax.jit(lambda ww, xx: ww @ xx)
         us_sparse = _time(sparse_fn, dev.values, dev.cols, x)
         us_dense = _time(dense_fn, wd, x)
@@ -45,6 +72,84 @@ def run(scale=None) -> list[str]:
             f"kernels/espim_spmv/{r}x{c}_s{int(s*100)}", us_sparse,
             f"dense_us={us_dense:.1f};speedup={us_dense/us_sparse:.2f}x;"
             f"pad_frac={pack.stats.padding_frac:.2f};L={pack.stats.ell_width}"))
+        report["unbatched"].append({
+            "shape": f"{r}x{c}", "rows": r, "cols": c, "sparsity": s,
+            "sparse_us": round(us_sparse, 1), "dense_us": round(us_dense, 1),
+            "ell_width": pack.stats.ell_width,
+            "pad_frac": round(pack.stats.padding_frac, 4),
+        })
+
+
+def _bench_batched_decode(rows: list[str], report: dict) -> None:
+    rng = np.random.default_rng(1)
+    for name, r, c, s in DECODE_SHAPES:
+        w = magnitude_prune(rng.standard_normal((r, c)).astype(np.float32), s)
+        plain = pack_ell(w)
+        v2 = jnp.asarray(plain.values)
+        c2 = jnp.asarray(plain.cols, jnp.int32)
+        old_fn = jax.jit(ref.espim_spmv_batched_ref)
+
+        chunked = {cc: chunk_pack(plain, cc) for cc in DECODE_CHUNKS}
+        for b in DECODE_BATCH:
+            x = jnp.asarray(rng.standard_normal((c, b)), jnp.float32)
+            us_old = _time(old_fn, v2, c2, x, iters=3)
+            old_peak = plain.r_pad * plain.ell_width * b * 4
+            best = None
+            for cc, cp in chunked.items():
+                v3 = jnp.asarray(cp.values)
+                c3 = jnp.asarray(cp.cols, jnp.int32)
+                new_fn = jax.jit(lambda v, cl, xx, _cc=cc: ops.espim_spmv_batched(
+                    v, cl, xx, chunk_cols=_cc, impl="ref"))
+                us_new = _time(new_fn, v3, c3, x, iters=3)
+                entry = {
+                    "shape": name, "rows": r, "cols": c, "sparsity": s,
+                    "B": b, "chunk_cols": cc,
+                    "n_chunks": cp.n_chunks, "chunk_width": cp.chunk_width,
+                    "ell_width": plain.ell_width,
+                    "einsum_us": round(us_old, 1),
+                    "fused_us": round(us_new, 1),
+                    "speedup": round(us_old / us_new, 3),
+                    "einsum_peak_bytes": old_peak,
+                    "fused_peak_bytes": plain.r_pad * cp.chunk_width * b * 4,
+                }
+                report["batched_decode"].append(entry)
+                if best is None or us_new < best["fused_us"]:
+                    best = entry
+            rows.append(csv_row(
+                f"kernels/espim_spmv_batched/{name}_s{int(s*100)}_B{b}",
+                best["fused_us"],
+                f"einsum_us={us_old:.1f};speedup={best['speedup']:.2f}x;"
+                f"chunk_cols={best['chunk_cols']};"
+                f"peak_mb={best['fused_peak_bytes']/2**20:.1f}"
+                f"(was {old_peak/2**20:.1f})"))
+
+
+def run(scale=None) -> list[str]:
+    rows: list[str] = []
+    report = {
+        "schema": "espim-kernels-bench/v1",
+        "backend": jax.default_backend(),
+        "unbatched": [],
+        "batched_decode": [],
+    }
+    _bench_unbatched(rows, report)
+    _bench_batched_decode(rows, report)
+
+    b8 = [e for e in report["batched_decode"] if e["B"] >= 8]
+    by_case: dict = {}
+    for e in b8:  # best chunk size per (shape, B): what serving would pick
+        by_case.setdefault((e["shape"], e["B"]), []).append(e)
+    best_speedups = {
+        f"{shape}/B{b}": max(es, key=lambda e: e["speedup"])["speedup"]
+        for (shape, b), es in by_case.items()
+    }
+    report["summary"] = {
+        "fused_vs_einsum_best_speedup": best_speedups,
+        "min_speedup_at_B_ge_8": min(best_speedups.values())
+        if best_speedups else None,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
     return rows
 
 

@@ -13,7 +13,7 @@ from repro.core.energy import espim_energy, gpu_dram_energy, newton_energy
 from repro.core.pim_sim import simulate_matrix
 from repro.core.pruning import magnitude_prune
 from repro.core.sdds import ESPIMConfig, schedule_matrix
-from repro.core.sparse_format import pack_ell
+from repro.core.sparse_format import pack_ell_chunked
 from repro.kernels import ops
 
 rng = np.random.default_rng(0)
@@ -23,10 +23,14 @@ w = magnitude_prune(rng.standard_normal((512, 2048)).astype(np.float32), 0.9)
 x = rng.standard_normal(2048).astype(np.float32)
 print(f"weight 512x2048, sparsity={(w == 0).mean():.2f}")
 
-# 2. offline packing (the TPU-side SDDS analogue)
-pack = pack_ell(w)
-print(f"packed: L={pack.stats.ell_width}, padding(frac of slots acting as "
-      f"SDDS stalls)={pack.stats.padding_frac:.2f}")
+# 2. offline packing (the TPU-side SDDS analogue): column-chunked ELL —
+#    each (row-tile x chunk) kernel block reads one 512-wide slab of x
+pack = pack_ell_chunked(w, chunk_cols=512)
+print(f"packed: {pack.n_chunks} chunks x Lc={pack.chunk_width}, "
+      f"padding(frac of slots acting as SDDS stalls)="
+      f"{pack.stats.padding_frac:.2f}, x VMEM per step "
+      f"{pack.plan.x_bytes_per_step}B (full would be "
+      f"{pack.plan.x_bytes_full}B)")
 
 # 3. sparse MV through the Pallas kernel, checked against dense
 dev = ops.pack_to_device(pack)

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# One reproducible entrypoint: install deps, run tier-1 tests, then the
+# kernel benchmark smoke (emits BENCH_kernels.json).
+#
+#   scripts/ci.sh            # full run
+#   SKIP_INSTALL=1 scripts/ci.sh   # images with deps baked in
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ -z "${SKIP_INSTALL:-}" ]; then
+    # best-effort: pre-baked images (or offline hosts) run with what they have
+    python -m pip install -r requirements.txt || \
+        echo "WARN: pip install failed; continuing with installed packages"
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== kernel benchmark smoke =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/kernels_bench.py
+test -f BENCH_kernels.json && echo "BENCH_kernels.json written"

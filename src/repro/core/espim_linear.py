@@ -26,8 +26,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.pruning import magnitude_prune
-from repro.core.sparse_format import ELLPack, pack_ell, shard_ell
+from repro.core.sparse_format import pack_ell, pack_ell_chunked, shard_ell
 from repro.kernels import ops
 from repro.kernels import ref as kref
 
@@ -58,6 +59,7 @@ class ESPIMLinear:
         prune_sparsity: float | None = None,
         sparse_threshold: float = 0.5,
         row_tile: int = 128,
+        chunk_cols: int = ops.DEFAULT_CHUNK_COLS,
         dtype=jnp.float32,
     ) -> "ESPIMLinear":
         w = np.asarray(w)
@@ -66,7 +68,8 @@ class ESPIMLinear:
         density = float((w != 0).mean())
         sparse = density < sparse_threshold
         if sparse:
-            pack = pack_ell(w, row_tile=row_tile)
+            pack = pack_ell_chunked(w, row_tile=row_tile,
+                                    chunk_cols=chunk_cols)
             weights = ops.pack_to_device(pack, dtype=dtype)
         else:
             weights = jnp.asarray(w, dtype=dtype)
@@ -130,11 +133,10 @@ def espim_matvec_sharded(
         yp = ops.espim_spmv(values_s[0], cols_s[0], x_rep, impl=impl)
         return yp[None]
 
-    yp = jax.shard_map(
+    yp = compat.shard_map(
         bank,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P()),
         out_specs=P(axis),
-        check_vma=False,
     )(values, cols, x)
     return kref.scatter_rows_ref(yp.reshape(-1), perm.reshape(-1), n_rows)

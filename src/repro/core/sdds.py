@@ -44,7 +44,15 @@ import numpy as np
 
 from repro.core.pruning import sparten_balance
 
-__all__ = ["ESPIMConfig", "Schedule", "build_bank_streams", "schedule_matrix"]
+__all__ = [
+    "ESPIMConfig",
+    "Schedule",
+    "build_bank_streams",
+    "schedule_matrix",
+    "ChunkPlan",
+    "chunk_cells",
+    "plan_chunks",
+]
 
 
 # --------------------------------------------------------------------------
@@ -183,6 +191,102 @@ def _reorder_in_slice(cols: np.ndarray, tags: np.ndarray, cfg: ESPIMConfig):
             pos += n
             start = end
     return out_c, out_t
+
+
+# --------------------------------------------------------------------------
+# Column-chunk grouping (the broadcast-sharing pass restated for VMEM)
+# --------------------------------------------------------------------------
+def chunk_cells(cols: np.ndarray, chunk_cols: int,
+                n_chunks: int | None = None
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """SDDS pass: stable-bucket one row's cells by column chunk.
+
+    The paper advances one broadcast slice at a time and schedules every
+    cell that consumes the latched slice before moving on; on TPU the
+    "slice" is a ``chunk_cols``-wide slab of ``x`` resident in VMEM, and
+    this pass is the same reorder one level up: permute a row's cells so
+    all cells of chunk k are contiguous (and chunks appear in ascending
+    order), which lets a (row-tile x col-chunk) kernel block touch exactly
+    one ``x`` slab.  Stable, so any finer-grained order (ascending column,
+    switch-conflict reorder) survives within each chunk.
+
+    Returns ``(order, counts)``: ``cols[order]`` is chunk-grouped and
+    ``counts[k]`` is the number of cells in chunk k.
+    """
+    cols = np.asarray(cols)
+    if chunk_cols <= 0:
+        raise ValueError(f"chunk_cols must be positive, got {chunk_cols}")
+    chunk_of = cols // chunk_cols
+    if n_chunks is None:
+        n_chunks = int(chunk_of.max()) + 1 if cols.size else 1
+    elif cols.size and int(chunk_of.max()) >= n_chunks:
+        raise ValueError(
+            f"column {int(cols.max())} falls past chunk {n_chunks - 1} "
+            f"(chunk_cols={chunk_cols})")
+    order = np.argsort(chunk_of, kind="stable")
+    counts = np.bincount(chunk_of, minlength=n_chunks)
+    return order, counts
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkPlan:
+    """Static plan for the column-chunked layout of one matrix.
+
+    The analogue of the schedule's broadcast accounting: ``active_blocks``
+    counts the (row-tile x col-chunk) blocks holding at least one cell
+    (each costs one ``x``-slab load, the COMP-BR analogue), and
+    ``chunk_pad_frac`` is the extra static stall padding chunking adds on
+    top of plain ELL.  ``x_bytes_per_step`` vs ``x_bytes_full`` is the
+    VMEM-residency reduction the layout exists for.
+    """
+
+    chunk_cols: int
+    n_chunks: int
+    row_tile: int
+    chunk_width: int        # Lc: padded cells per (row, chunk)
+    nnz: int
+    active_blocks: int
+    total_blocks: int
+    chunk_pad_frac: float   # 1 - nnz / (R_pad * n_chunks * Lc)
+    x_bytes_full: int       # full-vector VMEM residency (old kernels)
+    x_bytes_per_step: int   # one chunk slab (new kernels)
+
+    @property
+    def block_occupancy(self) -> float:
+        return self.active_blocks / max(1, self.total_blocks)
+
+
+def plan_chunks(counts: np.ndarray, *, chunk_cols: int, row_tile: int,
+                n_cols: int, width_multiple: int = 8,
+                elem_bytes: int = 4) -> ChunkPlan:
+    """Derive the ChunkPlan from per-(row, chunk) cell counts.
+
+    ``counts`` is (R_pad, n_chunks) as produced by ``chunk_cells`` row by
+    row; the chunk width Lc is the global max rounded up for sublane
+    alignment (uniform width keeps the kernel grid regular — banks in
+    lockstep, exactly like the paper's global ELL width).
+    """
+    counts = np.asarray(counts)
+    r_pad, n_chunks = counts.shape
+    lc = int(counts.max()) if counts.size else 0
+    lc = max(width_multiple,
+             -(-max(lc, 1) // width_multiple) * width_multiple)
+    nnz = int(counts.sum())
+    n_tiles = max(1, r_pad // max(1, row_tile))
+    tile_active = counts.reshape(n_tiles, -1, n_chunks).sum(axis=1) > 0
+    padded = r_pad * n_chunks * lc
+    return ChunkPlan(
+        chunk_cols=chunk_cols,
+        n_chunks=n_chunks,
+        row_tile=row_tile,
+        chunk_width=lc,
+        nnz=nnz,
+        active_blocks=int(tile_active.sum()),
+        total_blocks=n_tiles * n_chunks,
+        chunk_pad_frac=1.0 - (nnz / padded if padded else 0.0),
+        x_bytes_full=n_cols * elem_bytes,
+        x_bytes_per_step=chunk_cols * elem_bytes,
+    )
 
 
 # --------------------------------------------------------------------------

@@ -14,6 +14,14 @@ permutes rows so every tile's max nnz, and therefore L, is near the mean:
 this is the load-balance contribution doing exactly its original job of
 minimizing dead slots.
 
+The *column-chunked* refinement (``pack_ell_chunked``, DESIGN.md section 3)
+applies the paper's broadcast-slice discipline to ``x`` itself: each row's
+cells are grouped by ``chunk_cols``-wide column chunk (the SDDS pass
+``repro.core.sdds.chunk_cells``), stored chunk-major with *chunk-local*
+column ids, so a (row-tile x col-chunk) kernel block only ever reads one
+``x`` slab — bounding VMEM residency at ``chunk_cols`` elements instead of
+the whole activation vector.
+
 All packing is offline host-side numpy (it is part of SDDS compilation);
 kernels consume the arrays as jnp inputs.
 """
@@ -24,8 +32,19 @@ import dataclasses
 import numpy as np
 
 from repro.core.pruning import row_tile_balance
+from repro.core.sdds import ChunkPlan, chunk_cells, plan_chunks
 
-__all__ = ["PackStats", "ELLPack", "pack_ell", "ell_to_dense", "shard_ell"]
+__all__ = [
+    "PackStats",
+    "ELLPack",
+    "ELLChunkedPack",
+    "pack_ell",
+    "pack_ell_chunked",
+    "chunk_pack",
+    "ell_to_dense",
+    "ell_chunked_to_dense",
+    "shard_ell",
+]
 
 LANE = 128  # TPU lane width: the adaptation of the paper's 16-elt slice
 
@@ -77,11 +96,7 @@ class ELLPack:
 
     def scatter_rows(self, y_packed: np.ndarray) -> np.ndarray:
         """Map packed-row outputs back to original row order."""
-        out_shape = (self.n_rows,) + tuple(y_packed.shape[1:])
-        y = np.zeros(out_shape, dtype=y_packed.dtype)
-        keep = self.perm >= 0
-        y[self.perm[keep]] = y_packed[keep]
-        return y
+        return _scatter_packed_rows(self.perm, self.n_rows, y_packed)
 
     def gather_perm(self) -> np.ndarray:
         """Inverse permutation: original row id -> packed position."""
@@ -93,6 +108,16 @@ class ELLPack:
 
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+def _scatter_packed_rows(perm: np.ndarray, n_rows: int,
+                         y_packed: np.ndarray) -> np.ndarray:
+    """Packed-order outputs -> original row order (perm < 0 = pad row)."""
+    out_shape = (n_rows,) + tuple(y_packed.shape[1:])
+    y = np.zeros(out_shape, dtype=y_packed.dtype)
+    keep = perm >= 0
+    y[perm[keep]] = y_packed[keep]
+    return y
 
 
 def pack_ell(
@@ -166,6 +191,133 @@ def pack_ell(
     )
 
 
+@dataclasses.dataclass
+class ELLChunkedPack:
+    """Column-chunked row-tile ELL pack (the fused-kernel layout).
+
+    ``values``/``cols``/``valid`` are (R_pad, n_chunks, chunk_width); cell
+    (i, k, l) belongs to column chunk k and ``cols`` holds the
+    *chunk-local* column id in [0, chunk_cols), so a kernel block gathers
+    straight into the k-th ``x`` slab.  Within a chunk, cells keep
+    ascending column order (``chunk_cells`` is stable).  Pad slots have
+    ``valid == False``, ``values == 0``, ``cols == 0``.
+    """
+
+    values: np.ndarray      # (R_pad, K, Lc) float32
+    cols: np.ndarray        # (R_pad, K, Lc) int32, chunk-local
+    valid: np.ndarray       # (R_pad, K, Lc) bool
+    perm: np.ndarray        # (R_pad,) int64, -1 = pad row
+    n_rows: int
+    n_cols: int
+    row_tile: int
+    chunk_cols: int
+    stats: PackStats
+    plan: ChunkPlan
+
+    @property
+    def r_pad(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def n_chunks(self) -> int:
+        return self.values.shape[1]
+
+    @property
+    def chunk_width(self) -> int:
+        return self.values.shape[2]
+
+    def scatter_rows(self, y_packed: np.ndarray) -> np.ndarray:
+        """Map packed-row outputs back to original row order."""
+        return _scatter_packed_rows(self.perm, self.n_rows, y_packed)
+
+
+def chunk_pack(pack: ELLPack, chunk_cols: int,
+               width_multiple: int = 8) -> ELLChunkedPack:
+    """Re-layout a row-tile ELL pack into the column-chunked format.
+
+    Runs the SDDS chunk pass (``chunk_cells``) per packed row: cells are
+    grouped chunk-major, column ids are rebased to the chunk, and the
+    uniform chunk width Lc is the global max per-(row, chunk) count
+    rounded to ``width_multiple`` (the lockstep-width discipline of the
+    plain pack, applied per chunk).
+    """
+    if chunk_cols <= 0:
+        raise ValueError(f"chunk_cols must be positive, got {chunk_cols}")
+    chunk_cols = min(chunk_cols, max(1, pack.n_cols))
+    n_chunks = -(-max(pack.n_cols, 1) // chunk_cols)
+    r_pad = pack.r_pad
+
+    row_cols = []
+    row_vals = []
+    counts = np.zeros((r_pad, n_chunks), dtype=np.int64)
+    for i in range(r_pad):
+        sel = pack.valid[i]
+        c = pack.cols[i, sel].astype(np.int64)
+        v = pack.values[i, sel]
+        order, cnt = chunk_cells(c, chunk_cols, n_chunks)
+        row_cols.append(c[order])
+        row_vals.append(v[order])
+        counts[i] = cnt
+
+    plan = plan_chunks(counts, chunk_cols=chunk_cols,
+                       row_tile=pack.row_tile, n_cols=pack.n_cols,
+                       width_multiple=width_multiple)
+    lc = plan.chunk_width
+    values = np.zeros((r_pad, n_chunks, lc), dtype=np.float32)
+    cols = np.zeros((r_pad, n_chunks, lc), dtype=np.int32)
+    valid = np.zeros((r_pad, n_chunks, lc), dtype=bool)
+    for i in range(r_pad):
+        off = 0
+        for k in range(n_chunks):
+            n = counts[i, k]
+            if n:
+                seg = slice(off, off + n)
+                values[i, k, :n] = row_vals[i][seg]
+                cols[i, k, :n] = row_cols[i][seg] - k * chunk_cols
+                valid[i, k, :n] = True
+                off += n
+
+    stats = dataclasses.replace(
+        pack.stats,
+        ell_width=n_chunks * lc,
+        padded_slots=r_pad * n_chunks * lc,
+        padding_frac=plan.chunk_pad_frac,
+    )
+    return ELLChunkedPack(
+        values=values,
+        cols=cols,
+        valid=valid,
+        perm=pack.perm.copy(),
+        n_rows=pack.n_rows,
+        n_cols=pack.n_cols,
+        row_tile=pack.row_tile,
+        chunk_cols=chunk_cols,
+        stats=stats,
+        plan=plan,
+    )
+
+
+def pack_ell_chunked(
+    w: np.ndarray,
+    row_tile: int = LANE,
+    chunk_cols: int = 512,
+    balance: bool = True,
+    width_multiple: int = 8,
+) -> ELLChunkedPack:
+    """Pack a dense-storage matrix straight into column-chunked ELL.
+
+    ``chunk_cols`` is the VMEM slab of ``x`` one kernel block consumes —
+    the TPU analogue of the paper's 16-element broadcast slice (scaled up
+    to amortize DMA, default 512 = 2KB f32 per lane).
+    """
+    return chunk_pack(
+        pack_ell(w, row_tile=row_tile, balance=balance,
+                 width_multiple=width_multiple),
+        chunk_cols,
+        width_multiple=width_multiple,
+    )
+
+
 def ell_to_dense(pack: ELLPack) -> np.ndarray:
     """Inverse of ``pack_ell`` (property-test oracle)."""
     w = np.zeros((pack.n_rows, pack.n_cols), dtype=pack.values.dtype)
@@ -175,6 +327,20 @@ def ell_to_dense(pack: ELLPack) -> np.ndarray:
             continue
         sel = pack.valid[i]
         w[src, pack.cols[i, sel]] = pack.values[i, sel]
+    return w
+
+
+def ell_chunked_to_dense(pack: ELLChunkedPack) -> np.ndarray:
+    """Inverse of ``pack_ell_chunked`` (property-test oracle)."""
+    w = np.zeros((pack.n_rows, pack.n_cols), dtype=pack.values.dtype)
+    for i in range(pack.r_pad):
+        src = pack.perm[i]
+        if src < 0:
+            continue
+        for k in range(pack.n_chunks):
+            sel = pack.valid[i, k]
+            w[src, pack.cols[i, k, sel] + k * pack.chunk_cols] = \
+                pack.values[i, k, sel]
     return w
 
 

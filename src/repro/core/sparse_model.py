@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.pruning import magnitude_prune
-from repro.core.sparse_format import pack_ell
+from repro.core.sparse_format import pack_ell_chunked
 from repro.kernels import ops
 from repro.kernels import ref as kref
 from repro.models import transformer as T
@@ -30,16 +30,22 @@ __all__ = ["sparsify_mlps", "decode_step_sparse", "sparse_stats"]
 _MLP_NAMES = ("w_gate", "w_up", "w_down")
 
 
-def _pack_stack(mats: list[np.ndarray], row_tile: int) -> dict:
-    """Pack a list of per-layer (out, in) matrices into stacked ELL arrays
-    (values/cols padded to the max width; perm per layer)."""
-    packs = [pack_ell(m, row_tile=row_tile) for m in mats]
-    lmax = max(p.ell_width for p in packs)
+def _pack_stack(mats: list[np.ndarray], row_tile: int,
+                chunk_cols: int) -> dict:
+    """Pack a list of per-layer (out, in) matrices into stacked
+    column-chunked ELL arrays (values/cols padded to the max chunk width;
+    perm per layer).  All layers of one projection share n_cols, so the
+    chunk grid (K, chunk_cols) is uniform across the stack."""
+    packs = [pack_ell_chunked(m, row_tile=row_tile, chunk_cols=chunk_cols)
+             for m in mats]
+    lmax = max(p.chunk_width for p in packs)
     rpad = max(p.r_pad for p in packs)
+    k = packs[0].n_chunks
+    assert all(p.n_chunks == k for p in packs), "uniform n_cols per stack"
 
-    def pad(p, arr, fill=0):
-        out = np.full((rpad, lmax), fill, arr.dtype)
-        out[: arr.shape[0], : arr.shape[1]] = arr
+    def pad(p, arr):
+        out = np.zeros((rpad, k, lmax), arr.dtype)
+        out[: arr.shape[0], :, : arr.shape[2]] = arr
         return out
 
     return {
@@ -50,17 +56,19 @@ def _pack_stack(mats: list[np.ndarray], row_tile: int) -> dict:
             [np.pad(p.perm, (0, rpad - p.r_pad), constant_values=-1)
              for p in packs]), jnp.int32),
         "n_rows": packs[0].n_rows,
+        "chunk_cols": packs[0].chunk_cols,
         "nnz": sum(p.stats.nnz for p in packs),
-        "padded": rpad * lmax * len(packs),
+        "padded": rpad * k * lmax * len(packs),
     }
 
 
 def sparsify_mlps(cfg: ModelConfig, params: dict, sparsity: float,
-                  row_tile: int = 128) -> dict:
+                  row_tile: int = 128,
+                  chunk_cols: int = ops.DEFAULT_CHUNK_COLS) -> dict:
     """Offline pipeline: prune + pack every MLP projection of a dense LM.
 
-    Returns {name: stacked pack} with per-layer leading dims, plus pruned
-    dense copies for verification."""
+    Returns {name: stacked chunked pack} with per-layer leading dims, plus
+    pruned dense copies for verification."""
     out: dict = {"sparsity": sparsity}
     mlp = params["layers"]["mlp"]
     for name in _MLP_NAMES:
@@ -70,16 +78,18 @@ def sparsify_mlps(cfg: ModelConfig, params: dict, sparsity: float,
         pruned = np.stack([magnitude_prune(w[i], sparsity)
                            for i in range(w.shape[0])])
         # y = x @ W  ->  rows of the packed matrix are W^T's rows (out dim)
-        out[name] = _pack_stack([m.T for m in pruned], row_tile)
+        out[name] = _pack_stack([m.T for m in pruned], row_tile, chunk_cols)
         out[f"{name}_pruned"] = jnp.asarray(pruned, mlp[name].dtype)
     return out
 
 
 def _sparse_proj(pack_l: dict, x: jnp.ndarray, impl: str) -> jnp.ndarray:
-    """x (B, 1, in) -> (B, 1, out) through one layer's ELL pack."""
+    """x (B, 1, in) -> (B, 1, out) through one layer's chunked ELL pack,
+    via the fused batched kernel (decode hot path)."""
     b = x.shape[0]
     xt = x.reshape(b, -1).T.astype(jnp.float32)        # (in, B)
     yp = ops.espim_spmv_batched(pack_l["values"], pack_l["cols"], xt,
+                                chunk_cols=pack_l["chunk_cols"],
                                 impl=impl)             # (R_pad, B)
     y = kref.scatter_rows_ref(yp, pack_l["perm"], pack_l["n_rows"])
     return y.T.reshape(b, 1, -1).astype(x.dtype)
@@ -94,7 +104,8 @@ def decode_step_sparse(cfg: ModelConfig, params: dict, sparse: dict,
     def layer_pack(name, i):
         p = sparse[name]
         return {"values": p["values"][i], "cols": p["cols"][i],
-                "perm": p["perm"][i], "n_rows": p["n_rows"]}
+                "perm": p["perm"][i], "n_rows": p["n_rows"],
+                "chunk_cols": p["chunk_cols"]}
 
     # explicit python loop over layers: the packs are per-layer arrays of
     # uniform width, so a scan also works; the loop keeps this reference

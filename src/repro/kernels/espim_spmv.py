@@ -1,28 +1,37 @@
-"""ESPIM sparse MV as a Pallas TPU kernel.
+"""ESPIM sparse MV as Pallas TPU kernels over the column-chunked ELL pack.
 
-TPU adaptation of the paper's datapath (see DESIGN.md section 2b):
+TPU adaptation of the paper's datapath (see DESIGN.md sections 2b/3):
 
-* a grid step processes a 128-row *tile* of the row-balanced ELL pack — the
-  analogue of a bank's k-MAC group sharing one vector broadcast;
-* the dense activation vector ``x`` lives in VMEM for the whole tile (the
-  "global buffer" + broadcast latch), so each element is fetched from HBM
-  once per tile rather than once per row;
-* the (values, cols) blocks for grid step i+1 are DMA'd while step i
-  computes (Pallas grid pipelining) — the decoupled iFIFO/eFIFO prefetch;
-* the per-cell select of the matching vector element is an in-VMEM gather:
-  the VPU's dynamic-gather path is the t_CCD-amortized equivalent of the
-  paper's simplified 4x11 switch.  (A one-hot MXU "switch" was napkin-mathed
-  and rejected: at 90% sparsity it costs ~16x the *dense* FLOPs — see
-  DESIGN.md.)
+* the grid is 3-D ``(row_tile, col_chunk, l_chunk)``: a step processes a
+  128-row tile of the row-balanced pack against ONE ``chunk_cols``-wide
+  slab of the activation vector ``x`` — the analogue of a bank's k-MAC
+  group consuming one broadcast slice.  The ``x`` BlockSpec indexes the
+  slab by the chunk coordinate, so VMEM residency is bounded at
+  ``chunk_cols`` elements (x B for the batched kernel) no matter how wide
+  the matrix is; the old kernels pinned the *entire* vector per tile;
+* the (values, cols) blocks for the next grid step are DMA'd while the
+  current one computes (Pallas grid pipelining) — the decoupled
+  iFIFO/eFIFO prefetch;
+* ``cols`` ids are *chunk-local* (the offline SDDS pass
+  ``repro.core.sdds.chunk_cells`` groups cells and rebases ids), so the
+  per-cell select is an in-VMEM gather into the active slab: the VPU's
+  dynamic-gather path as the t_CCD-amortized equivalent of the paper's
+  simplified 4x11 switch.  (A one-hot MXU "switch" was napkin-mathed and
+  rejected: at 90% sparsity it costs ~16x the *dense* FLOPs — DESIGN.md.)
+* the batched kernel accumulates through a per-l gather loop over
+  ``(row_tile, B)`` partials — it never materializes the
+  ``(row_tile, l_chunk, B)`` gathered tensor the old einsum formulation
+  built, which was an O(B * L) working-set blow-up on the decode hot path.
 
-The ELL padding slots carry value 0 and col 0; they are the statically
-scheduled stalls (SDDS dummy cells) and contribute nothing to the output.
+The chunk padding slots carry value 0 and local col 0; they are the
+statically scheduled stalls (SDDS dummy cells) and contribute nothing.
 
 Kernels are validated in interpret mode on CPU against ``ref.py``.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -31,117 +40,152 @@ from jax.experimental import pallas as pl
 __all__ = ["espim_spmv_pallas", "espim_spmv_batched_pallas"]
 
 
+def _check_chunked(values: jnp.ndarray, cols: jnp.ndarray) -> None:
+    if values.ndim != 3 or cols.ndim != 3:
+        raise ValueError(
+            "kernels consume the column-chunked ELL layout (R_pad, "
+            f"n_chunks, Lc); got values {values.shape}, cols {cols.shape}. "
+            "Pack with pack_ell_chunked / chunk_pack.")
+
+
+def _pad_inputs(values, cols, x, chunk_cols, block_r, block_l):
+    """Common host-side prep: validate shapes, pad Lc to a block_l multiple
+    and x up to n_chunks * chunk_cols (zero slots contribute nothing)."""
+    _check_chunked(values, cols)
+    r_pad, n_chunks, lc = values.shape
+    if r_pad % block_r:
+        # packs narrower than the default tile (small matrices, small
+        # row_tile): shrink to the largest compatible row block
+        block_r = math.gcd(r_pad, block_r)
+        if block_r < 8:
+            raise ValueError(
+                f"R_pad={r_pad} has no sublane-aligned row block "
+                f"(gcd with requested block_r gives {block_r})")
+    block_l = min(block_l, max(8, lc))
+    pad_l = (-lc) % block_l
+    if pad_l:
+        values = jnp.pad(values, ((0, 0), (0, 0), (0, pad_l)))
+        cols = jnp.pad(cols, ((0, 0), (0, 0), (0, pad_l)))
+        lc += pad_l
+    m_pad = n_chunks * chunk_cols - x.shape[0]
+    if m_pad < 0:
+        raise ValueError(
+            f"x has {x.shape[0]} rows > n_chunks*chunk_cols = "
+            f"{n_chunks * chunk_cols}")
+    if m_pad:
+        x = jnp.pad(x, ((0, m_pad),) + ((0, 0),) * (x.ndim - 1))
+    grid = (r_pad // block_r, n_chunks, lc // block_l)
+    return values, cols, x, grid, block_r, block_l
+
+
 def _spmv_kernel(values_ref, cols_ref, x_ref, out_ref):
-    """One (row-tile, L-chunk) grid step: out[tile] += sum_l v * x[cols]."""
-    j = pl.program_id(1)
+    """One (row-tile, col-chunk, l-chunk) step: out[tile] += v * x_k[cols]."""
+    k = pl.program_id(1)
+    j = pl.program_id(2)
     vals = values_ref[...].astype(jnp.float32)          # (RT, LC)
-    cols = cols_ref[...]                                # (RT, LC) int32
-    x = x_ref[...]                                      # (M,) resident slice
+    cols = cols_ref[...]                                # (RT, LC) local ids
+    x = x_ref[...]                                      # (CC,) active slab
     gathered = jnp.take(x, cols, axis=0).astype(jnp.float32)
     partial = jnp.sum(vals * gathered, axis=1)          # (RT,)
 
-    @pl.when(j == 0)
+    @pl.when((k == 0) & (j == 0))
     def _init():
         out_ref[...] = partial
 
-    @pl.when(j != 0)
-    def _acc():
-        out_ref[...] = out_ref[...] + partial
-
-
-@functools.partial(jax.jit, static_argnames=("block_r", "block_l", "interpret"))
-def espim_spmv_pallas(
-    values: jnp.ndarray,
-    cols: jnp.ndarray,
-    x: jnp.ndarray,
-    *,
-    block_r: int = 128,
-    block_l: int = 512,
-    interpret: bool = True,
-) -> jnp.ndarray:
-    """y_packed (R_pad,) f32 = ELL(values, cols) @ x.
-
-    R_pad must be a multiple of ``block_r``; L is padded here to a multiple
-    of ``block_l`` (cheap: zeros contribute nothing).
-    """
-    r_pad, ell_l = values.shape
-    if r_pad % block_r:
-        raise ValueError(f"R_pad={r_pad} not a multiple of block_r={block_r}")
-    block_l = min(block_l, max(8, ell_l))
-    pad_l = (-ell_l) % block_l
-    if pad_l:
-        values = jnp.pad(values, ((0, 0), (0, pad_l)))
-        cols = jnp.pad(cols, ((0, 0), (0, pad_l)))
-        ell_l += pad_l
-    m = x.shape[0]
-
-    grid = (r_pad // block_r, ell_l // block_l)
-    return pl.pallas_call(
-        _spmv_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_r, block_l), lambda i, j: (i, j)),
-            pl.BlockSpec((block_r, block_l), lambda i, j: (i, j)),
-            pl.BlockSpec((m,), lambda i, j: (0,)),  # x resident across tile
-        ],
-        out_specs=pl.BlockSpec((block_r,), lambda i, j: (i,)),
-        out_shape=jax.ShapeDtypeStruct((r_pad,), jnp.float32),
-        interpret=interpret,
-    )(values, cols, x)
-
-
-def _spmv_batched_kernel(values_ref, cols_ref, x_ref, out_ref):
-    """Batched decode variant: x (M, B) resident; out (RT, B)."""
-    j = pl.program_id(1)
-    vals = values_ref[...].astype(jnp.float32)           # (RT, LC)
-    cols = cols_ref[...]                                 # (RT, LC)
-    x = x_ref[...]                                       # (M, B)
-    gathered = jnp.take(x, cols, axis=0).astype(jnp.float32)  # (RT, LC, B)
-    partial = jnp.einsum("rl,rlb->rb", vals, gathered)
-
-    @pl.when(j == 0)
-    def _init():
-        out_ref[...] = partial
-
-    @pl.when(j != 0)
+    @pl.when((k != 0) | (j != 0))
     def _acc():
         out_ref[...] = out_ref[...] + partial
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_r", "block_l", "interpret")
+    jax.jit,
+    static_argnames=("chunk_cols", "block_r", "block_l", "interpret"),
+)
+def espim_spmv_pallas(
+    values: jnp.ndarray,
+    cols: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    chunk_cols: int,
+    block_r: int = 128,
+    block_l: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y_packed (R_pad,) f32 = chunked-ELL(values, cols) @ x.
+
+    ``values``/``cols`` are (R_pad, n_chunks, Lc) with chunk-local column
+    ids; ``block_r`` shrinks to the largest divisor of R_pad when needed.
+    Lc is padded here to a multiple of ``block_l`` and x to
+    ``n_chunks * chunk_cols`` (cheap: zeros contribute nothing).
+    """
+    values, cols, x, grid, block_r, block_l = _pad_inputs(
+        values, cols, x, chunk_cols, block_r, block_l)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, None, block_l), lambda i, k, j: (i, k, j)),
+            pl.BlockSpec((block_r, None, block_l), lambda i, k, j: (i, k, j)),
+            pl.BlockSpec((chunk_cols,), lambda i, k, j: (k,)),  # one slab
+        ],
+        out_specs=pl.BlockSpec((block_r,), lambda i, k, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((values.shape[0],), jnp.float32),
+        interpret=interpret,
+    )(values, cols, x)
+
+
+def _spmv_batched_kernel(values_ref, cols_ref, x_ref, out_ref):
+    """Batched decode step: fused per-l gather-accumulate over (RT, B)
+    partials — no (RT, LC, B) intermediate is ever live."""
+    k = pl.program_id(1)
+    j = pl.program_id(2)
+    vals = values_ref[...].astype(jnp.float32)           # (RT, LC)
+    cols = cols_ref[...]                                 # (RT, LC) local ids
+    x = x_ref[...]                                       # (CC, B) active slab
+
+    def body(l, acc):
+        xl = jnp.take(x, cols[:, l], axis=0).astype(jnp.float32)  # (RT, B)
+        return acc + vals[:, l][:, None] * xl
+
+    partial = jax.lax.fori_loop(
+        0, vals.shape[1], body, jnp.zeros(out_ref.shape, jnp.float32))
+
+    @pl.when((k == 0) & (j == 0))
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when((k != 0) | (j != 0))
+    def _acc():
+        out_ref[...] = out_ref[...] + partial
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk_cols", "block_r", "block_l", "interpret"),
 )
 def espim_spmv_batched_pallas(
     values: jnp.ndarray,
     cols: jnp.ndarray,
     x: jnp.ndarray,
     *,
+    chunk_cols: int,
     block_r: int = 128,
     block_l: int = 256,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """y_packed (R_pad, B) f32 = ELL(values, cols) @ x (M, B)."""
-    r_pad, ell_l = values.shape
-    m, b = x.shape
-    if r_pad % block_r:
-        raise ValueError(f"R_pad={r_pad} not a multiple of block_r={block_r}")
-    block_l = min(block_l, max(8, ell_l))
-    pad_l = (-ell_l) % block_l
-    if pad_l:
-        values = jnp.pad(values, ((0, 0), (0, pad_l)))
-        cols = jnp.pad(cols, ((0, 0), (0, pad_l)))
-        ell_l += pad_l
-
-    grid = (r_pad // block_r, ell_l // block_l)
+    """y_packed (R_pad, B) f32 = chunked-ELL(values, cols) @ x (M, B)."""
+    values, cols, x, grid, block_r, block_l = _pad_inputs(
+        values, cols, x, chunk_cols, block_r, block_l)
+    b = x.shape[1]
     return pl.pallas_call(
         _spmv_batched_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_r, block_l), lambda i, j: (i, j)),
-            pl.BlockSpec((block_r, block_l), lambda i, j: (i, j)),
-            pl.BlockSpec((m, b), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_r, None, block_l), lambda i, k, j: (i, k, j)),
+            pl.BlockSpec((block_r, None, block_l), lambda i, k, j: (i, k, j)),
+            pl.BlockSpec((chunk_cols, b), lambda i, k, j: (k, 0)),
         ],
-        out_specs=pl.BlockSpec((block_r, b), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((r_pad, b), jnp.float32),
+        out_specs=pl.BlockSpec((block_r, b), lambda i, k, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((values.shape[0], b), jnp.float32),
         interpret=interpret,
     )(values, cols, x)

@@ -3,18 +3,24 @@
 Dispatch policy: Pallas kernels run natively on TPU and in ``interpret=True``
 mode elsewhere (this container is CPU-only; interpret mode executes the
 kernel body in Python for correctness validation).  ``impl="ref"`` forces
-the pure-jnp oracle — used by the tests and as the lowering path inside
-large jitted graphs where a Python-interpreted kernel would be wasteful.
+the pure-jnp lowering — used by the tests and as the path inside large
+jitted graphs where a Python-interpreted kernel would be wasteful.  For the
+chunked layout the "ref" lowering of the batched op is itself the fused
+per-chunk gather-accumulate (same schedule as the kernel, no
+(R_pad, L, B) materialization).
+
+Both the seed (R_pad, L) ELL layout and the column-chunked (R_pad, K, Lc)
+layout are accepted; the array rank selects the family.  Only the chunked
+family has Pallas kernels — the plain layout survives for the sharded
+matvec path and lowers through the einsum reference.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparse_format import ELLPack
+from repro.core.sparse_format import ELLChunkedPack, ELLPack, chunk_pack
 from repro.kernels import ref as _ref
 from repro.kernels.dense_mv import dense_mv_pallas
 from repro.kernels.espim_spmv import espim_spmv_batched_pallas, espim_spmv_pallas
@@ -27,7 +33,10 @@ __all__ = [
     "espim_matvec",
     "EspimWeights",
     "pack_to_device",
+    "DEFAULT_CHUNK_COLS",
 ]
+
+DEFAULT_CHUNK_COLS = 512
 
 
 def on_tpu() -> bool:
@@ -42,18 +51,55 @@ def _resolve(impl: str | None) -> str:
     return impl
 
 
-def espim_spmv(values, cols, x, *, impl: str | None = None) -> jnp.ndarray:
-    """ELL sparse MV: (R_pad, L) x (M,) -> (R_pad,) f32."""
-    if _resolve(impl) == "ref":
-        return _ref.espim_spmv_ref(values, cols, x)
-    return espim_spmv_pallas(values, cols, x, interpret=not on_tpu())
+def _dispatch_spmv(values, cols, x, chunk_cols, impl,
+                   plain_ref, chunked_ref, pallas_kernel) -> jnp.ndarray:
+    """Layout/impl dispatch shared by the (un)batched ops: plain
+    (R_pad, L) packs lower through the reference only; chunked
+    (R_pad, K, Lc) packs pick the Pallas kernel or the chunked ref."""
+    impl = _resolve(impl)
+    if values.ndim == 2:
+        if impl == "pallas":
+            raise ValueError(
+                "the Pallas kernels consume the column-chunked layout; "
+                "re-pack with pack_ell_chunked (plain ELL is ref-only)")
+        return plain_ref(values, cols, x)
+    if chunk_cols is None:
+        raise ValueError(
+            "chunk_cols is required for the chunked (R_pad, K, Lc) layout; "
+            f"got values of shape {values.shape}")
+    cc = int(chunk_cols)
+    n_chunks = values.shape[1]
+    if n_chunks > 1 and n_chunks * cc - x.shape[0] >= cc:
+        # the last chunk would sit entirely past x: chunk_cols cannot be
+        # the width this pack was built with (silent-corruption guard)
+        raise ValueError(
+            f"chunk_cols={cc} inconsistent with pack: {n_chunks} chunks x "
+            f"{cc} cols span past x of length {x.shape[0]}")
+    if impl == "ref":
+        return chunked_ref(values, cols, x, cc)
+    return pallas_kernel(values, cols, x, chunk_cols=cc,
+                         interpret=not on_tpu())
 
 
-def espim_spmv_batched(values, cols, x, *, impl: str | None = None) -> jnp.ndarray:
-    """Batched ELL sparse MV: (R_pad, L) x (M, B) -> (R_pad, B) f32."""
-    if _resolve(impl) == "ref":
-        return _ref.espim_spmv_batched_ref(values, cols, x)
-    return espim_spmv_batched_pallas(values, cols, x, interpret=not on_tpu())
+def espim_spmv(values, cols, x, *, chunk_cols: int | None = None,
+               impl: str | None = None) -> jnp.ndarray:
+    """ELL sparse MV -> (R_pad,) f32.
+
+    Chunked layout: values/cols (R_pad, K, Lc) + ``chunk_cols``.
+    Plain layout: values/cols (R_pad, L), reference lowering only.
+    """
+    return _dispatch_spmv(values, cols, x, chunk_cols, impl,
+                          _ref.espim_spmv_ref, _ref.espim_spmv_chunked_ref,
+                          espim_spmv_pallas)
+
+
+def espim_spmv_batched(values, cols, x, *, chunk_cols: int | None = None,
+                       impl: str | None = None) -> jnp.ndarray:
+    """Batched ELL sparse MV: x (M, B) -> (R_pad, B) f32 (see espim_spmv)."""
+    return _dispatch_spmv(values, cols, x, chunk_cols, impl,
+                          _ref.espim_spmv_batched_ref,
+                          _ref.espim_spmv_batched_chunked_ref,
+                          espim_spmv_batched_pallas)
 
 
 def dense_mv(w, x, *, impl: str | None = None) -> jnp.ndarray:
@@ -67,18 +113,21 @@ def dense_mv(w, x, *, impl: str | None = None) -> jnp.ndarray:
 # High-level packed-weights API
 # --------------------------------------------------------------------------
 class EspimWeights:
-    """Device-resident ESPIM pack of one weight matrix (W @ x semantics,
-    W of shape (n_out, n_in))."""
+    """Device-resident column-chunked ESPIM pack of one weight matrix
+    (W @ x semantics, W of shape (n_out, n_in))."""
 
-    def __init__(self, values, cols, perm, n_rows: int, n_cols: int):
-        self.values = values          # (R_pad, L)
-        self.cols = cols              # (R_pad, L) int32
+    def __init__(self, values, cols, perm, n_rows: int, n_cols: int,
+                 chunk_cols: int):
+        self.values = values          # (R_pad, K, Lc)
+        self.cols = cols              # (R_pad, K, Lc) int32, chunk-local
         self.perm = perm              # (R_pad,) int32, -1 = pad row
         self.n_rows = n_rows
         self.n_cols = n_cols
+        self.chunk_cols = chunk_cols
 
     def tree_flatten(self):
-        return (self.values, self.cols, self.perm), (self.n_rows, self.n_cols)
+        return ((self.values, self.cols, self.perm),
+                (self.n_rows, self.n_cols, self.chunk_cols))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -92,14 +141,22 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def pack_to_device(pack: ELLPack, dtype=jnp.float32) -> EspimWeights:
-    """Move an offline ELLPack onto the device arrays the kernels consume."""
+def pack_to_device(pack: ELLPack | ELLChunkedPack, dtype=jnp.float32,
+                   chunk_cols: int = DEFAULT_CHUNK_COLS) -> EspimWeights:
+    """Move an offline pack onto the device arrays the kernels consume.
+
+    A plain ELLPack is run through the SDDS chunk pass first (with
+    ``chunk_cols``); an ELLChunkedPack is uploaded as-is.
+    """
+    if isinstance(pack, ELLPack):
+        pack = chunk_pack(pack, chunk_cols)
     return EspimWeights(
         values=jnp.asarray(pack.values, dtype=dtype),
         cols=jnp.asarray(pack.cols, dtype=jnp.int32),
         perm=jnp.asarray(np.asarray(pack.perm), dtype=jnp.int32),
         n_rows=pack.n_rows,
         n_cols=pack.n_cols,
+        chunk_cols=pack.chunk_cols,
     )
 
 
@@ -107,9 +164,11 @@ def espim_matvec(w: EspimWeights, x: jnp.ndarray, *, impl: str | None = None
                  ) -> jnp.ndarray:
     """y (n_rows,) or (n_rows, B) = W @ x with packed-row unscatter."""
     if x.ndim == 1:
-        yp = espim_spmv(w.values, w.cols, x, impl=impl)
+        yp = espim_spmv(w.values, w.cols, x, chunk_cols=w.chunk_cols,
+                        impl=impl)
     elif x.ndim == 2:
-        yp = espim_spmv_batched(w.values, w.cols, x, impl=impl)
+        yp = espim_spmv_batched(w.values, w.cols, x,
+                                chunk_cols=w.chunk_cols, impl=impl)
     else:
         raise ValueError(f"x must be 1-D or 2-D, got {x.shape}")
     return _ref.scatter_rows_ref(yp, w.perm, w.n_rows)

@@ -2,13 +2,31 @@
 
 These are the ground truth the Pallas kernels are swept against in
 ``tests/test_kernels.py`` (shapes x dtypes, ``assert_allclose``).
+
+Two families:
+
+* plain row-tile ELL ((R_pad, L) + global column ids) — the seed layout,
+  still used by the sharded matvec path;
+* column-chunked ELL ((R_pad, K, Lc) + chunk-local ids) — the fused-kernel
+  layout.  ``espim_spmv_batched_chunked_ref`` is written as the same
+  per-chunk gather-accumulate the Pallas kernel runs (one (R, Lc, B) slab
+  live at a time), so it doubles as the fast lowering path inside jitted
+  serving graphs on hosts where interpret-mode Pallas would be wasteful;
+  ``espim_spmv_chunked_ref`` is the simple global-gather oracle.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["espim_spmv_ref", "espim_spmv_batched_ref", "dense_mv_ref",
-           "scatter_rows_ref"]
+__all__ = [
+    "espim_spmv_ref",
+    "espim_spmv_batched_ref",
+    "espim_spmv_chunked_ref",
+    "espim_spmv_batched_chunked_ref",
+    "dense_mv_ref",
+    "scatter_rows_ref",
+]
 
 
 def espim_spmv_ref(values: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray
@@ -30,6 +48,54 @@ def espim_spmv_batched_ref(values: jnp.ndarray, cols: jnp.ndarray,
     return jnp.einsum(
         "rl,rlb->rb", values.astype(jnp.float32), xv.astype(jnp.float32)
     )
+
+
+def _pad_x_to_chunks(x: jnp.ndarray, n_chunks: int, chunk_cols: int
+                     ) -> jnp.ndarray:
+    pad = n_chunks * chunk_cols - x.shape[0]
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x
+
+
+def espim_spmv_chunked_ref(values: jnp.ndarray, cols: jnp.ndarray,
+                           x: jnp.ndarray, chunk_cols: int) -> jnp.ndarray:
+    """Chunked-ELL sparse MV oracle.
+
+    values, cols: (R_pad, K, Lc) with chunk-local ids; x: (M,).
+    Rebases ids to global and gathers once — the simple ground truth.
+    Returns y_packed: (R_pad,) f32.
+    """
+    k = values.shape[1]
+    xp = _pad_x_to_chunks(x, k, chunk_cols)
+    glob = cols + (jnp.arange(k, dtype=cols.dtype) * chunk_cols)[None, :, None]
+    xv = jnp.take(xp, glob, axis=0)                     # (R_pad, K, Lc)
+    return jnp.sum(values.astype(jnp.float32) * xv.astype(jnp.float32),
+                   axis=(1, 2))
+
+
+def espim_spmv_batched_chunked_ref(values: jnp.ndarray, cols: jnp.ndarray,
+                                   x: jnp.ndarray, chunk_cols: int
+                                   ) -> jnp.ndarray:
+    """Fused batched chunked-ELL MV: x is (M, B); returns (R_pad, B) f32.
+
+    Mirrors the Pallas kernel's schedule in jnp: an unrolled loop over
+    column chunks, each step gathering from one ``(chunk_cols, B)`` slab
+    and reducing immediately — the live intermediate is (R_pad, Lc, B)
+    for a single chunk, never the full (R_pad, K*Lc, B) the seed einsum
+    path materialized.
+    """
+    r_pad, k, _lc = values.shape
+    b = x.shape[1]
+    xp = _pad_x_to_chunks(x, k, chunk_cols)
+    acc = jnp.zeros((r_pad, b), jnp.float32)
+    for i in range(k):
+        xk = jax.lax.slice_in_dim(xp, i * chunk_cols, (i + 1) * chunk_cols,
+                                  axis=0)
+        g = jnp.take(xk, cols[:, i], axis=0)            # (R_pad, Lc, B)
+        acc = acc + jnp.einsum("rl,rlb->rb", values[:, i].astype(jnp.float32),
+                               g.astype(jnp.float32))
+    return acc
 
 
 def dense_mv_ref(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:

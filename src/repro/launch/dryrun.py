@@ -29,6 +29,7 @@ from functools import partial  # noqa: E402
 
 import jax  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.configs.base import SHAPES  # noqa: E402
 from repro.configs.registry import (  # noqa: E402
     ASSIGNED, get_config, skip_reason)
@@ -88,7 +89,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     fn, args, in_sh, donate = _entry_fn_and_specs(cfg, shape, mesh, ocfg)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(fn, in_shardings=in_sh,
                           donate_argnums=donate).lower(*args)
         t_lower = time.time() - t0

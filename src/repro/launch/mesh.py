@@ -8,7 +8,8 @@ import; everything else sees the real device count).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
@@ -20,13 +21,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     second data-parallel tier across ICI-islands) when multi_pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: int = 1):
     """Whatever this host has (tests / examples)."""
     n = jax.device_count()
     mp = min(model_parallel, n)
-    return jax.make_mesh((n // mp, mp), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((n // mp, mp), ("data", "model"))

@@ -39,8 +39,9 @@ def shard_hint(x: jnp.ndarray, *logical) -> jnp.ndarray:
     None -> unspecified) wherever an ambient mesh exists; it is a no-op
     otherwise, and skips any axis whose extent does not divide the dim.
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
+    from repro.compat import get_abstract_mesh
+    mesh = get_abstract_mesh()
+    if mesh is None:
         return x
     names = mesh.axis_names
     spec = []

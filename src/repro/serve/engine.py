@@ -6,6 +6,11 @@ their slot, queued requests claim it (cache rows reset via per-slot length
 decode path — correct by the decode/forward parity tests; a production
 deployment would use ``prefill_fn`` + cache splice, which the engine
 exposes as an upgrade point.
+
+Pass ``sparse`` (from ``sparsify_mlps``) to serve from the ESPIM
+column-chunked format: every decode tick then runs the MLP projections
+through the fused batched SpMV across all active slots at once — the
+batched kernel IS the continuous-batching hot path.
 """
 from __future__ import annotations
 
@@ -18,7 +23,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import factory
-from repro.serve.serve_step import serve_step_fn
+from repro.serve.serve_step import serve_step_fn, serve_step_sparse_fn
 
 __all__ = ["Request", "EngineStats", "ServeEngine"]
 
@@ -42,21 +47,31 @@ class EngineStats:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, batch_slots: int,
-                 max_len: int, temperature: float = 0.0):
+                 max_len: int, temperature: float = 0.0,
+                 sparse: dict | None = None, impl: str = "ref"):
         self.cfg = cfg
         self.params = params
         self.b = batch_slots
         self.max_len = max_len
         self.temperature = temperature
+        self.sparse = sparse
         self.cache = factory.init_cache(cfg, batch_slots, max_len)
         self.slots: list[Request | None] = [None] * batch_slots
         self.pending: deque[Request] = deque()
         self.prompt_cursor = [0] * batch_slots
         self.cur_token = np.zeros((batch_slots, 1), np.int32)
         self.stats = EngineStats()
-        self._step = jax.jit(
-            lambda p, c, b: serve_step_fn(cfg, p, c, b,
-                                          temperature=temperature))
+        if sparse is None:
+            self._step = jax.jit(
+                lambda p, c, b: serve_step_fn(cfg, p, c, b,
+                                              temperature=temperature))
+        else:
+            # ESPIM-format decode: the packs are closure constants so the
+            # fused kernel sees static chunk geometry
+            self._step = jax.jit(
+                lambda p, c, b: serve_step_sparse_fn(
+                    cfg, p, sparse, c, b, temperature=temperature,
+                    impl=impl))
 
     def submit(self, req: Request) -> None:
         self.pending.append(req)

@@ -1,6 +1,9 @@
 """The jitted serving step: one decode step + greedy/temperature sampling,
-with KV-cache shardings.  ``serve_step`` is what the decode-shape dry-run
-cells lower (one new token against a seq_len-deep cache)."""
+with KV-cache shardings.  ``serve_step_fn`` is what the decode-shape dry-run
+cells lower (one new token against a seq_len-deep cache);
+``serve_step_sparse_fn`` is the ESPIM-format variant whose MLP projections
+run through the fused batched chunked-ELL kernel (the paper's deployment:
+decode from the compressed format)."""
 from __future__ import annotations
 
 from functools import partial
@@ -9,18 +12,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import sparse_model
 from repro.models import factory
 from repro.sharding import partition
 
-__all__ = ["serve_step_fn", "make_serve_step", "prefill_fn"]
+__all__ = ["serve_step_fn", "serve_step_sparse_fn", "make_serve_step",
+           "prefill_fn"]
 
 
-def serve_step_fn(cfg: ModelConfig, params, cache: dict, batch: dict,
-                  temperature: float = 0.0):
-    """Returns (next_tokens (B, 1), logits (B, 1, V), new_cache)."""
-    logits, cache = factory.decode_step(cfg, params, cache, batch)
+def _sample_next(cfg: ModelConfig, logits, batch: dict, temperature: float):
+    """Greedy/temperature sampling over the vocab (padding masked)."""
     last = logits[:, -1, :].astype(jnp.float32)
-    # mask vocab padding
     if cfg.padded_vocab != cfg.vocab_size:
         pad = cfg.padded_vocab - cfg.vocab_size
         last = jnp.concatenate(
@@ -31,7 +33,27 @@ def serve_step_fn(cfg: ModelConfig, params, cache: dict, batch: dict,
         nxt = jax.random.categorical(key, last / temperature, axis=-1)
     else:
         nxt = jnp.argmax(last, axis=-1)
-    return nxt[:, None].astype(jnp.int32), logits, cache
+    return nxt[:, None].astype(jnp.int32)
+
+
+def serve_step_fn(cfg: ModelConfig, params, cache: dict, batch: dict,
+                  temperature: float = 0.0):
+    """Returns (next_tokens (B, 1), logits (B, 1, V), new_cache)."""
+    logits, cache = factory.decode_step(cfg, params, cache, batch)
+    return _sample_next(cfg, logits, batch, temperature), logits, cache
+
+
+def serve_step_sparse_fn(cfg: ModelConfig, params, sparse: dict,
+                         cache: dict, batch: dict,
+                         temperature: float = 0.0, impl: str = "ref"):
+    """ESPIM-format decode step: MLPs run from the column-chunked packs
+    through the fused batched SpMV (``sparse`` from ``sparsify_mlps``).
+
+    Same contract as ``serve_step_fn``: (next_tokens, logits, new_cache).
+    """
+    logits, cache = sparse_model.decode_step_sparse(
+        cfg, params, sparse, cache, batch, impl=impl)
+    return _sample_next(cfg, logits, batch, temperature), logits, cache
 
 
 def prefill_fn(cfg: ModelConfig, params, batch: dict):

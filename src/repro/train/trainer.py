@@ -8,6 +8,8 @@ import time
 import jax
 import numpy as np
 
+from repro import compat
+
 from repro.checkpoint import ckpt
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.data.pipeline import SyntheticPipeline
@@ -69,7 +71,7 @@ class Trainer:
             self.step = extra.get("data_state", {}).get("step", step)
             return "resumed", self.step
         key = jax.random.PRNGKey(self.tcfg.seed)
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             state = ts.init_train_state(
                 self.cfg, self.ocfg, key,
                 compress_grads=self.tcfg.compress_grads)
@@ -90,7 +92,7 @@ class Trainer:
         if self.state is None:
             self.init_or_resume()
         metrics = {}
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             for _ in range(n_steps):
                 batch = self.pipe.batch_at(self.step)
                 batch = partition.logical_to_sharding(

@@ -1,0 +1,69 @@
+"""Minimal stand-in for the subset of ``hypothesis`` the tests use.
+
+When real hypothesis is installed the test modules import it directly; this
+fallback keeps the property tests runnable (as seeded random sweeps, no
+shrinking) on images without the dependency, so tier-1 collection never
+breaks on an optional package.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+__all__ = ["given", "settings", "st"]
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def _integers(lo, hi):
+    return _Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def _floats(lo, hi):
+    return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+
+def _booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def _sampled_from(seq):
+    choices = list(seq)
+    return _Strategy(lambda rng: rng.choice(choices))
+
+
+st = types.SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    booleans=_booleans,
+    sampled_from=_sampled_from,
+)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_max_examples", _DEFAULT_EXAMPLES))
+            rng = random.Random(0xE5917)  # fixed seed: deterministic sweep
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                fn(**drawn)
+        # no functools.wraps: pytest must not see the original signature
+        # (it would resolve the drawn arguments as fixtures)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -17,6 +17,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 import numpy as np
+from repro import compat
 from repro.checkpoint import ckpt
 from repro.configs.base import ShapeConfig
 from repro.configs.registry import get_config
@@ -41,14 +42,13 @@ def build(mesh):
     return fn, pspecs, bspecs
 
 # ---- phase 1: 8 devices, (4, 2) mesh ------------------------------------
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 fn, pspecs, bspecs = build(mesh)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     state = ts.init_train_state(cfg, ocfg, jax.random.PRNGKey(0))
 state = partition.logical_to_sharding(state, pspecs, mesh)
 losses = []
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     for step in range(4):
         batch = partition.logical_to_sharding(pipe.batch_at(step), bspecs, mesh)
         state, m = fn(state, batch)
@@ -59,12 +59,15 @@ ckpt.save(ckpt_dir, 4, state, {"losses": losses})
 plan = plan_elastic_mesh(n_healthy=4, model_parallel=2)
 assert plan.mesh_shape == (2, 2), plan
 devs = np.array(jax.devices()[:4]).reshape(2, 2)
-mesh2 = jax.sharding.Mesh(devs, ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+if compat.AXIS_TYPE_AUTO is not None:
+    mesh2 = jax.sharding.Mesh(devs, ("data", "model"),
+                              axis_types=(compat.AXIS_TYPE_AUTO,) * 2)
+else:
+    mesh2 = jax.sharding.Mesh(devs, ("data", "model"))
 fn2, pspecs2, bspecs2 = build(mesh2)
 state2, extra, step = ckpt.restore(ckpt_dir, mesh=mesh2, specs=pspecs2)
 assert step == 4
-with jax.set_mesh(mesh2):
+with compat.set_mesh(mesh2):
     for s in range(step, step + 3):
         batch = partition.logical_to_sharding(pipe.batch_at(s), bspecs2, mesh2)
         state2, m = fn2(state2, batch)

@@ -1,11 +1,11 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode
-on CPU executes the kernel bodies)."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/chunk sweeps (interpret
+mode on CPU executes the kernel bodies)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.pruning import magnitude_prune
-from repro.core.sparse_format import pack_ell
+from repro.core.sparse_format import pack_ell, pack_ell_chunked
 from repro.kernels import ops, ref
 from repro.kernels.dense_mv import dense_mv_pallas
 from repro.kernels.espim_spmv import (espim_spmv_batched_pallas,
@@ -14,11 +14,11 @@ from repro.kernels.espim_spmv import (espim_spmv_batched_pallas,
 RNG = np.random.default_rng(0)
 
 
-def _pack(r, c, sparsity, dtype, seed=0):
+def _pack(r, c, sparsity, dtype, seed=0, chunk_cols=128):
     rng = np.random.default_rng(seed)
     w = magnitude_prune(rng.standard_normal((r, c)).astype(np.float32),
                         sparsity)
-    pack = pack_ell(w)
+    pack = pack_ell_chunked(w, chunk_cols=chunk_cols)
     return w, (jnp.asarray(pack.values, dtype),
                jnp.asarray(pack.cols, jnp.int32), pack)
 
@@ -30,21 +30,48 @@ def _pack(r, c, sparsity, dtype, seed=0):
 def test_espim_spmv_matches_ref(r, c, sparsity, dtype):
     _, (vals, cols, pack) = _pack(r, c, sparsity, dtype)
     x = jnp.asarray(RNG.standard_normal(c), dtype)
-    got = espim_spmv_pallas(vals, cols, x, block_r=128, block_l=64)
-    want = ref.espim_spmv_ref(vals, cols, x)
+    got = espim_spmv_pallas(vals, cols, x, chunk_cols=pack.chunk_cols,
+                            block_r=128, block_l=64)
+    want = ref.espim_spmv_chunked_ref(vals, cols, x, pack.chunk_cols)
     tol = 1e-5 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=tol, atol=tol)
 
 
 @pytest.mark.parametrize("b", [1, 4, 16])
-def test_espim_spmv_batched_matches_ref(b):
-    _, (vals, cols, pack) = _pack(128, 300, 0.85, jnp.float32)
+@pytest.mark.parametrize("chunk_cols", [64, 128, 512])
+def test_espim_spmv_batched_matches_ref(b, chunk_cols):
+    _, (vals, cols, pack) = _pack(128, 300, 0.85, jnp.float32,
+                                  chunk_cols=chunk_cols)
     x = jnp.asarray(RNG.standard_normal((300, b)), jnp.float32)
-    got = espim_spmv_batched_pallas(vals, cols, x, block_r=128, block_l=32)
-    want = ref.espim_spmv_batched_ref(vals, cols, x)
+    got = espim_spmv_batched_pallas(vals, cols, x,
+                                    chunk_cols=pack.chunk_cols,
+                                    block_r=128, block_l=32)
+    want = ref.espim_spmv_batched_chunked_ref(vals, cols, x, pack.chunk_cols)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_batched_fused_matches_einsum_oracle():
+    """The fused per-chunk accumulate must equal the (materializing) seed
+    einsum path run on the equivalent plain ELL pack."""
+    rng = np.random.default_rng(3)
+    w = magnitude_prune(rng.standard_normal((256, 777)).astype(np.float32),
+                        0.85)
+    plain = pack_ell(w)
+    chunked = pack_ell_chunked(w, chunk_cols=256)
+    x = jnp.asarray(rng.standard_normal((777, 8)), jnp.float32)
+    old = ref.espim_spmv_batched_ref(
+        jnp.asarray(plain.values), jnp.asarray(plain.cols, jnp.int32), x)
+    new = ref.espim_spmv_batched_chunked_ref(
+        jnp.asarray(chunked.values), jnp.asarray(chunked.cols, jnp.int32),
+        x, chunked.chunk_cols)
+    # both packs came from the same matrix, so packed rows line up via perm
+    y_old = ref.scatter_rows_ref(old, jnp.asarray(plain.perm), plain.n_rows)
+    y_new = ref.scatter_rows_ref(new, jnp.asarray(chunked.perm),
+                                 chunked.n_rows)
+    np.testing.assert_allclose(np.asarray(y_old), np.asarray(y_new),
+                               rtol=1e-4, atol=1e-4)
 
 
 @pytest.mark.parametrize("r,c", [(128, 128), (200, 333), (384, 1024)])
@@ -60,14 +87,37 @@ def test_dense_mv_matches_ref(r, c, dtype):
 
 
 def test_espim_matvec_end_to_end_vs_dense():
-    """Full path: prune -> pack -> kernel -> unscatter == W_pruned @ x."""
+    """Full path: prune -> chunk-pack -> kernel -> unscatter == W_pruned @ x."""
     w, _ = _pack(200, 500, 0.9, jnp.float32, seed=7)
-    dev = ops.pack_to_device(pack_ell(w))
+    dev = ops.pack_to_device(pack_ell_chunked(w, chunk_cols=128))
     x = jnp.asarray(RNG.standard_normal(500), jnp.float32)
     for impl in ("ref", "pallas"):
         y = ops.espim_matvec(dev, x, impl=impl)
         np.testing.assert_allclose(np.asarray(y), w @ np.asarray(x),
                                    rtol=2e-4, atol=2e-4)
+
+
+def test_espim_matvec_batched_end_to_end_vs_dense():
+    """Batched decode path through the fused kernel == W_pruned @ X."""
+    w, _ = _pack(200, 500, 0.9, jnp.float32, seed=8)
+    dev = ops.pack_to_device(pack_ell_chunked(w, chunk_cols=128))
+    x = jnp.asarray(RNG.standard_normal((500, 8)), jnp.float32)
+    for impl in ("ref", "pallas"):
+        y = ops.espim_matvec(dev, x, impl=impl)
+        np.testing.assert_allclose(np.asarray(y), w @ np.asarray(x),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_plain_ell_requires_ref_impl():
+    w, _ = _pack(128, 128, 0.9, jnp.float32)
+    pack = pack_ell(w)
+    vals = jnp.asarray(pack.values)
+    cols = jnp.asarray(pack.cols, jnp.int32)
+    x = jnp.asarray(RNG.standard_normal(128), jnp.float32)
+    y = ops.espim_spmv(vals, cols, x, impl="ref")
+    assert y.shape == (pack.r_pad,)
+    with pytest.raises(ValueError, match="column-chunked"):
+        ops.espim_spmv(vals, cols, x, impl="pallas")
 
 
 def test_scatter_rows_ref_pad_rows():

@@ -2,7 +2,10 @@
 ablation ordering, and hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: fall back to a seeded random sweep
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.pruning import magnitude_prune
 from repro.core.sdds import ESPIMConfig, schedule_matrix

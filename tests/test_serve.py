@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs.registry import get_config
 from repro.core.espim_linear import (ESPIMLinear, espim_matvec_sharded,
                                      make_sharded_weights)
@@ -88,11 +89,10 @@ def test_sharded_espim_matvec():
     rng = np.random.default_rng(2)
     w = rng.standard_normal((384, 256)).astype(np.float32)
     n = jax.device_count()
-    mesh = jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, n), ("data", "model"))
     sh = make_sharded_weights(w, n, prune_sparsity=0.85)
     x = rng.standard_normal(256).astype(np.float32)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         y = np.asarray(espim_matvec_sharded(sh, jnp.asarray(x), mesh))
     wp = magnitude_prune(w, 0.85)
     np.testing.assert_allclose(y, wp @ x, rtol=2e-4, atol=2e-4)

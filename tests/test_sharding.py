@@ -3,7 +3,6 @@ sharded, small/norm leaves replicated, caches laid out sanely."""
 import jax
 import numpy as np
 import pytest
-from jax.sharding import AxisType
 
 from repro.configs.base import SHAPES
 from repro.configs.registry import ASSIGNED, get_config

@@ -1,6 +1,9 @@
 """ELL pack/unpack roundtrip, balance effectiveness, shard re-layout."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: fall back to a seeded random sweep
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.pruning import magnitude_prune, sparten_balance
 from repro.core.sparse_format import ell_to_dense, pack_ell, shard_ell

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs.base import ShapeConfig
 from repro.configs.registry import get_config
 from repro.core.energy import espim_energy, gpu_dram_energy, newton_energy
@@ -21,8 +22,7 @@ from repro.train.trainer import Trainer, TrainerConfig
 def test_train_then_serve_then_espim(tmp_path):
     cfg = get_config("llama7b-espim", reduced=True)
     shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     tr = Trainer(cfg, shape, mesh,
                  OptConfig(warmup_steps=2, decay_steps=100, peak_lr=1e-3),
                  TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=100,

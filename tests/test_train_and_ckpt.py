@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.checkpoint import ckpt
 from repro.configs.base import ShapeConfig
 from repro.configs.registry import get_config
@@ -21,8 +22,7 @@ OCFG = OptConfig(warmup_steps=2, decay_steps=200, peak_lr=1e-3)
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def _trainer(tmp, **kw):

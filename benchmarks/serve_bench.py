@@ -1,0 +1,209 @@
+"""Serving benchmark: drive the engine with a synthetic Poisson-ish trace
+and emit BENCH_serve.json.
+
+Measures, for dense and ESPIM-sparse engines on the quickstart config
+(llama7b-espim, reduced):
+
+* steady-state throughput (tok/s) and per-request TTFT / TPOT / queue
+  delay p50/p95 under a mixed prompt/output-length arrival trace;
+* the chunked-prefill TTFT win: wall-clock and jitted-call counts for a
+  prompt_len-P request served via chunked prefill vs token replay
+  (ceil(P/chunk) prefill calls vs P decode steps);
+* paged-vs-contiguous bit-parity: the block-pool cache must reproduce the
+  contiguous engine's sampled tokens exactly at temperature=0.
+
+Run:   PYTHONPATH=src:. python benchmarks/serve_bench.py [--smoke]
+Smoke: tiny trace + schema assertion (wired into scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.sparse_model import sparsify_mlps
+from repro.models import factory
+from repro.serve.engine import Request, ServeEngine
+
+ARCH = "llama7b-espim"
+SPARSITY = 0.9
+
+
+def make_trace(rng, n_requests, prompt_lens, out_lens, mean_gap_steps):
+    """[(arrival_step, prompt, max_new)] — exponential inter-arrival gaps
+    (Poisson process in engine-step time), mixed prompt/output lengths."""
+    trace, step = [], 0
+    for rid in range(n_requests):
+        plen = int(rng.choice(prompt_lens))
+        out = int(rng.choice(out_lens))
+        prompt = rng.integers(1, 400, size=plen).tolist()
+        trace.append((step, prompt, out))
+        step += int(rng.exponential(mean_gap_steps))
+    return trace
+
+
+def drive(eng, trace):
+    """Submit requests on their arrival step; run to drain.  If the engine
+    drains before the next arrival, the step clock fast-forwards to it
+    (idle ticks are free no-ops and never advance ``stats.steps``)."""
+    reqs = [Request(rid=rid, prompt=p, max_new_tokens=o)
+            for rid, (_, p, o) in enumerate(trace)]
+    due = {rid: s for rid, (s, _, _) in enumerate(trace)}
+    submitted = 0
+    t0 = time.monotonic()
+    while submitted < len(reqs) or eng.scheduler.has_pending or any(
+            s is not None for s in eng.slots):
+        while submitted < len(reqs) and due[submitted] <= eng.stats.steps:
+            eng.submit(reqs[submitted])
+            submitted += 1
+        if (submitted < len(reqs) and not eng.scheduler.has_pending
+                and all(s is None for s in eng.slots)):
+            eng.submit(reqs[submitted])        # fast-forward idle time
+            submitted += 1
+        eng.step()
+    dt = time.monotonic() - t0
+    return reqs, dt
+
+
+def bench_mode(cfg, params, trace, *, sparse=None, slots, max_len,
+               block_size, chunk, paged=True):
+    eng = ServeEngine(cfg, params, batch_slots=slots, max_len=max_len,
+                      sparse=sparse, paged=paged, block_size=block_size,
+                      prefill_chunk=chunk)
+    # warm the jits so the trace measures steady-state serving
+    warm = Request(rid=-1, prompt=[1] * (chunk + 2), max_new_tokens=2)
+    eng.submit(warm)
+    eng.run()
+    eng.reset_stats()
+
+    reqs, dt = drive(eng, trace)
+    lat = eng.stats.latency_summary()
+    return {
+        "throughput_tok_s": eng.stats.tokens_generated / max(dt, 1e-9),
+        "tokens": eng.stats.tokens_generated,
+        "requests": eng.stats.requests_completed,
+        "engine_steps": eng.stats.steps,
+        "prefill_chunks": eng.stats.prefill_chunks,
+        "decode_steps": eng.stats.decode_steps,
+        "slot_occupancy": eng.stats.slot_occupancy,
+        "ttft_s": lat["ttft_s"],
+        "tpot_s": lat["tpot_s"],
+        "queue_delay_s": lat["queue_delay_s"],
+        "wall_s": dt,
+    }, [r.output for r in reqs]
+
+
+def bench_ttft(cfg, params, prompt_len, chunk, max_len):
+    """Single long-prompt request: chunked prefill vs token replay."""
+    out = {}
+    for mode in ("chunked", "replay"):
+        eng = ServeEngine(cfg, params, batch_slots=1, max_len=max_len,
+                          prefill_chunk=chunk, prefill_mode=mode)
+        warm = Request(rid=-1, prompt=[1] * min(prompt_len, chunk + 2),
+                       max_new_tokens=2)
+        eng.submit(warm)
+        eng.run()
+        eng.reset_stats()
+        req = Request(rid=0, prompt=list(range(1, prompt_len + 1)),
+                      max_new_tokens=4)
+        eng.submit(req)
+        eng.run()
+        m = eng.scheduler.completed[-1]
+        calls_to_first = (eng.stats.prefill_chunks if mode == "chunked"
+                          else prompt_len)
+        out[mode] = {"ttft_s": m.ttft, "jitted_calls_to_first_token":
+                     calls_to_first,
+                     "total_engine_steps": eng.stats.steps}
+    out["prompt_len"] = prompt_len
+    out["chunk"] = chunk
+    out["speedup"] = out["replay"]["ttft_s"] / max(out["chunked"]["ttft_s"],
+                                                   1e-9)
+    out["call_reduction"] = (out["replay"]["jitted_calls_to_first_token"]
+                             / out["chunked"]["jitted_calls_to_first_token"])
+    return out
+
+
+def check_schema(doc: dict) -> None:
+    assert doc["paged_parity"] is True, "paged/contiguous tokens diverged"
+    for mode in ("dense", "sparse"):
+        m = doc["modes"][mode]
+        for k in ("throughput_tok_s", "tokens", "requests", "ttft_s",
+                  "tpot_s", "queue_delay_s", "slot_occupancy"):
+            assert k in m, f"modes.{mode}.{k} missing"
+        assert m["ttft_s"]["p50"] is not None
+    t = doc["ttft_improvement"]
+    for k in ("prompt_len", "chunk", "speedup", "call_reduction",
+              "chunked", "replay"):
+        assert k in t, f"ttft_improvement.{k} missing"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace + JSON schema assertion (CI)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(args.seed)
+    cfg = get_config(ARCH, reduced=True)
+    params = factory.init_params(cfg, jax.random.PRNGKey(0))
+
+    if args.smoke:
+        slots, max_len, block_size, chunk = 2, 64, 8, 8
+        trace = make_trace(rng, 4, [4, 9, 17], [3, 5], 2)
+        ttft_prompt = 16
+    else:
+        slots, max_len, block_size, chunk = 4, 192, 16, 32
+        trace = make_trace(rng, 12, [8, 24, 64, 120], [8, 16, 32], 4)
+        ttft_prompt = 128
+
+    modes = {}
+    modes["dense"], toks_paged = bench_mode(
+        cfg, params, trace, slots=slots, max_len=max_len,
+        block_size=block_size, chunk=chunk, paged=True)
+    _, toks_contig = bench_mode(
+        cfg, params, trace, slots=slots, max_len=max_len,
+        block_size=block_size, chunk=chunk, paged=False)
+    parity = toks_paged == toks_contig
+
+    sparse = sparsify_mlps(cfg, params, SPARSITY)
+    modes["sparse"], _ = bench_mode(
+        cfg, params, trace, sparse=sparse, slots=slots, max_len=max_len,
+        block_size=block_size, chunk=chunk, paged=True)
+
+    doc = {
+        "bench": "serve",
+        "arch": ARCH,
+        "reduced": True,
+        "smoke": args.smoke,
+        "slots": slots,
+        "max_len": max_len,
+        "block_size": block_size,
+        "prefill_chunk": chunk,
+        "n_requests": len(trace),
+        "sparsity": SPARSITY,
+        "modes": modes,
+        "ttft_improvement": bench_ttft(cfg, params, ttft_prompt, chunk,
+                                       max_len),
+        "paged_parity": parity,
+    }
+    check_schema(doc)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+    t = doc["ttft_improvement"]
+    print(f"wrote {args.out}: dense "
+          f"{modes['dense']['throughput_tok_s']:.1f} tok/s, sparse "
+          f"{modes['sparse']['throughput_tok_s']:.1f} tok/s; TTFT@"
+          f"{t['prompt_len']} chunked {t['chunked']['ttft_s']:.3f}s vs "
+          f"replay {t['replay']['ttft_s']:.3f}s "
+          f"({t['speedup']:.1f}x wall, {t['call_reduction']:.1f}x fewer "
+          f"jitted calls); paged parity: {parity}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,7 @@
 """The paper's deployment scenario: serve an LM whose projections were
-magnitude-pruned and packed into the ESPIM format, with batched continuous
-decoding, and compare the sparse projections' outputs against the
+magnitude-pruned and packed into the ESPIM format, through the production
+serving stack — paged KV cache, chunked prefill, and a latency-aware
+scheduler — and compare the sparse projections' outputs against the
 dense-pruned reference.
 
 Run:  PYTHONPATH=src python examples/serve_sparse_llm.py
@@ -14,6 +15,7 @@ import numpy as np
 from repro.configs.registry import get_config
 from repro.core.espim_linear import ESPIMLinear
 from repro.core.pruning import magnitude_prune
+from repro.core.sparse_model import sparsify_mlps
 from repro.models import factory
 from repro.serve.engine import Request, ServeEngine
 
@@ -36,15 +38,36 @@ for name in ("wq", "wk", "wv", "wo"):
     print(f"  {name}: sparse path={lin.sparse}, "
           f"max err vs dense-pruned = {np.abs(y - ref).max():.2e}")
 
-# --- batched serving --------------------------------------------------------
-eng = ServeEngine(cfg, params, batch_slots=4, max_len=96)
-prompts = [[1, 5, 9], [2, 4], [7, 7, 7, 7], [3], [8, 1], [6, 2, 4]]
-for rid, p in enumerate(prompts):
-    eng.submit(Request(rid=rid, prompt=p, max_new_tokens=12))
+# --- production serving: paged cache + chunked prefill + scheduler ---------
+# A mixed-length trace: short chat-like prompts interleaved with long ones.
+# The shortest-prompt-first policy admits the short prompts ahead of the
+# long ones (lower mean TTFT); chunked prefill turns each long prompt into
+# ceil(len/chunk) jitted calls; all slots share one block-pool KV arena.
+sparse = sparsify_mlps(cfg, params, SPARSITY)
+prompt_lens = [3, 40, 2, 56, 5, 24, 4, 12]
+prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+           for n in prompt_lens]
+
+eng = ServeEngine(cfg, params, batch_slots=4, max_len=96, sparse=sparse,
+                  paged=True, block_size=16, prefill_chunk=16,
+                  policy="sjf")
+reqs = [Request(rid=rid, prompt=p, max_new_tokens=12)
+        for rid, p in enumerate(prompts)]
+for r in reqs:
+    eng.submit(r)
 t0 = time.time()
 stats = eng.run()
 dt = time.time() - t0
+lat = stats.latency_summary()
 print(f"\nserved {stats.requests_completed} requests / "
       f"{stats.tokens_generated} tokens in {dt:.1f}s "
-      f"({stats.tokens_generated / dt:.1f} tok/s on CPU, "
-      f"{stats.steps} engine steps, continuous batching over 4 slots)")
+      f"({stats.tokens_generated / dt:.1f} tok/s on CPU; "
+      f"{stats.prefill_chunks} prefill chunks + {stats.decode_steps} "
+      f"decode steps, slot occupancy {stats.slot_occupancy:.0%})")
+print(f"TTFT p50/p95 = {lat['ttft_s']['p50']:.3f}/"
+      f"{lat['ttft_s']['p95']:.3f}s, "
+      f"TPOT p50 = {lat['tpot_s']['p50'] * 1e3:.1f}ms, "
+      f"queue delay p95 = {lat['queue_delay_s']['p95']:.3f}s "
+      f"(sjf over {len(reqs)} mixed-length prompts, "
+      f"arena {eng.cache.num_blocks} x {eng.cache.block_size}-token "
+      f"blocks)")

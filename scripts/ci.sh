@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # One reproducible entrypoint: install deps, run tier-1 tests, then the
-# kernel benchmark smoke (emits BENCH_kernels.json).
+# kernel benchmark smoke (emits BENCH_kernels.json) and the serving
+# benchmark smoke (tiny trace, asserts the BENCH_serve.json schema).
 #
 #   scripts/ci.sh            # full run
 #   SKIP_INSTALL=1 scripts/ci.sh   # images with deps baked in
@@ -21,3 +22,8 @@ python -m pytest -x -q
 echo "== kernel benchmark smoke =="
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/kernels_bench.py
 test -f BENCH_kernels.json && echo "BENCH_kernels.json written"
+
+echo "== serving benchmark smoke =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/serve_bench.py \
+    --smoke --out BENCH_serve_smoke.json
+test -f BENCH_serve_smoke.json && echo "BENCH_serve_smoke.json written"

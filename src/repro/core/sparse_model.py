@@ -25,7 +25,8 @@ from repro.kernels import ops
 from repro.kernels import ref as kref
 from repro.models import transformer as T
 
-__all__ = ["sparsify_mlps", "decode_step_sparse", "sparse_stats"]
+__all__ = ["sparsify_mlps", "decode_step_sparse", "prefill_chunk_sparse",
+           "sparse_stats"]
 
 _MLP_NAMES = ("w_gate", "w_up", "w_down")
 
@@ -84,15 +85,17 @@ def sparsify_mlps(cfg: ModelConfig, params: dict, sparsity: float,
 
 
 def _sparse_proj(pack_l: dict, x: jnp.ndarray, impl: str) -> jnp.ndarray:
-    """x (B, 1, in) -> (B, 1, out) through one layer's chunked ELL pack,
-    via the fused batched kernel (decode hot path)."""
-    b = x.shape[0]
-    xt = x.reshape(b, -1).T.astype(jnp.float32)        # (in, B)
+    """x (B, T, in) -> (B, T, out) through one layer's chunked ELL pack,
+    via the fused batched kernel.  Decode runs T=1 (the hot path); chunked
+    prefill feeds T=chunk tokens — the kernel sees B*T columns either way.
+    """
+    b, t = x.shape[0], x.shape[1]
+    xt = x.reshape(-1, x.shape[-1]).T.astype(jnp.float32)  # (in, B*T)
     yp = ops.espim_spmv_batched(pack_l["values"], pack_l["cols"], xt,
                                 chunk_cols=pack_l["chunk_cols"],
-                                impl=impl)             # (R_pad, B)
+                                impl=impl)             # (R_pad, B*T)
     y = kref.scatter_rows_ref(yp, pack_l["perm"], pack_l["n_rows"])
-    return y.T.reshape(b, 1, -1).astype(x.dtype)
+    return y.T.reshape(b, t, -1).astype(x.dtype)
 
 
 def decode_step_sparse(cfg: ModelConfig, params: dict, sparse: dict,
@@ -100,12 +103,6 @@ def decode_step_sparse(cfg: ModelConfig, params: dict, sparse: dict,
     """transformer.decode_step with ESPIM-format MLPs (dense attention)."""
     tokens = batch["tokens"]
     h = T.embed_tokens(cfg, params, tokens)
-
-    def layer_pack(name, i):
-        p = sparse[name]
-        return {"values": p["values"][i], "cols": p["cols"][i],
-                "perm": p["perm"][i], "n_rows": p["n_rows"],
-                "chunk_cols": p["chunk_cols"]}
 
     # explicit python loop over layers: the packs are per-layer arrays of
     # uniform width, so a scan also works; the loop keeps this reference
@@ -118,23 +115,62 @@ def decode_step_sparse(cfg: ModelConfig, params: dict, sparse: dict,
             cache["k"][i], cache["v"][i], cache["len"])
         h = h + a
         hn = T._norm(cfg, lp["ln2"], h)
-        if cfg.gated_mlp:
-            gate = jax.nn.silu(_sparse_proj(layer_pack("w_gate", i), hn,
-                                            impl))
-            up = _sparse_proj(layer_pack("w_up", i), hn, impl)
-            mlp_out = _sparse_proj(layer_pack("w_down", i), gate * up, impl)
-        else:
-            from repro.models.layers import act_fn
-            up = _sparse_proj(layer_pack("w_up", i), hn, impl)
-            mlp_out = _sparse_proj(layer_pack("w_down", i),
-                                   act_fn(cfg.activation)(up), impl)
-        h = h + mlp_out
+        h = h + _sparse_mlp(cfg, sparse, i, hn, impl)
         k_new.append(kc)
         v_new.append(vc)
 
     logits = T.logits_from_hidden(cfg, params, h)
     new_cache = {"k": jnp.stack(k_new), "v": jnp.stack(v_new),
                  "len": cache["len"] + 1}
+    return logits, new_cache
+
+
+def _sparse_mlp(cfg: ModelConfig, sparse: dict, i: int, hn, impl: str):
+    """One layer's MLP through the ESPIM packs (shared by decode/prefill)."""
+    def layer_pack(name):
+        p = sparse[name]
+        return {"values": p["values"][i], "cols": p["cols"][i],
+                "perm": p["perm"][i], "n_rows": p["n_rows"],
+                "chunk_cols": p["chunk_cols"]}
+
+    if cfg.gated_mlp:
+        gate = jax.nn.silu(_sparse_proj(layer_pack("w_gate"), hn, impl))
+        up = _sparse_proj(layer_pack("w_up"), hn, impl)
+        return _sparse_proj(layer_pack("w_down"), gate * up, impl)
+    from repro.models.layers import act_fn
+    up = _sparse_proj(layer_pack("w_up"), hn, impl)
+    return _sparse_proj(layer_pack("w_down"), act_fn(cfg.activation)(up),
+                        impl)
+
+
+def prefill_chunk_sparse(cfg: ModelConfig, params: dict, sparse: dict,
+                         cache: dict, batch: dict, impl: str = "ref"):
+    """transformer.prefill_chunk with ESPIM-format MLPs (dense attention):
+    a C-token chunk lands at cache["len"].., the MLP projections run
+    through the batched chunked-ELL kernel with B*C columns.  Same
+    contract as ``factory.prefill_chunk``."""
+    tokens = batch["tokens"]
+    start = cache["len"]
+    n_valid = batch.get("n_valid")
+    if n_valid is None:
+        n_valid = jnp.full_like(start, tokens.shape[1])
+    h = T.embed_tokens(cfg, params, tokens)
+
+    k_new, v_new = [], []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda x: x[i], params["layers"])
+        a, kc, vc, _, _ = T.attn_prefill_apply(
+            cfg, lp["attn"], T._norm(cfg, lp["ln1"], h),
+            cache["k"][i], cache["v"][i], start)
+        h = h + a
+        hn = T._norm(cfg, lp["ln2"], h)
+        h = h + _sparse_mlp(cfg, sparse, i, hn, impl)
+        k_new.append(kc)
+        v_new.append(vc)
+
+    logits = T.logits_from_hidden(cfg, params, h)
+    new_cache = {"k": jnp.stack(k_new), "v": jnp.stack(v_new),
+                 "len": start + n_valid}
     return logits, new_cache
 
 

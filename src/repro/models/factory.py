@@ -15,7 +15,8 @@ from repro.configs.base import ModelConfig
 from repro.models import mamba, moe, rwkv, transformer, vlm, whisper
 
 __all__ = ["get_family", "init_params", "apply_train", "init_cache",
-           "decode_step", "loss_fn", "cross_entropy"]
+           "decode_step", "prefill_chunk", "supports_chunked_prefill",
+           "loss_fn", "cross_entropy"]
 
 _FAMILIES = {
     "dense": transformer,
@@ -54,6 +55,24 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
 
 def decode_step(cfg: ModelConfig, params, cache: dict, batch: dict):
     return get_family(cfg).decode_step(cfg, params, cache, batch)
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """True when the family prefills C tokens per jitted call (dense /
+    hybrid / ssm); the others fall back to token replay in the engine."""
+    return hasattr(get_family(cfg), "prefill_chunk")
+
+
+def prefill_chunk(cfg: ModelConfig, params, cache: dict, batch: dict):
+    """Chunked prefill: batch["tokens"] (B, C) lands at cache["len"].. and
+    only batch["n_valid"] leading tokens are real.  Returns full-chunk
+    logits (B, C, V) and the updated cache (len advanced by n_valid)."""
+    mod = get_family(cfg)
+    if not hasattr(mod, "prefill_chunk"):
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no chunked prefill; "
+            "use token replay")
+    return mod.prefill_chunk(cfg, params, cache, batch)
 
 
 def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,

@@ -19,7 +19,7 @@ import numpy as np
 __all__ = [
     "rms_norm", "layer_norm", "init_dense", "dense",
     "rope_angles", "apply_rope", "apply_mrope",
-    "flash_attention", "attention_decode", "repeat_kv",
+    "flash_attention", "attention_decode", "attention_prefill", "repeat_kv",
     "mlp_gated", "mlp_relu2", "act_fn",
 ]
 
@@ -308,6 +308,44 @@ def attention_decode(
                                                                None, :]
     out = jnp.einsum("bkrqs,bskd->bqkrd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def attention_prefill(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    k_scale: jnp.ndarray | None = None,
+    v_scale: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Chunked-prefill attention: a C-token query block over a KV cache.
+
+    q: (B, C, H, hd); k/v_cache: (B, S_max, KV, hd) with the chunk's K/V
+    already written at positions ``q_pos`` (B, C) int32.  Key j is visible
+    to query i iff j <= q_pos[i] — causal over absolute cache positions, so
+    earlier chunks are fully visible and later rows (pad garbage, stale
+    pages) are masked.  Same un-repeated GQA contraction and f32 softmax as
+    ``attention_decode`` so a chunked prefill followed by decode steps is
+    numerically aligned with pure decode replay.
+    """
+    b, c, h, hd = q.shape
+    s_max, kvh = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, c, kvh, rep, hd).astype(jnp.float32) / np.sqrt(hd)
+    s_ = jnp.einsum("bqkrd,bskd->bkrqs", qg,
+                    k_cache.astype(jnp.float32))  # (B, KV, rep, C, S)
+    if k_scale is not None:
+        s_ = s_ * k_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None,
+                                                                 None, :]
+    pos = jnp.arange(s_max)
+    mask = pos[None, None, :] <= q_pos[:, :, None]        # (B, C, S)
+    s_ = jnp.where(mask[:, None, None], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    if v_scale is not None:
+        p = p * v_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None,
+                                                               None, :]
+    out = jnp.einsum("bkrqs,bskd->bqkrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, c, h, hd).astype(q.dtype)
 
 
 # --------------------------------------------------------------------------

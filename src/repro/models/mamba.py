@@ -21,7 +21,8 @@ from repro.models import layers as L
 from repro.models import transformer as T
 
 __all__ = ["init_params", "forward", "init_cache", "decode_step",
-           "ssd_chunked", "ssd_step", "mamba2_apply", "mamba2_step"]
+           "prefill_chunk", "ssd_chunked", "ssd_step", "mamba2_apply",
+           "mamba2_step", "mamba2_prefill"]
 
 GROUPS = 1  # B/C projection groups
 
@@ -210,6 +211,50 @@ def mamba2_step(cfg: ModelConfig, p, x, conv_state, ssm_state):
     return L.dense(y, p["out_proj"]), conv_state, ssm_state
 
 
+def mamba2_prefill(cfg: ModelConfig, p, x, conv_state, ssm_state, valid,
+                   n_valid):
+    """Chunked-prefill step: a C-token slab continuing from cached state.
+
+    x: (B, C, D); conv_state: (B, K-1, Cch) raw (pre-activation) xbc
+    window; ssm_state: (B, H, P, N); valid: (B, C) bool; n_valid: (B,).
+    Invalid (pad) positions pass state through exactly: dt is forced to 0
+    there, so the SSD decay is exp(0)=1 and the input contribution dt*x
+    vanishes; the new conv window is sliced to end at the last *valid*
+    token.  Returns (y (B, C, D), new_conv_state, new_ssm_state).
+    """
+    d_inner, n_heads, n = _dims(cfg)
+    b, c, _ = x.shape
+    k = p["conv_w"].shape[0]
+    zg, xbc, dt = _split_proj(cfg, L.dense(x, p["in_proj"]))
+    # causal conv seeded with the cached window instead of zero padding —
+    # f32 accumulation matching mamba2_step's einsum path
+    ext = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    ext_f = ext.astype(jnp.float32)
+    w_f = p["conv_w"].astype(jnp.float32)
+    conv = sum(ext_f[:, i : i + c, :] * w_f[i][None, None, :]
+               for i in range(k)) + p["conv_b"].astype(jnp.float32)
+    xbc_act = jax.nn.silu(conv).astype(x.dtype)
+    # new window = raw xbc rows n_valid-(K-1)..n_valid-1 of the stream,
+    # i.e. ext rows n_valid..n_valid+K-2
+    idx = n_valid[:, None] + jnp.arange(k - 1, dtype=jnp.int32)[None, :]
+    new_conv = jnp.take_along_axis(ext, idx[..., None],
+                                   axis=1).astype(conv_state.dtype)
+
+    xs = xbc_act[..., :d_inner].reshape(b, c, n_heads, cfg.ssm_head_dim)
+    bmat = xbc_act[..., d_inner : d_inner + GROUPS * n].reshape(
+        b, c, GROUPS, n)
+    cmat = xbc_act[..., d_inner + GROUPS * n :].reshape(b, c, GROUPS, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dt = jnp.where(valid[:, :, None], dt, 0.0)
+    a = -jnp.exp(p["a_log"])
+    y, ssm_state = ssd_chunked(xs, dt, a, bmat, cmat,
+                               init_state=ssm_state.astype(jnp.float32))
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, c, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(zg), p["norm_w"], cfg.norm_eps)
+    return L.dense(y, p["out_proj"]), new_conv, ssm_state
+
+
 # --------------------------------------------------------------------------
 # zamba2 hybrid LM
 # --------------------------------------------------------------------------
@@ -350,4 +395,61 @@ def decode_step(cfg: ModelConfig, params, cache: dict, batch: dict):
         "conv": conv_new.reshape(cache["conv"].shape),
         "ssm": ssm_new.reshape(cache["ssm"].shape),
         "k": k_new, "v": v_new, "len": cache["len"] + 1,
+    }
+
+
+def prefill_chunk(cfg: ModelConfig, params, cache: dict, batch: dict):
+    """Chunked prefill for the (hybrid) Mamba2 LM — same contract as
+    ``transformer.prefill_chunk``: tokens (B, C) at cache["len"].., pad
+    tokens beyond batch["n_valid"] leave every recurrent state untouched.
+    """
+    tokens = batch["tokens"]
+    b, c = tokens.shape
+    start = cache["len"]
+    n_valid = batch.get("n_valid")
+    if n_valid is None:
+        n_valid = jnp.full_like(start, c)
+    valid = jnp.arange(c, dtype=jnp.int32)[None, :] < n_valid[:, None]
+    h = T.embed_tokens(cfg, params, tokens)
+    shared = params.get("shared_attn")
+    napp = _n_apps(cfg)
+
+    def mamba_body(h, xs):
+        lp, conv, ssm = xs
+        m, conv, ssm = mamba2_prefill(
+            cfg, lp["mamba"], T._norm(cfg, lp["ln"], h), conv, ssm,
+            valid, n_valid)
+        return h + m, (conv, ssm)
+
+    if shared is None:
+        h, (conv_new, ssm_new) = jax.lax.scan(
+            mamba_body, h, (params["layers"], cache["conv"], cache["ssm"]))
+        logits = T.logits_from_hidden(cfg, params, h)
+        return logits, {"conv": conv_new, "ssm": ssm_new,
+                        "len": start + n_valid}
+
+    grouped = _group_params(cfg, params["layers"])
+    conv_g = cache["conv"].reshape((napp, cfg.attn_every)
+                                   + cache["conv"].shape[1:])
+    ssm_g = cache["ssm"].reshape((napp, cfg.attn_every)
+                                 + cache["ssm"].shape[1:])
+
+    def group_body(h, xs):
+        gp, conv, ssm, kc, vc = xs
+        a, kc, vc, _, _ = T.attn_prefill_apply(
+            cfg, shared["attn"], T._norm(cfg, shared["ln1"], h),
+            kc, vc, start)
+        h = h + a
+        h = h + T.mlp_apply(cfg, shared["mlp"],
+                            T._norm(cfg, shared["ln2"], h))
+        h, (conv, ssm) = jax.lax.scan(mamba_body, h, (gp, conv, ssm))
+        return h, (conv, ssm, kc, vc)
+
+    h, (conv_new, ssm_new, k_new, v_new) = jax.lax.scan(
+        group_body, h, (grouped, conv_g, ssm_g, cache["k"], cache["v"]))
+    logits = T.logits_from_hidden(cfg, params, h)
+    return logits, {
+        "conv": conv_new.reshape(cache["conv"].shape),
+        "ssm": ssm_new.reshape(cache["ssm"].shape),
+        "k": k_new, "v": v_new, "len": start + n_valid,
     }

@@ -18,7 +18,8 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import transformer as T
 
-__all__ = ["init_params", "forward", "init_cache", "decode_step"]
+__all__ = ["init_params", "forward", "init_cache", "decode_step",
+           "prefill_chunk"]
 
 LORA_W = 64  # decay LoRA rank
 
@@ -73,9 +74,14 @@ def _head_norm(y, w, h, hd, eps):
     return (yf.reshape(b, s, h * hd) * w.astype(jnp.float32)).astype(y.dtype)
 
 
-def time_mix_apply(cfg: ModelConfig, p, x, last_x, state):
+def time_mix_apply(cfg: ModelConfig, p, x, last_x, state, valid=None):
     """x: (B, S, D); last_x: (B, D); state: (B, H, K, V) f32.
-    Returns (out, new_last_x, new_state)."""
+    Returns (out, new_last_x, new_state).
+
+    ``valid`` (B, S) bool marks real tokens (chunked prefill pads a partial
+    final chunk): invalid positions force k -> 0 and w -> 1, so the WKV
+    state passes through them unchanged.
+    """
     b, s, d = x.shape
     h, hd = _heads(cfg)
     xs = _shift(x, last_x)
@@ -89,6 +95,9 @@ def time_mix_apply(cfg: ModelConfig, p, x, last_x, state):
         p["w0"]
         + L.dense(jnp.tanh(L.dense(xw, p["w_a"])), p["w_b"]).astype(jnp.float32)
     )).reshape(b, s, h, hd)  # (0, 1) decay per channel
+    if valid is not None:
+        k = jnp.where(valid[:, :, None, None], k, 0.0)
+        w = jnp.where(valid[:, :, None, None], w, 1.0)
     u = p["u"]
 
     def step(st, inp):
@@ -202,3 +211,45 @@ def decode_step(cfg: ModelConfig, params, cache: dict, batch: dict):
     logits = T.logits_from_hidden(cfg, params, h)
     return logits, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv,
                     "len": cache["len"] + 1}
+
+
+def prefill_chunk(cfg: ModelConfig, params, cache: dict, batch: dict):
+    """Chunked prefill: run the WKV recurrence over a C-token slab from the
+    cached (tm_x, cm_x, wkv) states — same contract as
+    ``transformer.prefill_chunk``.  The token-shift states advance to the
+    last *valid* token of the chunk, and pad positions leave the WKV
+    accumulator untouched (k -> 0, w -> 1 inside ``time_mix_apply``).
+    """
+    tokens = batch["tokens"]
+    b, c = tokens.shape
+    start = cache["len"]
+    n_valid = batch.get("n_valid")
+    if n_valid is None:
+        n_valid = jnp.full_like(start, c)
+    valid = jnp.arange(c, dtype=jnp.int32)[None, :] < n_valid[:, None]
+    last_idx = jnp.maximum(n_valid - 1, 0)[:, None, None]  # (B, 1, 1)
+    h = T.embed_tokens(cfg, params, tokens)
+
+    def body(carry, xs):
+        h = carry
+        lp, tm_x, cm_x, wkv = xs
+        xn1 = T._norm(cfg, lp["ln1"], h)
+        a, _, wkv = time_mix_apply(cfg, lp["tm"], xn1, tm_x, wkv,
+                                   valid=valid)
+        tm_x = jnp.take_along_axis(
+            xn1, jnp.broadcast_to(last_idx, (b, 1, xn1.shape[-1])),
+            axis=1)[:, 0]
+        h = h + a
+        xn2 = T._norm(cfg, lp["ln2"], h)
+        cmo, _ = channel_mix_apply(cfg, lp["cm"], xn2, cm_x)
+        cm_x = jnp.take_along_axis(
+            xn2, jnp.broadcast_to(last_idx, (b, 1, xn2.shape[-1])),
+            axis=1)[:, 0]
+        return h + cmo, (tm_x, cm_x, wkv)
+
+    h, (tm_x, cm_x, wkv) = jax.lax.scan(
+        body, h, (params["layers"], cache["tm_x"], cache["cm_x"],
+                  cache["wkv"]))
+    logits = T.logits_from_hidden(cfg, params, h)
+    return logits, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv,
+                    "len": start + n_valid}

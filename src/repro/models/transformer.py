@@ -17,8 +17,9 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 
 __all__ = [
-    "init_params", "forward", "init_cache", "decode_step",
+    "init_params", "forward", "init_cache", "decode_step", "prefill_chunk",
     "init_attn_layer", "attn_apply", "attn_decode_apply",
+    "attn_prefill_apply", "splice_rows",
     "init_mlp_layer", "mlp_apply", "remat_wrap", "stack_layer_init",
     "embed_tokens", "logits_from_hidden",
 ]
@@ -131,6 +132,59 @@ def attn_decode_apply(cfg: ModelConfig, p, x, k_cache, v_cache, cache_len,
     out = L.attention_decode(q, k_cache, v_cache, pos + 1,
                              k_scale=k_scale, v_scale=v_scale)
     out = L.dense(out.reshape(b, 1, cfg.n_heads * cfg.hd), p["wo"])
+    return out, k_cache, v_cache, k_scale, v_scale
+
+
+def splice_rows(cache, rows, start):
+    """Write ``rows`` (B, C, ...) into ``cache`` (B, S, ...) at sequence
+    rows start..start+C-1 (per-batch ``start`` (B,) int32).
+
+    Masked gather + where rather than dynamic_update_slice for the same
+    reason as the decode update: shardable along every cache dim with zero
+    resharding.
+    """
+    s_max, c = cache.shape[1], rows.shape[1]
+    pos = jnp.arange(s_max, dtype=jnp.int32)[None, :]
+    in_chunk = (pos >= start[:, None]) & (pos < start[:, None] + c)
+    idx = jnp.clip(pos - start[:, None], 0, c - 1)
+    extra = (1,) * (cache.ndim - 2)
+    gathered = jnp.take_along_axis(rows, idx.reshape(idx.shape + extra),
+                                   axis=1)
+    return jnp.where(in_chunk.reshape(in_chunk.shape + extra), gathered,
+                     cache)
+
+
+def attn_prefill_apply(cfg: ModelConfig, p, x, k_cache, v_cache, start,
+                       positions3=None, k_scale=None, v_scale=None):
+    """Chunked prefill: C tokens at absolute positions start..start+C-1.
+
+    x: (B, C, D); k/v_cache: (B, S_max, KV, hd); start: (B,) int32.  The
+    chunk's K/V are spliced into the caches and the chunk attends causally
+    over the whole cache (earlier chunks included).  Trailing pad tokens of
+    a partial final chunk write rows past the valid length — harmless: the
+    causal mask hides them from valid queries and the engine drops them at
+    page-splice time.  Returns (out (B, C, D), caches[, scales]).
+    """
+    b, c, _ = x.shape
+    q, k, v = _qkv(cfg, p, x)
+    pos = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    if cfg.mrope and positions3 is not None:
+        q, k = L.apply_mrope(q, k, positions3, cfg.rope_theta)
+    elif not cfg.learned_pos:
+        q, k = L.apply_rope(q, k, pos, cfg.rope_theta)
+    if k_scale is not None:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        k_cache = splice_rows(k_cache, kq, start)
+        v_cache = splice_rows(v_cache, vq, start)
+        k_scale = splice_rows(k_scale, ks, start)
+        v_scale = splice_rows(v_scale, vs, start)
+    else:
+        k_cache = splice_rows(k_cache, k.astype(k_cache.dtype), start)
+        v_cache = splice_rows(v_cache, v.astype(v_cache.dtype), start)
+    out = L.attention_prefill(q, k_cache, v_cache, pos,
+                              k_scale=k_scale, v_scale=v_scale)
+    out = L.dense(out.reshape(b, c, cfg.n_heads * cfg.hd), p["wo"])
     return out, k_cache, v_cache, k_scale, v_scale
 
 
@@ -287,6 +341,50 @@ def decode_step(cfg: ModelConfig, params, cache: dict, batch: dict):
     )
     logits = logits_from_hidden(cfg, params, h)
     new_cache = {"k": k_new, "v": v_new, "len": cache["len"] + 1}
+    if quant:
+        new_cache["k_scale"] = ks_new
+        new_cache["v_scale"] = vs_new
+    return logits, new_cache
+
+
+def prefill_chunk(cfg: ModelConfig, params, cache: dict, batch: dict):
+    """One chunked-prefill step: tokens (B, C) land at absolute positions
+    cache["len"]..cache["len"]+C-1.
+
+    ``batch["n_valid"]`` (B,) marks how many leading chunk tokens are real
+    (a partial final chunk is padded up to the fixed jit'd width C); ``len``
+    advances by ``n_valid`` only.  Returns full-chunk logits (B, C, V) and
+    the updated cache — the caller reads logits at n_valid-1 for the first
+    generated token.
+    """
+    tokens = batch["tokens"]
+    start = cache["len"]
+    n_valid = batch.get("n_valid")
+    if n_valid is None:
+        n_valid = jnp.full_like(start, tokens.shape[1])
+    h = embed_tokens(cfg, params, tokens)
+    positions3 = batch.get("positions3")
+    quant = "k_scale" in cache
+    dummy = jnp.zeros((cfg.n_layers,), jnp.bfloat16)
+
+    def body(carry, xs):
+        h = carry
+        lp, kc, vc, ks, vs = xs
+        a, kc, vc, ks, vs = attn_prefill_apply(
+            cfg, lp["attn"], _norm(cfg, lp["ln1"], h), kc, vc, start,
+            positions3=positions3,
+            k_scale=ks if quant else None,
+            v_scale=vs if quant else None)
+        out = h + a
+        out = out + mlp_apply(cfg, lp["mlp"], _norm(cfg, lp["ln2"], out))
+        return out, (kc, vc, ks, vs)
+
+    h, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+        body, h, (params["layers"], cache["k"], cache["v"],
+                  cache.get("k_scale", dummy), cache.get("v_scale", dummy))
+    )
+    logits = logits_from_hidden(cfg, params, h)
+    new_cache = {"k": k_new, "v": v_new, "len": start + n_valid}
     if quant:
         new_cache["k_scale"] = ks_new
         new_cache["v_scale"] = vs_new

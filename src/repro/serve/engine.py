@@ -1,21 +1,30 @@
-"""Batched serving engine with continuous batching.
+"""Production serving engine: paged KV cache + chunked prefill + scheduler.
 
-Fixed B decode slots over one shared KV cache; finished sequences free
-their slot, queued requests claim it (cache rows reset via per-slot length
-= 0 and prompt replay).  Prefill here is token-by-token replay through the
-decode path — correct by the decode/forward parity tests; a production
-deployment would use ``prefill_fn`` + cache splice, which the engine
-exposes as an upgrade point.
+Fixed B decode slots over one block-pool KV arena (``serve/paged_cache``).
+Each engine tick is either one chunked-prefill call for a single slot
+(``serve/prefill`` — TTFT in ceil(prompt_len/chunk) jitted calls instead
+of prompt_len decode steps) or one batched decode step across every
+decode-ready slot; the interleave, admission order (FCFS / SJF) and
+per-request latency metrics are owned by ``serve/scheduler``.  Finished
+sequences return their blocks to the pool; queued requests are admitted
+only once their worst-case block count is reservable, so the arena can
+never deadlock mid-flight.
 
 Pass ``sparse`` (from ``sparsify_mlps``) to serve from the ESPIM
-column-chunked format: every decode tick then runs the MLP projections
-through the fused batched SpMV across all active slots at once — the
-batched kernel IS the continuous-batching hot path.
+column-chunked format: decode ticks run the MLP projections through the
+fused batched SpMV across all active slots at once, and prefill chunks
+feed the same kernel with B*chunk columns — the batched kernel IS the
+continuous-batching hot path (the paper's deployment: decode from the
+compressed format).
+
+Families without a chunked ``prefill_chunk`` (moe / vlm / audio) fall back
+to the seed behavior: token-by-token prompt replay through the decode
+path (``prefill_mode="replay"``).
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+import time
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +32,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import factory
-from repro.serve.serve_step import serve_step_fn, serve_step_sparse_fn
+from repro.serve.paged_cache import make_kv_cache
+from repro.serve.prefill import ChunkedPrefiller
+from repro.serve.scheduler import Scheduler
+from repro.serve.serve_step import (sample_tokens, serve_step_fn,
+                                    serve_step_sparse_fn)
 
 __all__ = ["Request", "EngineStats", "ServeEngine"]
 
@@ -37,93 +50,250 @@ class Request:
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
 
+    def worst_case_tokens(self, max_len: int) -> int:
+        """Cache rows this request can ever occupy — the admission
+        reservation AND the submit-time feasibility check both use this,
+        so they can never diverge (the allocator's ``ensure`` is
+        infallible only while they agree)."""
+        return min(len(self.prompt) + self.max_new_tokens + 1, max_len)
+
 
 @dataclasses.dataclass
 class EngineStats:
-    steps: int = 0
+    steps: int = 0                 # jitted calls (prefill + decode)
+    decode_steps: int = 0
+    prefill_chunks: int = 0
     tokens_generated: int = 0
     requests_completed: int = 0
+    slot_occupancy: float = 0.0    # mean fraction of slots active per tick
+    requests: list = dataclasses.field(default_factory=list)
+
+    def latency_summary(self) -> dict:
+        from repro.serve.scheduler import latency_summary
+        return latency_summary(self.requests)
+
+
+class _Slot:
+    """Per-slot serving state (the request plus its progress)."""
+    __slots__ = ("req", "metrics", "phase", "pos", "cursor", "cur_token",
+                 "pf_cache")
+
+    def __init__(self, req, metrics):
+        self.req = req
+        self.metrics = metrics
+        self.phase = "prefill"     # "prefill" | "decode"
+        self.pos = 0               # prompt tokens prefilled (chunked mode)
+        self.cursor = None         # replay cursor (replay mode)
+        self.cur_token = 0
+        self.pf_cache = None
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, batch_slots: int,
                  max_len: int, temperature: float = 0.0,
-                 sparse: dict | None = None, impl: str = "ref"):
+                 sparse: dict | None = None, impl: str = "ref", *,
+                 paged: bool = True, block_size: int = 16,
+                 num_blocks: int | None = None, prefill_chunk: int = 16,
+                 prefill_mode: str = "auto", policy: str = "fcfs",
+                 max_prefill_streak: int = 2, seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.b = batch_slots
         self.max_len = max_len
         self.temperature = temperature
         self.sparse = sparse
-        self.cache = factory.init_cache(cfg, batch_slots, max_len)
-        self.slots: list[Request | None] = [None] * batch_slots
-        self.pending: deque[Request] = deque()
-        self.prompt_cursor = [0] * batch_slots
-        self.cur_token = np.zeros((batch_slots, 1), np.int32)
-        self.stats = EngineStats()
+        self.cache = make_kv_cache(cfg, batch_slots, max_len, paged=paged,
+                                   block_size=block_size,
+                                   num_blocks=num_blocks)
+        self.paged = paged
+        self.slots: list[_Slot | None] = [None] * batch_slots
+        self.seq_len = np.zeros(batch_slots, np.int32)
+        self.scheduler = Scheduler(policy=policy,
+                                   max_prefill_streak=max_prefill_streak)
+        self.stats = EngineStats(requests=self.scheduler.completed)
+        self._key = jax.random.PRNGKey(seed)
+        self._occ_accum = 0.0
+
+        if prefill_mode == "auto":
+            chunked = (factory.supports_chunked_prefill(cfg)
+                       if sparse is None else cfg.family == "dense")
+        elif prefill_mode == "chunked":
+            chunked = True
+        elif prefill_mode == "replay":
+            chunked = False
+        else:
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        self.chunked_prefill = chunked
+        self._prefiller = None
+        if chunked:
+            self._prefiller = ChunkedPrefiller(
+                cfg, prefill_chunk, max_len, self.cache.seq_names,
+                self.cache.state_names, sparse=sparse, impl=impl)
+
         if sparse is None:
-            self._step = jax.jit(
+            self._decode = jax.jit(
                 lambda p, c, b: serve_step_fn(cfg, p, c, b,
                                               temperature=temperature))
         else:
             # ESPIM-format decode: the packs are closure constants so the
             # fused kernel sees static chunk geometry
-            self._step = jax.jit(
+            self._decode = jax.jit(
                 lambda p, c, b: serve_step_sparse_fn(
                     cfg, p, sparse, c, b, temperature=temperature,
                     impl=impl))
 
+    # ------------------------------------------------------------ lifecycle
+    def reset_stats(self) -> None:
+        """Zero every counter and the per-request metrics — e.g. after a
+        jit-warmup request, so a benchmark measures steady state only."""
+        self.scheduler.completed.clear()
+        self._occ_accum = 0.0
+        self.stats = EngineStats(requests=self.scheduler.completed)
+
     def submit(self, req: Request) -> None:
-        self.pending.append(req)
+        worst = req.worst_case_tokens(self.max_len)
+        if self.paged and self.cache.blocks_needed(worst) > self.cache.num_blocks:
+            raise ValueError(
+                f"request {req.rid} needs {self.cache.blocks_needed(worst)} "
+                f"blocks but the arena holds {self.cache.num_blocks}")
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"request {req.rid} prompt ({len(req.prompt)}) exceeds "
+                f"max_len ({self.max_len})")
+        self.scheduler.add(req)
 
-    def _reset_slot(self, i: int) -> None:
-        # zero the slot's cache length; stale K/V beyond len is masked out
-        self.cache = dict(self.cache)
-        self.cache["len"] = self.cache["len"].at[i].set(0)
-        for key in ("ssm", "conv", "wkv", "tm_x", "cm_x"):
-            if key in self.cache:
-                self.cache[key] = self.cache[key].at[:, i].set(0)
-
-    def _fill_slots(self) -> None:
+    def _admit(self) -> None:
         for i in range(self.b):
-            if self.slots[i] is None and self.pending:
-                req = self.pending.popleft()
-                self.slots[i] = req
-                self.prompt_cursor[i] = 0
-                self._reset_slot(i)
-                self.cur_token[i, 0] = req.prompt[0]
+            if self.slots[i] is not None:
+                continue
+            if not self.scheduler.has_pending:
+                break
 
-    def step(self) -> None:
-        """One engine tick: decode every active slot by one token."""
-        self._fill_slots()
-        if all(s is None for s in self.slots):
-            return
-        batch = {"tokens": jnp.asarray(self.cur_token)}
-        nxt, _, self.cache = self._step(self.params, self.cache, batch)
+            def can_admit(r, slot=i):
+                return self.cache.reserve(
+                    slot, r.worst_case_tokens(self.max_len))
+
+            picked = self.scheduler.pick(can_admit)
+            if picked is None:
+                break
+            req, metrics = picked
+            st = _Slot(req, metrics)
+            self.seq_len[i] = 0
+            if self.chunked_prefill:
+                st.phase = "prefill"
+                st.pf_cache = self._prefiller.proto
+            else:
+                st.phase = "decode"
+                st.cursor = 0
+                st.cur_token = req.prompt[0]
+            self.slots[i] = st
+
+    def _finish(self, i: int) -> None:
+        st = self.slots[i]
+        st.req.done = True
+        self.scheduler.finish(st.metrics)
+        self.stats.requests_completed += 1
+        self.cache.free_slot(i)
+        self.slots[i] = None
+        self.seq_len[i] = 0
+
+    def _emit_token(self, i: int, tok: int) -> None:
+        st = self.slots[i]
+        if st.metrics.t_first is None:
+            st.metrics.t_first = time.monotonic()
+        st.req.output.append(tok)
+        st.metrics.n_out += 1
+        self.stats.tokens_generated += 1
+        st.cur_token = tok
+        seq_len = len(st.req.prompt) + len(st.req.output)
+        if (tok == st.req.eos_id
+                or len(st.req.output) >= st.req.max_new_tokens
+                or seq_len >= self.max_len - 1):
+            self._finish(i)
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # ----------------------------------------------------------- tick kinds
+    def _prefill_tick(self, i: int) -> None:
+        st = self.slots[i]
+        plen = len(st.req.prompt)
+        logits, st.pf_cache, n_valid = self._prefiller.run_chunk(
+            self.params, st.pf_cache, st.req.prompt, st.pos)
+        self.cache.ensure(i, st.pos + n_valid)
+        self.cache.scatter_chunk(
+            i, self._prefiller.chunk_rows(st.pf_cache, st.pos),
+            st.pos, n_valid)
+        st.pos += n_valid
+        self.stats.steps += 1
+        self.stats.prefill_chunks += 1
+        if st.pos >= plen:
+            # prompt fully prefilled: install recurrent states and sample
+            # the first token straight from the final chunk's logits
+            self.cache.set_slot_state(
+                i, self._prefiller.state_rows(st.pf_cache))
+            st.pf_cache = None
+            self.seq_len[i] = plen
+            last = logits[:, n_valid - 1]
+            tok = int(sample_tokens(self.cfg, last, self.temperature,
+                                    self._next_key())[0])
+            st.phase = "decode"
+            self._emit_token(i, tok)
+
+    def _decode_tick(self, decoding: list[int]) -> None:
+        cur = np.zeros((self.b, 1), np.int32)
+        lens = np.zeros(self.b, np.int32)
+        active = np.zeros(self.b, bool)
+        for i in decoding:
+            st = self.slots[i]
+            if st.cursor is not None and st.cursor < len(st.req.prompt):
+                cur[i, 0] = st.req.prompt[st.cursor]   # replay prefill
+            else:
+                cur[i, 0] = st.cur_token
+            lens[i] = self.seq_len[i]
+            active[i] = True
+            self.cache.ensure(i, int(self.seq_len[i]) + 1)
+        view = self.cache.gather_view(lens)
+        batch = {"tokens": jnp.asarray(cur), "rng": self._next_key()}
+        nxt, _, new_cache = self._decode(self.params, view, batch)
+        self.cache.apply_decode(new_cache, lens, active)
         nxt = np.asarray(nxt)
         self.stats.steps += 1
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            self.prompt_cursor[i] += 1
-            if self.prompt_cursor[i] < len(req.prompt):
-                # still prefilling: feed the next prompt token
-                self.cur_token[i, 0] = req.prompt[self.prompt_cursor[i]]
-                continue
-            tok = int(nxt[i, 0])
-            req.output.append(tok)
-            self.stats.tokens_generated += 1
-            self.cur_token[i, 0] = tok
-            seq_len = self.prompt_cursor[i] + len(req.output)
-            if (tok == req.eos_id or len(req.output) >= req.max_new_tokens
-                    or seq_len >= self.max_len - 1):
-                req.done = True
-                self.stats.requests_completed += 1
-                self.slots[i] = None
+        self.stats.decode_steps += 1
+        self._occ_accum += len(decoding) / self.b
+        self.stats.slot_occupancy = self._occ_accum / self.stats.decode_steps
+        for i in decoding:
+            st = self.slots[i]
+            self.seq_len[i] += 1
+            if st.cursor is not None and st.cursor < len(st.req.prompt):
+                st.cursor += 1
+                if st.cursor < len(st.req.prompt):
+                    continue        # still replaying: output ignored
+            self._emit_token(i, int(nxt[i, 0]))
+
+    # ------------------------------------------------------------- stepping
+    def step(self) -> None:
+        """One engine tick: a prefill chunk for one slot, or one decode
+        step across all decode-ready slots.  A fully idle engine (queue
+        drained, every slot empty) is a no-op — no wasted jitted call."""
+        self._admit()
+        prefilling = [i for i, s in enumerate(self.slots)
+                      if s is not None and s.phase == "prefill"]
+        decoding = [i for i, s in enumerate(self.slots)
+                    if s is not None and s.phase == "decode"]
+        action, target = self.scheduler.next_action(prefilling, decoding)
+        if action == "idle":
+            return
+        if action == "prefill":
+            self._prefill_tick(target)
+        else:
+            self._decode_tick(decoding)
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         for _ in range(max_steps):
-            if not self.pending and all(s is None for s in self.slots):
+            if (not self.scheduler.has_pending
+                    and all(s is None for s in self.slots)):
                 break
             self.step()
         return self.stats

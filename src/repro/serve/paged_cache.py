@@ -1,0 +1,336 @@
+"""Paged KV cache: a block-pool arena with per-slot block tables.
+
+The contiguous decode cache (``factory.init_cache``) charges every slot
+``max_len`` rows up front, so B slots of wildly different sequence lengths
+pay B * max_len.  Here the sequence-indexed leaves (k / v and their int8
+scales) live in one shared arena of ``num_blocks`` fixed-size blocks, and
+each slot owns an ordered block table mapping logical block -> physical
+block.  Blocks are allocated lazily as a slot's length grows and returned
+to the pool when the request finishes, so the arena can be sized for the
+*expected* total tokens in flight instead of the worst case per slot.
+
+Admission control is reservation-based: a request reserves its worst-case
+block count (prompt + max_new tokens) before taking a slot, and ``ensure``
+then draws from the free list as the sequence actually grows — the
+invariant ``free >= outstanding reservations`` means a mid-flight
+allocation can never fail.
+
+The decode/prefill steps keep the existing contiguous cache contract of
+``models/factory.py``: ``gather_view`` materializes a (Lx, B, S_view, ...)
+view from the pages (one jitted take per leaf, cached between decode ticks
+and invalidated when block tables change), ``apply_decode`` scatters each
+active slot's newly written row back into its page, and ``scatter_chunk``
+splices a prefill chunk's rows.  A production Pallas paged-attention
+kernel would consume the block table directly; the view keeps every model
+family working unmodified.
+
+Recurrent per-slot states (ssm / conv / wkv / tm_x / cm_x, whisper's cross
+caches) are O(1) per slot and stay slot-dense; ``len`` is host-managed by
+the engine.
+
+``ContiguousKVCache`` wraps the classic single-arena cache behind the same
+interface so the engine has one code path and the benchmark can check
+bit-parity between the two.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import factory
+
+__all__ = ["classify_cache", "PagedKVCache", "ContiguousKVCache",
+           "make_kv_cache"]
+
+# leaves indexed (Lx, B, S, ...) along the decode sequence — pageable
+_SEQ_NAMES = ("k", "v", "k_scale", "v_scale")
+
+
+def classify_cache(proto: dict, max_len: int):
+    """Split a ``factory.init_cache`` pytree into sequence-indexed leaves
+    (pageable) and per-slot state leaves.  Whisper's cross_k/cross_v are
+    encoder-length and never paged."""
+    seq, state = [], []
+    for name, leaf in proto.items():
+        if name == "len":
+            continue
+        if (name in _SEQ_NAMES and leaf.ndim >= 3
+                and leaf.shape[2] == max_len):
+            seq.append(name)
+        else:
+            state.append(name)
+    return seq, state
+
+
+class _KVCacheBase:
+    """Shared bookkeeping: leaf classification and slot-state splicing."""
+
+    def __init__(self, cfg: ModelConfig, batch_slots: int, max_len: int):
+        self.cfg = cfg
+        self.b = batch_slots
+        self.max_len = max_len
+        # shapes only — the full contiguous cache is never materialized in
+        # paged mode (it is the allocation the block pool exists to avoid)
+        proto = jax.eval_shape(
+            lambda: factory.init_cache(cfg, batch_slots, max_len))
+        self.seq_names, self.state_names = classify_cache(proto, max_len)
+        self.seq_shapes = {n: proto[n] for n in self.seq_names}
+        self.state = {n: jnp.zeros(proto[n].shape, proto[n].dtype)
+                      for n in self.state_names}
+
+    def set_slot_state(self, slot: int, state_rows: dict) -> None:
+        """Install a finished prefill's recurrent states for one slot.
+        state_rows: {name: (Lx, ...)} with the batch dim squeezed out."""
+        for name in self.state_names:
+            if name in state_rows:
+                self.state[name] = self.state[name].at[:, slot].set(
+                    state_rows[name])
+
+    def zero_slot_state(self, slot: int) -> None:
+        for name in self.state_names:
+            self.state[name] = self.state[name].at[:, slot].set(0)
+
+
+class PagedKVCache(_KVCacheBase):
+    def __init__(self, cfg: ModelConfig, batch_slots: int, max_len: int,
+                 block_size: int = 16, num_blocks: int | None = None):
+        super().__init__(cfg, batch_slots, max_len)
+        self.block_size = block_size
+        self.blocks_per_slot = -(-max_len // block_size)
+        if num_blocks is None:
+            num_blocks = batch_slots * self.blocks_per_slot
+        self.num_blocks = num_blocks
+        self.view_len = self.blocks_per_slot * block_size
+        # arenas: (Lx, B, S, ...) -> (Lx, num_blocks, block_size, ...)
+        self.pages = {
+            n: jnp.zeros(
+                (s.shape[0], num_blocks, block_size) + s.shape[3:],
+                s.dtype)
+            for n, s in self.seq_shapes.items()
+        }
+        # host-side allocator
+        self.block_tables = np.zeros((batch_slots, self.blocks_per_slot),
+                                     np.int32)
+        self.n_blocks = np.zeros(batch_slots, np.int32)
+        self._resv = np.zeros(batch_slots, np.int64)
+        self._free = list(range(num_blocks - 1, -1, -1))
+        self._view = None
+        self._view_dirty = True
+        self._build_jits()
+
+    # ---------------------------------------------------------------- jits
+    def _build_jits(self):
+        lx = {n: self.pages[n].shape[0] for n in self.seq_names}
+        b, nb = self.b, self.num_blocks
+        mb, bs = self.blocks_per_slot, self.block_size
+
+        @jax.jit
+        def gather(pages, bt_flat):
+            out = {}
+            for n, arena in pages.items():
+                v = jnp.take(arena, bt_flat, axis=1)
+                out[n] = v.reshape((lx[n], b, mb * bs) + arena.shape[3:])
+            return out
+
+        @jax.jit
+        def scatter_decode(pages, view, lens, phys, off):
+            iota = jnp.arange(b)
+            out = {}
+            for n, arena in pages.items():
+                row = view[n][:, iota, lens]          # (Lx, B, ...)
+                out[n] = arena.at[:, phys, off].set(row, mode="drop")
+            return out
+
+        @jax.jit
+        def scatter_chunk(pages, rows, phys, off):
+            return {n: pages[n].at[:, phys, off].set(rows[n], mode="drop")
+                    for n in pages}
+
+        @jax.jit
+        def mask_state(old, new, active):
+            def leaf(o, nw):
+                m = active.reshape((1, b) + (1,) * (o.ndim - 2))
+                return jnp.where(m, nw.astype(o.dtype), o)
+            return jax.tree.map(leaf, old, new)
+
+        self._gather = gather
+        self._scatter_decode = scatter_decode
+        self._scatter_chunk = scatter_chunk
+        self._mask_state = mask_state
+
+    # ----------------------------------------------------------- allocator
+    def blocks_needed(self, n_tokens: int) -> int:
+        return min(-(-n_tokens // self.block_size), self.blocks_per_slot)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def reserve(self, slot: int, n_tokens: int) -> bool:
+        """Admission control: reserve the worst-case block count for a
+        request.  False when the unreserved pool cannot cover it."""
+        need = self.blocks_needed(n_tokens) - int(self.n_blocks[slot])
+        avail = len(self._free) - int(self._resv.sum())
+        if need > avail:
+            return False
+        self._resv[slot] = max(need, 0)
+        return True
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        """Grow the slot's block table to address ``n_tokens`` tokens
+        (draws from the reservation, so it cannot fail post-admission)."""
+        need = self.blocks_needed(n_tokens)
+        while self.n_blocks[slot] < need:
+            if not self._free:
+                raise RuntimeError(
+                    "paged KV cache exhausted despite reservation — "
+                    "allocator invariant violated")
+            phys = self._free.pop()
+            self.block_tables[slot, self.n_blocks[slot]] = phys
+            self.n_blocks[slot] += 1
+            if self._resv[slot] > 0:
+                self._resv[slot] -= 1
+            self._view_dirty = True
+
+    def free_slot(self, slot: int) -> None:
+        for j in range(int(self.n_blocks[slot])):
+            self._free.append(int(self.block_tables[slot, j]))
+        self.n_blocks[slot] = 0
+        self._resv[slot] = 0
+        self.block_tables[slot] = 0
+        self.zero_slot_state(slot)
+        self._view_dirty = True
+
+    # --------------------------------------------------------------- views
+    def gather_view(self, lens) -> dict:
+        """Contiguous (Lx, B, view_len, ...) cache view for the jitted
+        decode step.  Rebuilt only when block tables changed; rows past a
+        slot's ``len`` may hold stale pool data — masked by attention."""
+        if self._view_dirty or self._view is None:
+            bt = jnp.asarray(self.block_tables.reshape(-1))
+            self._view = self._gather(self.pages, bt)
+            self._view_dirty = False
+        cache = dict(self._view)
+        cache.update(self.state)
+        cache["len"] = jnp.asarray(lens, jnp.int32)
+        return cache
+
+    def apply_decode(self, new_cache: dict, lens, active) -> None:
+        """Commit one decode tick: for each active slot, scatter the row
+        written at ``lens[i]`` into its page; inactive slots' writes are
+        dropped (OOB physical block) and their states restored."""
+        lens = np.asarray(lens)
+        active = np.asarray(active)
+        logical = np.minimum(lens // self.block_size,
+                             self.blocks_per_slot - 1)
+        phys = np.where(active,
+                        self.block_tables[np.arange(self.b), logical],
+                        self.num_blocks)                 # OOB -> dropped
+        off = lens % self.block_size
+        if self.pages:
+            self.pages = self._scatter_decode(
+                self.pages, {n: new_cache[n] for n in self.seq_names},
+                jnp.asarray(lens), jnp.asarray(phys), jnp.asarray(off))
+            # the view already contains this tick's writes for every slot;
+            # inactive slots' garbage rows sit beyond their len (masked)
+            # and tables are marked dirty whenever they change
+            self._view = {n: new_cache[n] for n in self.seq_names}
+        if self.state_names:
+            self.state = self._mask_state(
+                self.state, {n: new_cache[n] for n in self.state_names},
+                jnp.asarray(active.reshape(-1)))
+
+    def scatter_chunk(self, slot: int, rows: dict, start: int,
+                      count: int) -> None:
+        """Splice a prefill chunk's rows (Lx, C, ...) into the slot's pages
+        at positions start..start+count-1 (the C-count pad rows drop)."""
+        if not self.pages:
+            return
+        c = next(iter(rows.values())).shape[1]
+        positions = start + np.arange(c)
+        valid = np.arange(c) < count
+        logical = np.minimum(positions // self.block_size,
+                             self.blocks_per_slot - 1)
+        phys = np.where(valid, self.block_tables[slot, logical],
+                        self.num_blocks)
+        off = positions % self.block_size
+        self.pages = self._scatter_chunk(
+            self.pages, {n: rows[n] for n in self.seq_names},
+            jnp.asarray(phys), jnp.asarray(off))
+        self._view_dirty = True
+
+
+class ContiguousKVCache(_KVCacheBase):
+    """The classic one-arena-per-slot cache behind the paged interface."""
+
+    def __init__(self, cfg: ModelConfig, batch_slots: int, max_len: int,
+                 **_):
+        super().__init__(cfg, batch_slots, max_len)
+        self.view_len = max_len
+        self.store = {n: jnp.zeros(s.shape, s.dtype)
+                      for n, s in self.seq_shapes.items()}
+        b = batch_slots
+
+        @jax.jit
+        def apply_decode(store, state, new_cache, lens, active):
+            s_out = {}
+            for n, old in store.items():
+                s = old.shape[2]
+                at_pos = ((jnp.arange(s)[None, :] == lens[:, None])
+                          & active[:, None])             # (B, S)
+                m = at_pos.reshape((1, b, s) + (1,) * (old.ndim - 3))
+                s_out[n] = jnp.where(m, new_cache[n].astype(old.dtype), old)
+            st_out = {}
+            for n, old in state.items():
+                m = active.reshape((1, b) + (1,) * (old.ndim - 2))
+                st_out[n] = jnp.where(m, new_cache[n].astype(old.dtype),
+                                      old)
+            return s_out, st_out
+
+        self._apply = apply_decode
+
+    def blocks_needed(self, n_tokens: int) -> int:
+        return 0
+
+    def reserve(self, slot: int, n_tokens: int) -> bool:
+        return True
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        pass
+
+    def free_slot(self, slot: int) -> None:
+        # stale K/V rows beyond len are masked out; states must be zeroed
+        self.zero_slot_state(slot)
+
+    def gather_view(self, lens) -> dict:
+        cache = dict(self.store)
+        cache.update(self.state)
+        cache["len"] = jnp.asarray(lens, jnp.int32)
+        return cache
+
+    def apply_decode(self, new_cache: dict, lens, active) -> None:
+        self.store, self.state = self._apply(
+            self.store, self.state, new_cache,
+            jnp.asarray(np.asarray(lens)),
+            jnp.asarray(np.asarray(active).reshape(-1)))
+
+    def scatter_chunk(self, slot: int, rows: dict, start: int,
+                      count: int) -> None:
+        for n in self.seq_names:
+            self.store[n] = self.store[n].at[
+                :, slot, start : start + count].set(rows[n][:, :count])
+
+
+def make_kv_cache(cfg: ModelConfig, batch_slots: int, max_len: int,
+                  paged: bool = True, block_size: int = 16,
+                  num_blocks: int | None = None):
+    if paged:
+        return PagedKVCache(cfg, batch_slots, max_len,
+                            block_size=block_size, num_blocks=num_blocks)
+    return ContiguousKVCache(cfg, batch_slots, max_len)

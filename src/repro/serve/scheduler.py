@@ -1,0 +1,149 @@
+"""Latency-aware request scheduling for the serving engine.
+
+SparseP's lesson — static, balance-aware assignment of sparse work onto
+fixed execution units — maps onto serving: requests of wildly different
+prompt/output lengths must be assigned to a fixed set of decode slots
+without letting one long prompt monopolize the engine.  The scheduler
+owns three decisions:
+
+* **admission** — which pending request takes a freed slot.  ``fcfs``
+  (arrival order) or ``sjf`` (shortest-prompt-first, which minimizes mean
+  TTFT under load, at the cost of tail latency for long prompts).
+  Admission is gated on the paged cache's worst-case block reservation,
+  so an admitted request can never deadlock the arena mid-flight.
+* **prefill/decode interleave** — each engine tick is either one prefill
+  chunk (for one slot) or one batched decode step (for every decode-ready
+  slot).  At most ``max_prefill_streak`` consecutive prefill ticks run
+  while any slot is decode-ready, so decode (TPOT) is never starved by a
+  long prompt; with no decode-ready slots, prefill runs back-to-back.
+* **metrics** — per-request queue delay, TTFT (submit -> first generated
+  token) and TPOT (mean inter-token time after the first), aggregated
+  into p50/p95 summaries for the engine's ``EngineStats``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+__all__ = ["RequestMetrics", "Scheduler", "percentiles",
+           "latency_summary"]
+
+POLICIES = ("fcfs", "sjf")
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    rid: int
+    prompt_len: int
+    t_submit: float
+    t_admit: float | None = None
+    t_first: float | None = None
+    t_done: float | None = None
+    n_out: int = 0
+
+    @property
+    def queue_delay(self) -> float | None:
+        if self.t_admit is None:
+            return None
+        return self.t_admit - self.t_submit
+
+    @property
+    def ttft(self) -> float | None:
+        if self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
+
+    @property
+    def tpot(self) -> float | None:
+        """Mean time-per-output-token after the first."""
+        if self.t_done is None or self.t_first is None or self.n_out < 2:
+            return None
+        return (self.t_done - self.t_first) / (self.n_out - 1)
+
+
+def percentiles(xs, qs=(50, 95)) -> dict:
+    xs = [x for x in xs if x is not None]
+    if not xs:
+        return {f"p{q}": None for q in qs}
+    return {f"p{q}": float(np.percentile(np.asarray(xs), q)) for q in qs}
+
+
+def latency_summary(done: list[RequestMetrics]) -> dict:
+    """p50/p95 report over completed requests (shared by the scheduler's
+    summary and the engine's EngineStats)."""
+    return {
+        "requests": len(done),
+        "ttft_s": percentiles([m.ttft for m in done]),
+        "tpot_s": percentiles([m.tpot for m in done]),
+        "queue_delay_s": percentiles([m.queue_delay for m in done]),
+    }
+
+
+class Scheduler:
+    def __init__(self, policy: str = "fcfs", max_prefill_streak: int = 2):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; use {POLICIES}")
+        self.policy = policy
+        self.max_prefill_streak = max(1, max_prefill_streak)
+        self.pending: list = []       # [(request, RequestMetrics)]
+        self.completed: list[RequestMetrics] = []
+        self._streak = 0
+
+    # ----------------------------------------------------------- admission
+    def add(self, request) -> RequestMetrics:
+        m = RequestMetrics(rid=request.rid, prompt_len=len(request.prompt),
+                           t_submit=time.monotonic())
+        self.pending.append((request, m))
+        return m
+
+    @property
+    def has_pending(self) -> bool:
+        return bool(self.pending)
+
+    def pick(self, can_admit) -> tuple | None:
+        """Choose the next request for a free slot per policy; ``can_admit``
+        (request -> bool) is the cache's reservation gate.  FCFS respects
+        head-of-line order (a blocked head blocks the queue — its
+        reservation will succeed as slots drain); SJF scans by prompt
+        length."""
+        if not self.pending:
+            return None
+        if self.policy == "sjf":
+            order = sorted(range(len(self.pending)),
+                           key=lambda i: (len(self.pending[i][0].prompt), i))
+        else:
+            order = range(len(self.pending))
+        for i in order:
+            req, m = self.pending[i]
+            if can_admit(req):
+                self.pending.pop(i)
+                m.t_admit = time.monotonic()
+                return req, m
+            if self.policy == "fcfs":
+                return None     # head-of-line blocking by design
+        return None
+
+    # ---------------------------------------------------------- interleave
+    def next_action(self, prefilling: list[int],
+                    decoding: list[int]) -> tuple[str, int | None]:
+        """One engine tick: ('prefill', slot) | ('decode', None) |
+        ('idle', None).  Decode is forced after ``max_prefill_streak``
+        consecutive prefill ticks whenever any slot is decode-ready."""
+        if not prefilling and not decoding:
+            return "idle", None
+        if prefilling and (not decoding
+                           or self._streak < self.max_prefill_streak):
+            self._streak += 1
+            return "prefill", prefilling[0]
+        self._streak = 0
+        return "decode", None
+
+    # ------------------------------------------------------------- metrics
+    def finish(self, metrics: RequestMetrics) -> None:
+        metrics.t_done = time.monotonic()
+        self.completed.append(metrics)
+
+    def summary(self) -> dict:
+        return latency_summary(self.completed)

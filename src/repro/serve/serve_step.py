@@ -17,23 +17,36 @@ from repro.models import factory
 from repro.sharding import partition
 
 __all__ = ["serve_step_fn", "serve_step_sparse_fn", "make_serve_step",
-           "prefill_fn"]
+           "prefill_fn", "sample_tokens"]
 
 
-def _sample_next(cfg: ModelConfig, logits, batch: dict, temperature: float):
-    """Greedy/temperature sampling over the vocab (padding masked)."""
-    last = logits[:, -1, :].astype(jnp.float32)
+def sample_tokens(cfg: ModelConfig, last, temperature: float, rng=None):
+    """Greedy/temperature sampling over one position's logits (B, V),
+    vocab padding masked.  Returns (B,) int32.
+
+    The caller owns the key: the engine splits a fresh subkey per step
+    (``batch["rng"]``), so temperature sampling draws an independent
+    perturbation every tick instead of replaying PRNGKey(0) forever.
+    """
+    last = last.astype(jnp.float32)
     if cfg.padded_vocab != cfg.vocab_size:
         pad = cfg.padded_vocab - cfg.vocab_size
         last = jnp.concatenate(
             [last[:, : cfg.vocab_size],
              jnp.full((last.shape[0], pad), -1e30)], axis=-1)
     if temperature > 0.0:
-        key = batch.get("rng", jax.random.PRNGKey(0))
+        key = rng if rng is not None else jax.random.PRNGKey(0)
         nxt = jax.random.categorical(key, last / temperature, axis=-1)
     else:
         nxt = jnp.argmax(last, axis=-1)
-    return nxt[:, None].astype(jnp.int32)
+    return nxt.astype(jnp.int32)
+
+
+def _sample_next(cfg: ModelConfig, logits, batch: dict, temperature: float):
+    """Sampling over the final position of decode logits (B, 1, V)."""
+    nxt = sample_tokens(cfg, logits[:, -1, :], temperature,
+                        batch.get("rng"))
+    return nxt[:, None]
 
 
 def serve_step_fn(cfg: ModelConfig, params, cache: dict, batch: dict,
@@ -57,7 +70,9 @@ def serve_step_sparse_fn(cfg: ModelConfig, params, sparse: dict,
 
 
 def prefill_fn(cfg: ModelConfig, params, batch: dict):
-    """Full-sequence forward (the prefill-shape cells lower this)."""
+    """Full-sequence forward (the prefill-shape cells lower this).  The
+    serving TTFT path instead jits ``factory.prefill_chunk`` directly —
+    see ``serve/prefill.ChunkedPrefiller``."""
     logits, _ = factory.apply_train(cfg, params, batch)
     return logits
 

@@ -22,7 +22,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 
 __all__ = [
     "batch_axes", "mesh_axis_size", "param_pspecs", "batch_pspecs",
-    "cache_pspecs", "named", "logical_to_sharding",
+    "cache_pspecs", "paged_cache_pspecs", "named", "logical_to_sharding",
 ]
 
 
@@ -207,6 +207,30 @@ def cache_pspecs(cache_tree, mesh: Mesh):
         return P(*(None,) * nd)
 
     return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def paged_cache_pspecs(pages_tree, mesh: Mesh):
+    """Block-pool KV arenas: (Lx, num_blocks, block_size, KV[, hd]).
+
+    A block is the paging unit, so it must live wholly on one shard: the
+    *blocks* axis shards over the batch axes (pages of concurrent slots
+    spread across the data-parallel devices — the slot -> block-table
+    indirection is position-free, so any block placement is legal), KV
+    heads take 'model' as in ``cache_pspecs``, and the intra-block
+    sequence axis is never split.  Block tables are host-side numpy and
+    need no spec.
+    """
+    ba = batch_axes(mesh)
+
+    def leaf_spec(leaf):
+        nd = len(leaf.shape)
+        if nd < 4:
+            return P(*(None,) * nd)
+        axes = (None, _fit(mesh, leaf.shape[1], ba), None,
+                _fit(mesh, leaf.shape[3], "model")) + (None,) * (nd - 4)
+        return P(*axes)
+
+    return jax.tree_util.tree_map(leaf_spec, pages_tree)
 
 
 def named(mesh: Mesh, spec_tree):

@@ -1,0 +1,76 @@
+"""Scheduler: admission policies, prefill/decode interleave, metrics."""
+import numpy as np
+import pytest
+
+from repro.serve.scheduler import RequestMetrics, Scheduler, percentiles
+
+
+class _Req:
+    def __init__(self, rid, plen):
+        self.rid = rid
+        self.prompt = list(range(plen))
+
+
+def test_fcfs_order_and_head_of_line():
+    s = Scheduler(policy="fcfs")
+    for rid, plen in enumerate([8, 2, 4]):
+        s.add(_Req(rid, plen))
+    got = [s.pick(lambda r: True)[0].rid for _ in range(3)]
+    assert got == [0, 1, 2]
+    # a blocked head blocks the queue (its reservation wins as slots drain)
+    s.add(_Req(9, 100))
+    s.add(_Req(10, 1))
+    assert s.pick(lambda r: len(r.prompt) < 50) is None
+
+
+def test_sjf_picks_shortest_prompt():
+    s = Scheduler(policy="sjf")
+    for rid, plen in enumerate([8, 2, 4]):
+        s.add(_Req(rid, plen))
+    got = [s.pick(lambda r: True)[0].rid for _ in range(3)]
+    assert got == [1, 2, 0]
+    # sjf skips an oversized head and admits a fitting request
+    s.add(_Req(9, 100))
+    s.add(_Req(10, 1))
+    assert s.pick(lambda r: len(r.prompt) < 50)[0].rid == 10
+
+
+def test_interleave_never_starves_decode():
+    s = Scheduler(policy="fcfs", max_prefill_streak=2)
+    actions = [s.next_action([0], [1])[0] for _ in range(9)]
+    # at most 2 prefill ticks in a row whenever a slot is decode-ready
+    assert "decode" in actions
+    run = 0
+    for a in actions:
+        run = run + 1 if a == "prefill" else 0
+        assert run <= 2
+    # without decode-ready slots, prefill runs back-to-back
+    s2 = Scheduler(max_prefill_streak=1)
+    assert all(s2.next_action([0], [])[0] == "prefill" for _ in range(5))
+    assert s2.next_action([], [])[0] == "idle"
+
+
+def test_metrics_lifecycle():
+    s = Scheduler()
+    m = s.add(_Req(0, 4))
+    assert m.ttft is None and m.queue_delay is None
+    req, m2 = s.pick(lambda r: True)
+    assert m2 is m and m.queue_delay >= 0
+    m.t_first = m.t_admit + 0.5
+    m.n_out = 3
+    s.finish(m)
+    assert m.ttft >= 0.5 and m.tpot is not None
+    summ = s.summary()
+    assert summ["requests"] == 1
+    assert summ["ttft_s"]["p50"] is not None
+
+
+def test_percentiles_empty_and_filtering():
+    assert percentiles([])["p50"] is None
+    got = percentiles([None, 1.0, 3.0])
+    assert got["p50"] == 2.0
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError):
+        Scheduler(policy="lifo")

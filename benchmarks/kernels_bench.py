@@ -1,23 +1,28 @@
 """Kernel micro-benchmarks.
 
-Two suites, both timed on this host's backend through the jnp lowering
-paths (interpret-mode Pallas timing is meaningless on CPU; on TPU the same
-harness times the Pallas kernels natively by passing ``impl=None``):
+Three suites, timed on this host's backend through the jnp lowering paths
+(interpret-mode Pallas timing is meaningless on CPU; on TPU the same
+harness times the Pallas kernels natively — ``ESPIM_IMPL`` /
+``ESPIM_FORCE_INTERPRET`` pin the dispatch, and the recorded
+``provenance`` block says what actually ran):
 
 * ``unbatched``: ESPIM chunked-ELL spmv vs dense MV on the seed shapes,
   plus pack statistics — continuity with earlier PRs' CSV rows.
-* ``batched_decode``: the serving hot path.  Old = the seed einsum
-  formulation (materializes the (R_pad, L, B) gathered tensor); new = the
-  fused per-chunk gather-accumulate over the column-chunked pack (peak
-  intermediate (R_pad, Lc, B), one chunk at a time).  Swept over batch
-  widths and chunk sizes on Table III LLaMA-7B serving matrices at the
-  paper's 90% sparsity.
+* ``batched_decode``: the serving hot path on Table III LLaMA-7B matrices
+  at the paper's 90% sparsity, swept over batch widths.  Three datapaths
+  per case: the seed einsum (materializes (R_pad, L, B)), the PR 2
+  single-width chunked pack, and the PR 3 width-bucketed pack (2-4
+  per-bucket ELL widths -> less gather volume; ``fused_us`` is the
+  bucketed path, ``prev_fused_us`` the PR 2 one).
+* ``--smoke``: a single fused gate+up+down decode layer on tiny shapes,
+  asserted against the dense pruned MLP — the CI fail-fast microbench.
 
-Besides the CSV rows, writes machine-readable ``BENCH_kernels.json`` in
-the working directory so the perf trajectory is tracked across PRs.
+Writes machine-readable ``BENCH_kernels.json`` in the working directory so
+the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import time
 
@@ -26,12 +31,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pruning import magnitude_prune
-from repro.core.sparse_format import chunk_pack, pack_ell
+from repro.core.sparse_format import chunk_pack, pack_bucketed_stack, pack_ell
 from repro.kernels import ops, ref
 
 from benchmarks.common import csv_row
 
 JSON_PATH = "BENCH_kernels.json"
+SMOKE_JSON_PATH = "BENCH_kernels_smoke.json"
 
 # the decode sweep: Table III serving matrices (paper Section IV) at the
 # headline 90% sparsity, batch widths around continuous-batching slots
@@ -41,6 +47,7 @@ DECODE_SHAPES = (
 )
 DECODE_BATCH = (8, 16, 32)
 DECODE_CHUNKS = (512, 1024)
+N_BUCKETS = 4
 
 
 def _time(fn, *args, iters=5):
@@ -80,6 +87,22 @@ def _bench_unbatched(rows: list[str], report: dict) -> None:
         })
 
 
+def _bucketed_fn(pack, impl="ref"):
+    """Jitted bucketed SpMV: per-bucket launches, packed-order output —
+    the PR 3 serving decode datapath for one projection."""
+    bufs = [(jnp.asarray(b["values"][0]), jnp.asarray(b["cols"][0], jnp.int32))
+            for b in pack.buckets]
+    cc = pack.chunk_cols
+
+    @jax.jit
+    def fused(x):
+        outs = [ops.espim_spmv_batched(v, c, x, chunk_cols=cc, impl=impl)
+                for v, c in bufs]
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+
+    return fused
+
+
 def _bench_batched_decode(rows: list[str], report: dict) -> None:
     rng = np.random.default_rng(1)
     for name, r, c, s in DECODE_SHAPES:
@@ -90,69 +113,173 @@ def _bench_batched_decode(rows: list[str], report: dict) -> None:
         old_fn = jax.jit(ref.espim_spmv_batched_ref)
 
         chunked = {cc: chunk_pack(plain, cc) for cc in DECODE_CHUNKS}
+        # bucketed packs: the chunk sweep plus the full-width (K=1) layout,
+        # where per-(row, chunk) count variance cannot inflate the widths
+        bucketed = {cc: pack_bucketed_stack([[w]], row_tile=128,
+                                            chunk_cols=cc,
+                                            n_buckets=N_BUCKETS)
+                    for cc in (*DECODE_CHUNKS, c)}
         for b in DECODE_BATCH:
             x = jnp.asarray(rng.standard_normal((c, b)), jnp.float32)
             us_old = _time(old_fn, v2, c2, x, iters=3)
-            old_peak = plain.r_pad * plain.ell_width * b * 4
-            best = None
+
+            prev = None
             for cc, cp in chunked.items():
                 v3 = jnp.asarray(cp.values)
                 c3 = jnp.asarray(cp.cols, jnp.int32)
-                new_fn = jax.jit(lambda v, cl, xx, _cc=cc: ops.espim_spmv_batched(
+                fn = jax.jit(lambda v, cl, xx, _cc=cc: ops.espim_spmv_batched(
                     v, cl, xx, chunk_cols=_cc, impl="ref"))
-                us_new = _time(new_fn, v3, c3, x, iters=3)
-                entry = {
-                    "shape": name, "rows": r, "cols": c, "sparsity": s,
-                    "B": b, "chunk_cols": cc,
-                    "n_chunks": cp.n_chunks, "chunk_width": cp.chunk_width,
-                    "ell_width": plain.ell_width,
-                    "einsum_us": round(us_old, 1),
-                    "fused_us": round(us_new, 1),
-                    "speedup": round(us_old / us_new, 3),
-                    "einsum_peak_bytes": old_peak,
-                    "fused_peak_bytes": plain.r_pad * cp.chunk_width * b * 4,
-                }
-                report["batched_decode"].append(entry)
-                if best is None or us_new < best["fused_us"]:
-                    best = entry
+                us = _time(fn, v3, c3, x, iters=3)
+                cand = {"chunk_cols": cc, "us": round(us, 1),
+                        "chunk_width": cp.chunk_width,
+                        "pad_frac": round(cp.stats.padding_frac, 4)}
+                if prev is None or us < prev["us"]:
+                    prev = cand
+
+            best = None
+            detail = []
+            for cc, bp in bucketed.items():
+                us = _time(_bucketed_fn(bp), x, iters=3)
+                cand = {"chunk_cols": cc, "us": round(us, 1),
+                        "bucket_rows": list(bp.bucket_rows),
+                        "bucket_widths": list(bp.widths),
+                        "pad_frac": round(bp.pad_frac, 4)}
+                detail.append(cand)
+                if best is None or us < best["us"]:
+                    best = cand
+
+            entry = {
+                "shape": name, "rows": r, "cols": c, "sparsity": s, "B": b,
+                "ell_width": plain.ell_width,
+                "einsum_us": round(us_old, 1),
+                "prev_fused_us": prev["us"],
+                "prev_chunk_cols": prev["chunk_cols"],
+                "prev_pad_frac": prev["pad_frac"],
+                "fused_us": best["us"],
+                "chunk_cols": best["chunk_cols"],
+                "bucket_widths": best["bucket_widths"],
+                "pad_frac": best["pad_frac"],
+                "speedup_vs_einsum": round(us_old / best["us"], 3),
+                "speedup_vs_prev": round(prev["us"] / best["us"], 3),
+                "bucketed_configs": detail,
+            }
+            report["batched_decode"].append(entry)
             rows.append(csv_row(
                 f"kernels/espim_spmv_batched/{name}_s{int(s*100)}_B{b}",
-                best["fused_us"],
-                f"einsum_us={us_old:.1f};speedup={best['speedup']:.2f}x;"
-                f"chunk_cols={best['chunk_cols']};"
-                f"peak_mb={best['fused_peak_bytes']/2**20:.1f}"
-                f"(was {old_peak/2**20:.1f})"))
+                entry["fused_us"],
+                f"einsum_us={us_old:.1f};prev_us={prev['us']:.1f};"
+                f"speedup_vs_prev={entry['speedup_vs_prev']:.2f}x;"
+                f"pad_frac={best['pad_frac']:.3f}"
+                f"(was {prev['pad_frac']:.3f})"))
 
 
-def run(scale=None) -> list[str]:
+def _smoke(report: dict) -> None:
+    """Single fused decode layer, tiny shapes: parity-asserted timing of
+    the serving MLP datapath (gate+up fused SpMV -> product in packed
+    order -> perm-folded down SpMV) vs the dense pruned MLP."""
+    from repro.configs.registry import get_config
+    from repro.core import sparse_model as SM
+    from repro.models import factory
+
+    cfg = get_config("llama7b-espim", reduced=True)
+    params = factory.init_params(cfg, jax.random.PRNGKey(0))
+    sparse = SM.sparsify_mlps(cfg, params, 0.9)
+    rng = np.random.default_rng(0)
+    hn = jnp.asarray(rng.standard_normal((8, 1, cfg.d_model)), jnp.float32)
+    bufs = jax.tree.map(lambda x: x[0], SM._scan_bufs(sparse))
+    wl = {n: sparse[f"{n}_pruned"][0] for n in ("w_gate", "w_up", "w_down")}
+
+    fused = jax.jit(lambda x: SM._fused_mlp(cfg, sparse, bufs, x, "ref"))
+    dense = jax.jit(lambda x: SM._pruned_mlp(cfg, sparse, wl, x))
+    got, want = fused(hn), dense(hn)
+    err = float(jnp.abs(got - want).max() / jnp.abs(want).max())
+    assert err < 5e-5, f"fused decode layer diverged from pruned dense: {err}"
+
+    report["smoke_result"] = {
+        "arch": cfg.name, "reduced": True, "B": 8,
+        "fused_layer_us": round(_time(fused, hn), 1),
+        "dense_layer_us": round(_time(dense, hn), 1),
+        "max_rel_err": err,
+        "gateup_buckets": list(sparse["gateup"]["bucket_rows"]),
+        "gateup_widths": list(sparse["gateup"]["widths"]),
+    }
+
+
+def check_schema(report: dict, smoke: bool) -> None:
+    assert report["schema"] == "espim-kernels-bench/v2"
+    assert "provenance" in report and "backend" in report["provenance"]
+    if smoke:
+        s = report["smoke_result"]
+        for k in ("fused_layer_us", "dense_layer_us", "max_rel_err"):
+            assert k in s, f"smoke_result.{k} missing"
+        return
+    for e in report["batched_decode"]:
+        for k in ("einsum_us", "prev_fused_us", "fused_us", "pad_frac",
+                  "speedup_vs_prev"):
+            assert k in e, f"batched_decode.{k} missing"
+
+
+def run(smoke: bool = False) -> list[str]:
     rows: list[str] = []
     report = {
-        "schema": "espim-kernels-bench/v1",
+        "schema": "espim-kernels-bench/v2",
         "backend": jax.default_backend(),
+        "provenance": ops.provenance(impl="ref"),
+        "smoke": smoke,
         "unbatched": [],
         "batched_decode": [],
     }
-    _bench_unbatched(rows, report)
-    _bench_batched_decode(rows, report)
-
-    b8 = [e for e in report["batched_decode"] if e["B"] >= 8]
-    by_case: dict = {}
-    for e in b8:  # best chunk size per (shape, B): what serving would pick
-        by_case.setdefault((e["shape"], e["B"]), []).append(e)
-    best_speedups = {
-        f"{shape}/B{b}": max(es, key=lambda e: e["speedup"])["speedup"]
-        for (shape, b), es in by_case.items()
-    }
-    report["summary"] = {
-        "fused_vs_einsum_best_speedup": best_speedups,
-        "min_speedup_at_B_ge_8": min(best_speedups.values())
-        if best_speedups else None,
-    }
-    with open(JSON_PATH, "w") as f:
+    if smoke:
+        _smoke(report)
+    else:
+        _bench_unbatched(rows, report)
+        _bench_batched_decode(rows, report)
+        by_case = {f"{e['shape']}/B{e['B']}": e
+                   for e in report["batched_decode"] if e["B"] >= 8}
+        report["summary"] = {
+            "fused_vs_einsum_best_speedup": {
+                k: e["speedup_vs_einsum"] for k, e in by_case.items()},
+            "fused_vs_prev_speedup": {
+                k: e["speedup_vs_prev"] for k, e in by_case.items()},
+            "min_speedup_at_B_ge_8": min(
+                (e["speedup_vs_einsum"] for e in by_case.values()),
+                default=None),
+            "min_speedup_vs_prev_at_B_ge_8": min(
+                (e["speedup_vs_prev"] for e in by_case.values()),
+                default=None),
+            "pad_frac_at_best_speed": min(
+                (e["pad_frac"] for e in by_case.values()), default=None),
+            # the bucketing acceptance metric: best padding any bucketed
+            # layout achieves on the LLaMA-7B shapes (the full-width K=1
+            # configs, where chunk-count variance cannot inflate widths)
+            "min_pad_frac_bucketed": min(
+                (c["pad_frac"] for e in by_case.values()
+                 for c in e["bucketed_configs"]), default=None),
+        }
+    check_schema(report, smoke)
+    with open(SMOKE_JSON_PATH if smoke else JSON_PATH, "w") as f:
         json.dump(report, f, indent=2)
     return rows
 
 
 if __name__ == "__main__":
-    for row in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single fused decode layer, tiny shapes, parity "
+                         "asserted (CI fail-fast)")
+    args = ap.parse_args()
+    for row in run(smoke=args.smoke):
         print(row)
+    with open(SMOKE_JSON_PATH if args.smoke else JSON_PATH) as f:
+        doc = json.load(f)
+    if args.smoke:
+        s = doc["smoke_result"]
+        print(f"smoke ok: fused layer {s['fused_layer_us']:.0f}us vs dense "
+              f"{s['dense_layer_us']:.0f}us (err {s['max_rel_err']:.1e}); "
+              f"wrote {SMOKE_JSON_PATH}")
+    else:
+        print(f"wrote {JSON_PATH}: min fused-vs-einsum speedup at B>=8 = "
+              f"{doc['summary']['min_speedup_at_B_ge_8']}, vs PR2 fused = "
+              f"{doc['summary']['min_speedup_vs_prev_at_B_ge_8']}, min "
+              f"bucketed pad_frac = "
+              f"{doc['summary']['min_pad_frac_bucketed']}")

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
@@ -26,6 +27,7 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.core.sparse_model import sparsify_mlps
+from repro.kernels import ops
 from repro.models import factory
 from repro.serve.engine import Request, ServeEngine
 
@@ -70,7 +72,11 @@ def drive(eng, trace):
 
 
 def bench_mode(cfg, params, trace, *, sparse=None, slots, max_len,
-               block_size, chunk, paged=True):
+               block_size, chunk, paged=True, repeats=3):
+    """Drive the trace ``repeats`` times on one warmed engine and keep the
+    best run — single-shot wall clocks on a shared host are too noisy for
+    a steady-state serving number (same best-of discipline as the kernel
+    bench's ``_time``)."""
     eng = ServeEngine(cfg, params, batch_slots=slots, max_len=max_len,
                       sparse=sparse, paged=paged, block_size=block_size,
                       prefill_chunk=chunk)
@@ -78,23 +84,30 @@ def bench_mode(cfg, params, trace, *, sparse=None, slots, max_len,
     warm = Request(rid=-1, prompt=[1] * (chunk + 2), max_new_tokens=2)
     eng.submit(warm)
     eng.run()
-    eng.reset_stats()
 
-    reqs, dt = drive(eng, trace)
-    lat = eng.stats.latency_summary()
-    return {
-        "throughput_tok_s": eng.stats.tokens_generated / max(dt, 1e-9),
-        "tokens": eng.stats.tokens_generated,
-        "requests": eng.stats.requests_completed,
-        "engine_steps": eng.stats.steps,
-        "prefill_chunks": eng.stats.prefill_chunks,
-        "decode_steps": eng.stats.decode_steps,
-        "slot_occupancy": eng.stats.slot_occupancy,
-        "ttft_s": lat["ttft_s"],
-        "tpot_s": lat["tpot_s"],
-        "queue_delay_s": lat["queue_delay_s"],
-        "wall_s": dt,
-    }, [r.output for r in reqs]
+    best, toks = None, None
+    for _ in range(repeats):
+        eng.reset_stats()
+        reqs, dt = drive(eng, trace)
+        lat = eng.stats.latency_summary()
+        res = {
+            "throughput_tok_s": eng.stats.tokens_generated / max(dt, 1e-9),
+            "tokens": eng.stats.tokens_generated,
+            "requests": eng.stats.requests_completed,
+            "engine_steps": eng.stats.steps,
+            "prefill_chunks": eng.stats.prefill_chunks,
+            "decode_steps": eng.stats.decode_steps,
+            "slot_occupancy": eng.stats.slot_occupancy,
+            "ttft_s": lat["ttft_s"],
+            "tpot_s": lat["tpot_s"],
+            "queue_delay_s": lat["queue_delay_s"],
+            "wall_s": dt,
+            "repeats": repeats,
+        }
+        if best is None or res["throughput_tok_s"] > best["throughput_tok_s"]:
+            best = res
+            toks = [r.output for r in reqs]
+    return best, toks
 
 
 def bench_ttft(cfg, params, prompt_len, chunk, max_len):
@@ -135,6 +148,8 @@ def check_schema(doc: dict) -> None:
                   "tpot_s", "queue_delay_s", "slot_occupancy"):
             assert k in m, f"modes.{mode}.{k} missing"
         assert m["ttft_s"]["p50"] is not None
+    assert "provenance" in doc and "backend" in doc["provenance"]
+    assert doc["sparse_dense_ratio"] > 0
     t = doc["ttft_improvement"]
     for k in ("prompt_len", "chunk", "speedup", "call_reduction",
               "chunked", "replay"):
@@ -176,6 +191,8 @@ def main():
         cfg, params, trace, sparse=sparse, slots=slots, max_len=max_len,
         block_size=block_size, chunk=chunk, paged=True)
 
+    ratio = (modes["sparse"]["throughput_tok_s"]
+             / max(modes["dense"]["throughput_tok_s"], 1e-9))
     doc = {
         "bench": "serve",
         "arch": ARCH,
@@ -187,7 +204,9 @@ def main():
         "prefill_chunk": chunk,
         "n_requests": len(trace),
         "sparsity": SPARSITY,
+        "provenance": ops.provenance(impl="ref"),
         "modes": modes,
+        "sparse_dense_ratio": ratio,
         "ttft_improvement": bench_ttft(cfg, params, ttft_prompt, chunk,
                                        max_len),
         "paged_parity": parity,
@@ -198,11 +217,24 @@ def main():
     t = doc["ttft_improvement"]
     print(f"wrote {args.out}: dense "
           f"{modes['dense']['throughput_tok_s']:.1f} tok/s, sparse "
-          f"{modes['sparse']['throughput_tok_s']:.1f} tok/s; TTFT@"
+          f"{modes['sparse']['throughput_tok_s']:.1f} tok/s "
+          f"(ratio {ratio:.2f}); TTFT@"
           f"{t['prompt_len']} chunked {t['chunked']['ttft_s']:.3f}s vs "
           f"replay {t['replay']['ttft_s']:.3f}s "
           f"({t['speedup']:.1f}x wall, {t['call_reduction']:.1f}x fewer "
           f"jitted calls); paged parity: {parity}")
+    if ratio < 1.0:
+        print(
+            "\n" + "!" * 72 + "\n"
+            f"!! WARNING: ESPIM-sparse serving is SLOWER than dense "
+            f"(ratio {ratio:.2f}).\n"
+            f"!! The compressed format should never lose the serving race "
+            f"it exists to win\n"
+            f"!! (paper Sec. I/IV) — check BENCH_kernels.json and the "
+            f"provenance block\n"
+            f"!! (backend={doc['provenance']['backend']}, "
+            f"impl={doc['provenance']['impl']}).\n" + "!" * 72,
+            file=sys.stderr)
 
 
 if __name__ == "__main__":

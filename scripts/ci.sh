@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
-# One reproducible entrypoint: install deps, run tier-1 tests, then the
-# kernel benchmark smoke (emits BENCH_kernels.json) and the serving
-# benchmark smoke (tiny trace, asserts the BENCH_serve.json schema).
+# One reproducible entrypoint: install deps, run the decode-path smoke
+# microbench FIRST (single fused layer, tiny shapes, parity-asserted — a
+# kernel-level regression fails here in seconds, long before the full
+# serve bench), then tier-1 tests, then the serving benchmark smoke.
 #
-#   scripts/ci.sh            # full run
+#   scripts/ci.sh                  # smoke benches + tests
+#   FULL_BENCH=1 scripts/ci.sh     # also regenerate the full BENCH_kernels.json
 #   SKIP_INSTALL=1 scripts/ci.sh   # images with deps baked in
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -16,12 +18,18 @@ fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== decode-path smoke microbench (fail fast) =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" ESPIM_IMPL=ref \
+    python benchmarks/kernels_bench.py --smoke
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
-echo "== kernel benchmark smoke =="
-PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/kernels_bench.py
-test -f BENCH_kernels.json && echo "BENCH_kernels.json written"
+if [ -n "${FULL_BENCH:-}" ]; then
+    echo "== full kernel benchmark =="
+    PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/kernels_bench.py
+    test -f BENCH_kernels.json && echo "BENCH_kernels.json written"
+fi
 
 echo "== serving benchmark smoke =="
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/serve_bench.py \

@@ -52,6 +52,8 @@ __all__ = [
     "ChunkPlan",
     "chunk_cells",
     "plan_chunks",
+    "WidthBucketPlan",
+    "plan_width_buckets",
 ]
 
 
@@ -286,6 +288,116 @@ def plan_chunks(counts: np.ndarray, *, chunk_cols: int, row_tile: int,
         chunk_pad_frac=1.0 - (nnz / padded if padded else 0.0),
         x_bytes_full=n_cols * elem_bytes,
         x_bytes_per_step=chunk_cols * elem_bytes,
+    )
+
+
+# --------------------------------------------------------------------------
+# Width bucketing (per-segment ELL widths instead of one global max)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class WidthBucketPlan:
+    """Partition of the packed (density-sorted) rows into <= n_buckets
+    contiguous segments, each padded to its own ELL width.
+
+    The paper pads every MAC stream to the stripe's lockstep length; one
+    global width makes the whole matrix pay for its densest row.  Because
+    ``row_tile_balance`` sorts rows by nnz, widths decay monotonically down
+    the packed order, so a handful of contiguous segments ("buckets") with
+    per-bucket widths recovers most of the padding a single global width
+    wastes.  Boundaries are chosen by exact DP over fixed-size row groups,
+    minimizing total padded slots; an extra bucket is kept only if it saves
+    more than ``slack`` of the single-bucket cost (each bucket is one more
+    kernel launch at serving time).
+    """
+
+    boundaries: tuple       # ((row_start, row_end, width), ...) packed order
+    group: int              # row granularity the DP ran at
+    padded_slots: int       # sum over buckets of rows * width (per chunk)
+    single_bucket_slots: int  # cost of the global-max-width layout
+    widths_per_group: tuple
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.boundaries)
+
+    @property
+    def savings_frac(self) -> float:
+        if not self.single_bucket_slots:
+            return 0.0
+        return 1.0 - self.padded_slots / self.single_bucket_slots
+
+
+def _bucket_width(w: int, width_multiple: int) -> int:
+    return max(width_multiple, -(-max(int(w), 1) // width_multiple)
+               * width_multiple)
+
+
+def plan_width_buckets(widths, *, rows_per_group: int, n_buckets: int = 4,
+                       width_multiple: int = 8,
+                       slack: float = 0.02) -> WidthBucketPlan:
+    """Choose bucket boundaries over per-group max cell counts.
+
+    ``widths[g]`` is the max per-(row, chunk) cell count over row group
+    ``g`` (``rows_per_group`` packed rows).  Exact DP partitions the groups
+    into at most ``n_buckets`` contiguous segments minimizing total padded
+    slots (each segment pays rows * round_up(segment max)); among bucket
+    counts within ``slack`` of the optimum the smallest count wins.
+    """
+    widths = np.asarray(widths, dtype=np.int64)
+    n = widths.size
+    if n == 0:
+        raise ValueError("empty widths")
+    if rows_per_group <= 0:
+        raise ValueError(f"rows_per_group must be positive, got {rows_per_group}")
+    n_buckets = max(1, min(n_buckets, n))
+
+    # seg_cost[i][j] = padded slots of one bucket spanning groups [i, j)
+    seg_max = np.zeros((n, n + 1), dtype=np.int64)
+    for i in range(n):
+        m = 0
+        for j in range(i + 1, n + 1):
+            m = max(m, widths[j - 1])
+            seg_max[i, j] = _bucket_width(m, width_multiple)
+
+    def seg_cost(i, j):
+        return (j - i) * rows_per_group * seg_max[i, j]
+
+    inf = np.iinfo(np.int64).max
+    # best[k][j] = min cost covering groups [0, j) with exactly k buckets
+    best = np.full((n_buckets + 1, n + 1), inf, dtype=np.int64)
+    back = np.zeros((n_buckets + 1, n + 1), dtype=np.int64)
+    best[0, 0] = 0
+    for k in range(1, n_buckets + 1):
+        for j in range(1, n + 1):
+            for i in range(k - 1, j):
+                if best[k - 1, i] == inf:
+                    continue
+                c = best[k - 1, i] + seg_cost(i, j)
+                if c < best[k, j]:
+                    best[k, j] = c
+                    back[k, j] = i
+
+    single = seg_cost(0, n)
+    optimum = min(int(best[k, n]) for k in range(1, n_buckets + 1))
+    chosen_k = next(k for k in range(1, n_buckets + 1)
+                    if best[k, n] <= optimum + slack * single)
+    cuts = [n]
+    j = n
+    for k in range(chosen_k, 0, -1):
+        j = int(back[k, j])
+        cuts.append(j)
+    cuts.reverse()
+    boundaries = tuple(
+        (cuts[i] * rows_per_group, cuts[i + 1] * rows_per_group,
+         int(seg_max[cuts[i], cuts[i + 1]]))
+        for i in range(chosen_k)
+    )
+    return WidthBucketPlan(
+        boundaries=boundaries,
+        group=rows_per_group,
+        padded_slots=int(best[chosen_k, n]),
+        single_bucket_slots=int(single),
+        widths_per_group=tuple(int(w) for w in widths),
     )
 
 

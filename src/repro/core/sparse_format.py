@@ -22,27 +22,40 @@ column ids, so a (row-tile x col-chunk) kernel block only ever reads one
 ``x`` slab — bounding VMEM residency at ``chunk_cols`` elements instead of
 the whole activation vector.
 
+The serving stack consumes the *width-bucketed, layer-stacked* form
+(``pack_bucketed_stack``, DESIGN.md section 8): all layers of a projection
+group — optionally two row-concatenated halves (gate+up) under one shared
+balance permutation — packed to uniform per-bucket shapes so a
+``lax.scan`` over layers consumes them directly, with 2-4 per-bucket ELL
+widths (the SDDS ``plan_width_buckets`` pass) instead of one stack-global
+max.
+
 All packing is offline host-side numpy (it is part of SDDS compilation);
 kernels consume the arrays as jnp inputs.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
 from repro.core.pruning import row_tile_balance
-from repro.core.sdds import ChunkPlan, chunk_cells, plan_chunks
+from repro.core.sdds import (ChunkPlan, WidthBucketPlan, chunk_cells,
+                             plan_chunks, plan_width_buckets)
 
 __all__ = [
     "PackStats",
     "ELLPack",
     "ELLChunkedPack",
+    "BucketedStackedPack",
     "pack_ell",
     "pack_ell_chunked",
     "chunk_pack",
+    "pack_bucketed_stack",
     "ell_to_dense",
     "ell_chunked_to_dense",
+    "bucketed_stack_to_dense",
     "shard_ell",
 ]
 
@@ -316,6 +329,200 @@ def pack_ell_chunked(
         chunk_cols,
         width_multiple=width_multiple,
     )
+
+
+@dataclasses.dataclass
+class BucketedStackedPack:
+    """Width-bucketed, layer-stacked, (optionally) half-fused chunked ELL.
+
+    The serving-stack layout: all ``L`` layers of one projection group are
+    packed into uniform arrays (so a ``lax.scan`` over layers consumes them
+    directly) and the packed rows are split into <= ``n_buckets``
+    contiguous segments, each padded to its own ELL width (the SDDS
+    ``plan_width_buckets`` pass) instead of one stack-global max.
+
+    ``halves > 1`` row-concatenates several same-shape matrices (gate and
+    up) that share one balance permutation: bucket ``g`` stores
+    ``halves * bucket_rows[g]`` packed rows ordered half-major
+    ([gate rows of the bucket; up rows of the bucket]), so one SpMV launch
+    computes both projections and their outputs pair up elementwise in
+    packed order — no unscatter between gate*up and the down projection.
+
+    * ``buckets[g]['values'|'cols'|'valid']``: (L, halves*Rg, K, Lc_g);
+      ``cols`` chunk-local as in ``ELLChunkedPack``.
+    * ``perm``: (L, r_pad) packed position -> logical row (-1 = pad),
+      shared by every half of a layer.
+    * ``inv_perm``: (L, n_rows) logical row -> packed position.
+    """
+
+    buckets: list           # [{values, cols, valid} ...] numpy arrays
+    bucket_rows: tuple      # Rg per bucket (per half); sums to r_pad
+    halves: int
+    perm: np.ndarray        # (L, r_pad) int64
+    inv_perm: np.ndarray    # (L, n_rows) int64
+    n_rows: int             # logical rows per half
+    n_cols: int             # gather domain (x length the pack consumes)
+    chunk_cols: int
+    row_tile: int
+    plan: WidthBucketPlan
+    nnz_per_layer: np.ndarray       # (L,) over all halves
+    nnz_per_half: np.ndarray        # (halves, L)
+
+    @property
+    def n_layers(self) -> int:
+        return self.perm.shape[0]
+
+    @property
+    def r_pad(self) -> int:
+        return self.perm.shape[1]
+
+    @property
+    def n_chunks(self) -> int:
+        return self.buckets[0]["values"].shape[2]
+
+    @property
+    def widths(self) -> tuple:
+        return tuple(b["values"].shape[3] for b in self.buckets)
+
+    @property
+    def padded_slots_per_layer(self) -> int:
+        return sum(self.halves * rg * self.n_chunks * lc
+                   for rg, lc in zip(self.bucket_rows, self.widths))
+
+    @property
+    def nnz(self) -> int:
+        return int(self.nnz_per_layer.sum())
+
+    @property
+    def pad_frac(self) -> float:
+        padded = self.padded_slots_per_layer * self.n_layers
+        return 1.0 - (self.nnz / padded if padded else 0.0)
+
+    def pad_frac_layer(self, l: int) -> float:
+        padded = self.padded_slots_per_layer
+        return 1.0 - (float(self.nnz_per_layer[l]) / padded if padded else 0.0)
+
+
+def pack_bucketed_stack(
+    mats: list,
+    row_tile: int = LANE,
+    chunk_cols: int = 512,
+    n_buckets: int = 4,
+    width_multiple: int = 8,
+    balance: bool = True,
+    group_rows: int = 32,
+) -> BucketedStackedPack:
+    """Pack ``mats[half][layer]`` (each (n_rows, n_cols)) into one
+    width-bucketed stack.
+
+    Per layer the halves are balanced on their *combined* per-row nnz (one
+    shared permutation, the gate+up fusion contract); cells are grouped by
+    column chunk with local ids (``chunk_cells``); bucket boundaries are
+    chosen once for the whole stack by ``plan_width_buckets`` over per-row-
+    group max cell counts taken across layers, halves and chunks.
+    """
+    halves = len(mats)
+    n_layers = len(mats[0])
+    if any(len(h) != n_layers for h in mats):
+        raise ValueError("every half must hold the same number of layers")
+    n_rows, n_cols = np.asarray(mats[0][0]).shape
+    for h in mats:
+        for m in h:
+            if np.asarray(m).shape != (n_rows, n_cols):
+                raise ValueError("all matrices in a stack must share shape")
+
+    r_pad = _round_up(max(n_rows, 1), row_tile)
+    cc = min(chunk_cols, max(1, n_cols))
+    n_chunks = -(-max(n_cols, 1) // cc)
+    group = math.gcd(r_pad, group_rows) or 1
+
+    perm = np.full((n_layers, r_pad), -1, dtype=np.int64)
+    inv_perm = np.zeros((n_layers, n_rows), dtype=np.int64)
+    counts = np.zeros((n_layers, halves, r_pad, n_chunks), dtype=np.int64)
+    cells: list = [[[None] * r_pad for _ in range(halves)]
+                   for _ in range(n_layers)]
+    nnz_per_half = np.zeros((halves, n_layers), dtype=np.int64)
+
+    for l in range(n_layers):
+        ms = [np.asarray(mats[h][l]) for h in range(halves)]
+        joint_nnz = sum((m != 0).sum(axis=1) for m in ms)
+        if balance and n_rows > 1:
+            perm_rows = row_tile_balance(joint_nnz, row_tile)
+        else:
+            perm_rows = np.arange(n_rows, dtype=np.int64)
+        perm[l, :n_rows] = perm_rows
+        inv_perm[l, perm_rows] = np.arange(n_rows, dtype=np.int64)
+        for h, m in enumerate(ms):
+            nnz_per_half[h, l] = int((m != 0).sum())
+            for i in range(n_rows):
+                src = perm_rows[i]
+                (nz,) = np.nonzero(m[src])
+                order, cnt = chunk_cells(nz, cc, n_chunks)
+                cells[l][h][i] = (nz[order], m[src, nz][order])
+                counts[l, h, i] = cnt
+
+    widths = counts.reshape(
+        n_layers, halves, r_pad // group, group, n_chunks).max(axis=(0, 1, 3, 4))
+    plan = plan_width_buckets(widths, rows_per_group=group,
+                              n_buckets=n_buckets,
+                              width_multiple=width_multiple)
+
+    buckets = []
+    for (row0, row1, lc) in plan.boundaries:
+        rg = row1 - row0
+        values = np.zeros((n_layers, halves * rg, n_chunks, lc), np.float32)
+        cols = np.zeros((n_layers, halves * rg, n_chunks, lc), np.int32)
+        valid = np.zeros((n_layers, halves * rg, n_chunks, lc), bool)
+        for l in range(n_layers):
+            for h in range(halves):
+                for i in range(row0, min(row1, n_rows)):
+                    c, v = cells[l][h][i]
+                    r = h * rg + (i - row0)
+                    off = 0
+                    for k in range(n_chunks):
+                        n = int(counts[l, h, i, k])
+                        if n:
+                            seg = slice(off, off + n)
+                            values[l, r, k, :n] = v[seg]
+                            cols[l, r, k, :n] = c[seg] - k * cc
+                            valid[l, r, k, :n] = True
+                            off += n
+        buckets.append({"values": values, "cols": cols, "valid": valid})
+
+    return BucketedStackedPack(
+        buckets=buckets,
+        bucket_rows=tuple(b1 - b0 for b0, b1, _ in plan.boundaries),
+        halves=halves,
+        perm=perm,
+        inv_perm=inv_perm,
+        n_rows=n_rows,
+        n_cols=n_cols,
+        chunk_cols=cc,
+        row_tile=row_tile,
+        plan=plan,
+        nnz_per_layer=nnz_per_half.sum(axis=0),
+        nnz_per_half=nnz_per_half,
+    )
+
+
+def bucketed_stack_to_dense(pack: BucketedStackedPack, layer: int,
+                            half: int) -> np.ndarray:
+    """Inverse of ``pack_bucketed_stack`` for one (layer, half) — the
+    property-test oracle."""
+    w = np.zeros((pack.n_rows, pack.n_cols), dtype=np.float32)
+    row0 = 0
+    for b, rg in zip(pack.buckets, pack.bucket_rows):
+        for r in range(rg):
+            src = pack.perm[layer, row0 + r]
+            if src < 0:
+                continue
+            i = half * rg + r
+            for k in range(b["values"].shape[2]):
+                sel = b["valid"][layer, i, k]
+                w[src, b["cols"][layer, i, k, sel] + k * pack.chunk_cols] = \
+                    b["values"][layer, i, k, sel]
+        row0 += rg
+    return w
 
 
 def ell_to_dense(pack: ELLPack) -> np.ndarray:

@@ -3,14 +3,25 @@
 The paper's deployment (Section IV): take a trained model, magnitude-prune
 the projection matrices, and serve MV decode from the compressed format.
 This module converts a dense LM's stacked MLP weights into stacked ELL
-packs (the offline SDDS-analogue pipeline: prune -> SparTen row balance ->
-pack) and runs the decode step with the sparse kernels in place of the
-dense matmuls — attention stays dense (its per-layer matrices are small
-relative to the MLPs, which hold ~2/3 of LLaMA-class weights; per-cell the
-paper's Table III is dominated by the three FFN matrices).
+packs (the offline SDDS-analogue pipeline: prune -> balance -> chunk ->
+width-bucket) and runs the decode step with the sparse kernels in place of
+the dense matmuls — attention stays dense (its per-layer matrices are small
+relative to the MLPs, which hold ~2/3 of LLaMA-class weights).
 
-Layer packs are padded to the max ELL width across layers so the whole
-stack stays a single scanned array.
+The decode datapath is fully fused (DESIGN.md section 8):
+
+* one ``jax.lax.scan`` over the layer stack — the packs are padded to
+  uniform per-bucket shapes for exactly this;
+* gate and up are row-concatenated into ONE pack per bucket sharing one
+  balance permutation (the paper's vector-broadcast sharing applied across
+  projections): a single SpMV launch yields both halves, and
+  ``silu(gate) * up`` runs directly in packed order;
+* the down projection's column ids are pre-composed offline with the
+  gate/up packed order, so the intermediate never needs unscattering; the
+  only runtime permutation left is one ``take`` by ``inv_perm`` on the
+  down output (``scatter_rows_ref`` is gone from the per-token path);
+* ``x`` stays in (in, B) layout across the whole MLP — one transpose in,
+  one out, per layer.
 """
 from __future__ import annotations
 
@@ -20,9 +31,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.pruning import magnitude_prune
-from repro.core.sparse_format import pack_ell_chunked
+from repro.core.sparse_format import BucketedStackedPack, pack_bucketed_stack
 from repro.kernels import ops
-from repro.kernels import ref as kref
 from repro.models import transformer as T
 
 __all__ = ["sparsify_mlps", "decode_step_sparse", "prefill_chunk_sparse",
@@ -31,124 +41,217 @@ __all__ = ["sparsify_mlps", "decode_step_sparse", "prefill_chunk_sparse",
 _MLP_NAMES = ("w_gate", "w_up", "w_down")
 
 
-def _pack_stack(mats: list[np.ndarray], row_tile: int,
-                chunk_cols: int) -> dict:
-    """Pack a list of per-layer (out, in) matrices into stacked
-    column-chunked ELL arrays (values/cols padded to the max chunk width;
-    perm per layer).  All layers of one projection share n_cols, so the
-    chunk grid (K, chunk_cols) is uniform across the stack."""
-    packs = [pack_ell_chunked(m, row_tile=row_tile, chunk_cols=chunk_cols)
-             for m in mats]
-    lmax = max(p.chunk_width for p in packs)
-    rpad = max(p.r_pad for p in packs)
-    k = packs[0].n_chunks
-    assert all(p.n_chunks == k for p in packs), "uniform n_cols per stack"
-
-    def pad(p, arr):
-        out = np.zeros((rpad, k, lmax), arr.dtype)
-        out[: arr.shape[0], :, : arr.shape[2]] = arr
-        return out
-
+def _to_device(pack: BucketedStackedPack) -> dict:
+    """BucketedStackedPack -> the jnp dict the serving step consumes.
+    ``valid`` masks and nnz stats stay host-side (stats/tests only)."""
     return {
-        "values": jnp.asarray(np.stack([pad(p, p.values) for p in packs])),
-        "cols": jnp.asarray(np.stack(
-            [pad(p, p.cols) for p in packs]), jnp.int32),
-        "perm": jnp.asarray(np.stack(
-            [np.pad(p.perm, (0, rpad - p.r_pad), constant_values=-1)
-             for p in packs]), jnp.int32),
-        "n_rows": packs[0].n_rows,
-        "chunk_cols": packs[0].chunk_cols,
-        "nnz": sum(p.stats.nnz for p in packs),
-        "padded": rpad * k * lmax * len(packs),
+        "halves": pack.halves,
+        "n_rows": pack.n_rows,
+        "n_cols": pack.n_cols,
+        "r_pad": pack.r_pad,
+        "chunk_cols": pack.chunk_cols,
+        "bucket_rows": pack.bucket_rows,
+        "widths": pack.widths,
+        "buckets": [
+            {"values": jnp.asarray(b["values"]),
+             "cols": jnp.asarray(b["cols"], jnp.int32),
+             "valid": b["valid"]}
+            for b in pack.buckets
+        ],
+        "perm": jnp.asarray(pack.perm, jnp.int32),
+        "inv_perm": jnp.asarray(pack.inv_perm, jnp.int32),
+        "nnz": pack.nnz,
+        "nnz_per_layer": np.asarray(pack.nnz_per_layer),
+        "nnz_per_half": np.asarray(pack.nnz_per_half),
+        "padded_per_layer": pack.padded_slots_per_layer,
+        "plan": pack.plan,
     }
 
 
 def sparsify_mlps(cfg: ModelConfig, params: dict, sparsity: float,
                   row_tile: int = 128,
-                  chunk_cols: int = ops.DEFAULT_CHUNK_COLS) -> dict:
-    """Offline pipeline: prune + pack every MLP projection of a dense LM.
+                  chunk_cols: int = ops.DEFAULT_CHUNK_COLS,
+                  n_buckets: int = 4) -> dict:
+    """Offline pipeline: prune + fuse + pack every MLP projection.
 
-    Returns {name: stacked chunked pack} with per-layer leading dims, plus
-    pruned dense copies for verification."""
-    out: dict = {"sparsity": sparsity}
+    Returns the fused serving packs plus pruned dense copies for
+    verification:
+
+    * ``"gateup"``: gate and up row-concatenated per bucket under one
+      shared permutation (``halves == 2``; just up for non-gated MLPs);
+    * ``"down"``: w_down with its column ids pre-composed with the gateup
+      packed order (its gather domain is the gateup ``r_pad``).
+    """
+    out: dict = {"sparsity": sparsity, "format": "espim-fused-bucketed/v2",
+                 "gated": bool(cfg.gated_mlp)}
     mlp = params["layers"]["mlp"]
-    for name in _MLP_NAMES:
-        if name not in mlp:
-            continue
+    required = _MLP_NAMES if cfg.gated_mlp else ("w_up", "w_down")
+    missing = [n for n in required if n not in mlp]
+    if missing:
+        raise ValueError(f"params missing MLP projection(s) {missing} "
+                         f"(gated_mlp={cfg.gated_mlp})")
+    pruned = {}
+    for name in required:
         w = np.asarray(mlp[name], np.float32)          # (L, in, out)
-        pruned = np.stack([magnitude_prune(w[i], sparsity)
-                           for i in range(w.shape[0])])
-        # y = x @ W  ->  rows of the packed matrix are W^T's rows (out dim)
-        out[name] = _pack_stack([m.T for m in pruned], row_tile, chunk_cols)
-        out[f"{name}_pruned"] = jnp.asarray(pruned, mlp[name].dtype)
+        pruned[name] = np.stack([magnitude_prune(w[i], sparsity)
+                                 for i in range(w.shape[0])])
+        out[f"{name}_pruned"] = jnp.asarray(pruned[name], mlp[name].dtype)
+
+    # y = x @ W  ->  rows of the packed matrix are W^T's rows (out dim)
+    up_t = [m.T for m in pruned["w_up"]]
+    halves = ([[m.T for m in pruned["w_gate"]], up_t] if cfg.gated_mlp
+              else [up_t])
+    gu = pack_bucketed_stack(halves, row_tile=row_tile,
+                             chunk_cols=chunk_cols, n_buckets=n_buckets)
+
+    # Fold the gate/up permutation into w_down offline: permute w_down's
+    # columns to the gateup *packed* order (pad positions stay zero
+    # columns), so at runtime the packed intermediate feeds it directly.
+    down_remapped = []
+    for l, m in enumerate(pruned["w_down"]):
+        wd = m.T                                        # (d_model, d_ff)
+        wd_p = np.zeros((wd.shape[0], gu.r_pad), np.float32)
+        wd_p[:, gu.inv_perm[l]] = wd
+        down_remapped.append(wd_p)
+    dn = pack_bucketed_stack([down_remapped], row_tile=row_tile,
+                             chunk_cols=chunk_cols, n_buckets=n_buckets)
+
+    out["gateup"] = _to_device(gu)
+    out["down"] = _to_device(dn)
     return out
 
 
-def _sparse_proj(pack_l: dict, x: jnp.ndarray, impl: str) -> jnp.ndarray:
-    """x (B, T, in) -> (B, T, out) through one layer's chunked ELL pack,
-    via the fused batched kernel.  Decode runs T=1 (the hot path); chunked
-    prefill feeds T=chunk tokens — the kernel sees B*T columns either way.
+# --------------------------------------------------------------------------
+# Fused runtime path
+# --------------------------------------------------------------------------
+def _scan_bufs(sparse: dict):
+    """The per-layer arrays threaded through the layer scan (everything
+    else about the packs is static geometry closed over by the step)."""
+    return {
+        "gu": [(b["values"], b["cols"]) for b in sparse["gateup"]["buckets"]],
+        "dn": [(b["values"], b["cols"]) for b in sparse["down"]["buckets"]],
+        "dn_inv": sparse["down"]["inv_perm"],
+    }
+
+
+def _fused_mlp(cfg: ModelConfig, sparse: dict, bufs: dict, hn: jnp.ndarray,
+               impl: str) -> jnp.ndarray:
+    """One layer's MLP through the fused packs.
+
+    hn (B, T, d_model) -> (B, T, d_model).  Decode runs T=1 (the hot
+    path); chunked prefill feeds T=chunk tokens — the kernels see B*T
+    columns either way, and x stays in (in, B*T) layout throughout.
     """
-    b, t = x.shape[0], x.shape[1]
-    xt = x.reshape(-1, x.shape[-1]).T.astype(jnp.float32)  # (in, B*T)
-    yp = ops.espim_spmv_batched(pack_l["values"], pack_l["cols"], xt,
-                                chunk_cols=pack_l["chunk_cols"],
-                                impl=impl)             # (R_pad, B*T)
-    y = kref.scatter_rows_ref(yp, pack_l["perm"], pack_l["n_rows"])
-    return y.T.reshape(b, t, -1).astype(x.dtype)
+    from repro.models.layers import act_fn
+    act = act_fn(cfg.activation)
+    gu, dn = sparse["gateup"], sparse["down"]
+    b, t = hn.shape[0], hn.shape[1]
+    xt = hn.reshape(-1, hn.shape[-1]).T.astype(jnp.float32)   # (in, B*T)
+
+    parts = []
+    for (vals, cols), rg in zip(bufs["gu"], gu["bucket_rows"]):
+        yp = ops.espim_spmv_batched(vals, cols, xt,
+                                    chunk_cols=gu["chunk_cols"], impl=impl)
+        if sparse["gated"]:
+            # gate rows and up rows of the bucket share packed order: the
+            # product needs no unscatter (act(0)*0 == 0 on pad rows)
+            parts.append(act(yp[:rg]) * yp[rg:])
+        else:
+            parts.append(act(yp))
+    inter = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+    outs = [ops.espim_spmv_batched(vals, cols, inter,
+                                   chunk_cols=dn["chunk_cols"], impl=impl)
+            for (vals, cols) in bufs["dn"]]
+    yd = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    y = jnp.take(yd, bufs["dn_inv"], axis=0)                  # (d_model, B*T)
+    return y.T.reshape(b, t, -1).astype(hn.dtype)
+
+
+def _pruned_mlp(cfg: ModelConfig, sparse: dict, wl: dict, hn: jnp.ndarray
+                ) -> jnp.ndarray:
+    """The flexible *dense* datapath (Section III-I) over the pruned
+    copies: the same matrices the packs hold, applied as GEMMs.  Prefill
+    is compute-bound GEMM work where the MXU/BLAS path wins; the packs own
+    the memory-bound single-token MV decode."""
+    from repro.models import layers as L
+    if sparse["gated"]:
+        return L.mlp_gated(hn, wl["w_gate"], wl["w_up"], wl["w_down"],
+                           cfg.activation)
+    return L.mlp_relu2(hn, wl["w_up"], wl["w_down"], cfg.activation)
+
+
+def _mlp_xs(sparse: dict, mlp_path: str):
+    """Per-layer MLP inputs threaded through the scan for either path."""
+    if mlp_path == "kernel":
+        return _scan_bufs(sparse)
+    if mlp_path != "dense":
+        raise ValueError(f"unknown mlp_path {mlp_path!r}")
+    names = (("w_gate", "w_up", "w_down") if sparse["gated"]
+             else ("w_up", "w_down"))
+    return {n: sparse[f"{n}_pruned"] for n in names}
+
+
+def _layer_stack(cfg: ModelConfig, params: dict, sparse: dict, cache: dict,
+                 h, attn_step, impl: str, unroll: bool,
+                 mlp_path: str = "kernel"):
+    """Shared layer loop for decode/prefill: scan by default; ``unroll``
+    keeps the per-layer Python loop as the parity reference."""
+
+    def body(h, xs):
+        lp, kc, vc, mx = xs
+        a, kc, vc, _, _ = attn_step(lp, T._norm(cfg, lp["ln1"], h), kc, vc)
+        h = h + a
+        hn = T._norm(cfg, lp["ln2"], h)
+        if mlp_path == "kernel":
+            h = h + _fused_mlp(cfg, sparse, mx, hn, impl)
+        else:
+            h = h + _pruned_mlp(cfg, sparse, mx, hn)
+        return h, (kc, vc)
+
+    xs = (params["layers"], cache["k"], cache["v"],
+          _mlp_xs(sparse, mlp_path))
+    if unroll:
+        k_new, v_new = [], []
+        for i in range(cfg.n_layers):
+            h, (kc, vc) = body(h, jax.tree.map(lambda x: x[i], xs))
+            k_new.append(kc)
+            v_new.append(vc)
+        return h, jnp.stack(k_new), jnp.stack(v_new)
+    h, (k_new, v_new) = jax.lax.scan(body, h, xs)
+    return h, k_new, v_new
 
 
 def decode_step_sparse(cfg: ModelConfig, params: dict, sparse: dict,
-                       cache: dict, batch: dict, impl: str = "ref"):
+                       cache: dict, batch: dict, impl: str = "ref",
+                       unroll: bool = False):
     """transformer.decode_step with ESPIM-format MLPs (dense attention)."""
     tokens = batch["tokens"]
     h = T.embed_tokens(cfg, params, tokens)
 
-    # explicit python loop over layers: the packs are per-layer arrays of
-    # uniform width, so a scan also works; the loop keeps this reference
-    # serving implementation shape-transparent
-    k_new, v_new = [], []
-    for i in range(cfg.n_layers):
-        lp = jax.tree.map(lambda x: x[i], params["layers"])
-        a, kc, vc, _, _ = T.attn_decode_apply(
-            cfg, lp["attn"], T._norm(cfg, lp["ln1"], h),
-            cache["k"][i], cache["v"][i], cache["len"])
-        h = h + a
-        hn = T._norm(cfg, lp["ln2"], h)
-        h = h + _sparse_mlp(cfg, sparse, i, hn, impl)
-        k_new.append(kc)
-        v_new.append(vc)
+    def attn_step(lp, hn, kc, vc):
+        return T.attn_decode_apply(cfg, lp["attn"], hn, kc, vc, cache["len"])
 
+    h, k_new, v_new = _layer_stack(cfg, params, sparse, cache, h, attn_step,
+                                   impl, unroll)
     logits = T.logits_from_hidden(cfg, params, h)
-    new_cache = {"k": jnp.stack(k_new), "v": jnp.stack(v_new),
-                 "len": cache["len"] + 1}
+    new_cache = {"k": k_new, "v": v_new, "len": cache["len"] + 1}
     return logits, new_cache
 
 
-def _sparse_mlp(cfg: ModelConfig, sparse: dict, i: int, hn, impl: str):
-    """One layer's MLP through the ESPIM packs (shared by decode/prefill)."""
-    def layer_pack(name):
-        p = sparse[name]
-        return {"values": p["values"][i], "cols": p["cols"][i],
-                "perm": p["perm"][i], "n_rows": p["n_rows"],
-                "chunk_cols": p["chunk_cols"]}
-
-    if cfg.gated_mlp:
-        gate = jax.nn.silu(_sparse_proj(layer_pack("w_gate"), hn, impl))
-        up = _sparse_proj(layer_pack("w_up"), hn, impl)
-        return _sparse_proj(layer_pack("w_down"), gate * up, impl)
-    from repro.models.layers import act_fn
-    up = _sparse_proj(layer_pack("w_up"), hn, impl)
-    return _sparse_proj(layer_pack("w_down"), act_fn(cfg.activation)(up),
-                        impl)
-
-
 def prefill_chunk_sparse(cfg: ModelConfig, params: dict, sparse: dict,
-                         cache: dict, batch: dict, impl: str = "ref"):
-    """transformer.prefill_chunk with ESPIM-format MLPs (dense attention):
-    a C-token chunk lands at cache["len"].., the MLP projections run
-    through the batched chunked-ELL kernel with B*C columns.  Same
-    contract as ``factory.prefill_chunk``."""
+                         cache: dict, batch: dict, impl: str = "ref",
+                         unroll: bool = False, mlp_path: str = "dense"):
+    """transformer.prefill_chunk for the ESPIM-format engine (dense
+    attention): a C-token chunk lands at cache["len"]..  Same contract as
+    ``factory.prefill_chunk``.
+
+    ``mlp_path`` picks the projection datapath — the paper's flexible
+    dense/sparse configuration (Section III-I) applied per serving phase:
+    ``"dense"`` (default) runs the GEMM-shaped chunk through the pruned
+    dense copies (bit-identical matrices, compute-bound phase);
+    ``"kernel"`` feeds the fused packs with B*C columns (the MV datapath,
+    used by the parity tests and on PIM-like backends)."""
     tokens = batch["tokens"]
     start = cache["len"]
     n_valid = batch.get("n_valid")
@@ -156,32 +259,67 @@ def prefill_chunk_sparse(cfg: ModelConfig, params: dict, sparse: dict,
         n_valid = jnp.full_like(start, tokens.shape[1])
     h = T.embed_tokens(cfg, params, tokens)
 
-    k_new, v_new = [], []
-    for i in range(cfg.n_layers):
-        lp = jax.tree.map(lambda x: x[i], params["layers"])
-        a, kc, vc, _, _ = T.attn_prefill_apply(
-            cfg, lp["attn"], T._norm(cfg, lp["ln1"], h),
-            cache["k"][i], cache["v"][i], start)
-        h = h + a
-        hn = T._norm(cfg, lp["ln2"], h)
-        h = h + _sparse_mlp(cfg, sparse, i, hn, impl)
-        k_new.append(kc)
-        v_new.append(vc)
+    def attn_step(lp, hn, kc, vc):
+        return T.attn_prefill_apply(cfg, lp["attn"], hn, kc, vc, start)
 
+    h, k_new, v_new = _layer_stack(cfg, params, sparse, cache, h, attn_step,
+                                   impl, unroll, mlp_path=mlp_path)
     logits = T.logits_from_hidden(cfg, params, h)
-    new_cache = {"k": jnp.stack(k_new), "v": jnp.stack(v_new),
-                 "len": start + n_valid}
+    new_cache = {"k": k_new, "v": v_new, "len": start + n_valid}
     return logits, new_cache
 
 
+# --------------------------------------------------------------------------
+# Stats
+# --------------------------------------------------------------------------
+def _pack_stats(p: dict) -> dict:
+    n_layers = len(p["nnz_per_layer"])
+    padded = p["padded_per_layer"] * n_layers
+    return {
+        "nnz": int(p["nnz"]),
+        "padded_slots": int(padded),
+        "pad_frac": 1 - p["nnz"] / padded,
+        "pad_frac_per_layer": [
+            1 - int(n) / p["padded_per_layer"]
+            for n in p["nnz_per_layer"]
+        ],
+        "bucket_rows": list(p["bucket_rows"]),
+        "bucket_widths": list(p["widths"]),
+        "single_bucket_pad_frac": 1 - p["nnz"] / max(
+            1, p["plan"].single_bucket_slots * p["buckets"][0]["cols"].shape[2]
+            * p["halves"] * n_layers),
+    }
+
+
 def sparse_stats(sparse: dict) -> dict:
-    out = {}
-    for name in _MLP_NAMES:
-        if name in sparse:
-            p = sparse[name]
-            out[name] = {
-                "nnz": int(p["nnz"]),
-                "padded_slots": int(p["padded"]),
-                "pad_frac": 1 - p["nnz"] / p["padded"],
-            }
+    """Aggregate + per-projection + per-layer padding stats.
+
+    The fused gateup pack reports per-half (per-projection) nnz under the
+    original projection names; padding is a property of the fused pack, so
+    per-projection ``pad_frac`` splits the fused pack's dead slots evenly
+    between the halves (they share every bucket width)."""
+    gu, dn = sparse["gateup"], sparse["down"]
+    n_layers = len(gu["nnz_per_layer"])
+    out = {"gateup": _pack_stats(gu), "down": _pack_stats(dn)}
+    half_names = ("w_gate", "w_up") if sparse["gated"] else ("w_up",)
+    half_padded = gu["padded_per_layer"] * n_layers // gu["halves"]
+    for h, name in enumerate(half_names):
+        nnz_h = int(gu["nnz_per_half"][h].sum())
+        out[name] = {
+            "nnz": nnz_h,
+            "padded_slots": half_padded,
+            "pad_frac": 1 - nnz_h / half_padded,
+            "pad_frac_per_layer": [
+                1 - int(n) / (gu["padded_per_layer"] // gu["halves"])
+                for n in gu["nnz_per_half"][h]
+            ],
+        }
+    out["w_down"] = dict(out["down"])
+    total_nnz = gu["nnz"] + dn["nnz"]
+    total_padded = (gu["padded_per_layer"] + dn["padded_per_layer"]) * n_layers
+    out["total"] = {
+        "nnz": int(total_nnz),
+        "padded_slots": int(total_padded),
+        "pad_frac": 1 - total_nnz / total_padded,
+    }
     return out

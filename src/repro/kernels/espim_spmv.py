@@ -18,10 +18,13 @@ TPU adaptation of the paper's datapath (see DESIGN.md sections 2b/3):
   dynamic-gather path as the t_CCD-amortized equivalent of the paper's
   simplified 4x11 switch.  (A one-hot MXU "switch" was napkin-mathed and
   rejected: at 90% sparsity it costs ~16x the *dense* FLOPs — DESIGN.md.)
-* the batched kernel accumulates through a per-l gather loop over
-  ``(row_tile, B)`` partials — it never materializes the
-  ``(row_tile, l_chunk, B)`` gathered tensor the old einsum formulation
-  built, which was an O(B * L) working-set blow-up on the decode hot path.
+* the batched kernel gathers the whole ``(row_tile, l_chunk)`` col block
+  in ONE vectorized ``take`` and multiply-reduces it; the gathered
+  ``(row_tile, l_chunk, B)`` slab is bounded by ``block_l`` via the grid's
+  l dimension, so it stays O(block_l * B) — unlike the seed einsum path,
+  whose working set scaled with the full ELL width.  (The pre-fusion
+  serial per-l ``fori_loop`` variant survives as ``gather="loop"`` for
+  parity tests.)
 
 The chunk padding slots carry value 0 and local col 0; they are the
 statically scheduled stalls (SDDS dummy cells) and contribute nothing.
@@ -135,8 +138,32 @@ def espim_spmv_pallas(
 
 
 def _spmv_batched_kernel(values_ref, cols_ref, x_ref, out_ref):
-    """Batched decode step: fused per-l gather-accumulate over (RT, B)
-    partials — no (RT, LC, B) intermediate is ever live."""
+    """Batched decode step: ONE block-wide gather over the (RT, LC) col
+    block, then a vectorized multiply-reduce.  The (RT, LC, B) gathered
+    slab is bounded by ``block_l`` (the l-chunk grid dimension), so unlike
+    the seed einsum path the working set never scales with the full ELL
+    width."""
+    k = pl.program_id(1)
+    j = pl.program_id(2)
+    vals = values_ref[...].astype(jnp.float32)           # (RT, LC)
+    cols = cols_ref[...]                                 # (RT, LC) local ids
+    x = x_ref[...]                                       # (CC, B) active slab
+    gathered = jnp.take(x, cols, axis=0).astype(jnp.float32)  # (RT, LC, B)
+    partial = jnp.sum(vals[..., None] * gathered, axis=1)     # (RT, B)
+
+    @pl.when((k == 0) & (j == 0))
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when((k != 0) | (j != 0))
+    def _acc():
+        out_ref[...] = out_ref[...] + partial
+
+
+def _spmv_batched_kernel_looped(values_ref, cols_ref, x_ref, out_ref):
+    """The pre-fusion schedule (PR 2): a serial per-l ``fori_loop`` gather
+    over (RT, B) partials.  Kept as the parity reference for the
+    vectorized kernel above."""
     k = pl.program_id(1)
     j = pl.program_id(2)
     vals = values_ref[...].astype(jnp.float32)           # (RT, LC)
@@ -161,7 +188,8 @@ def _spmv_batched_kernel(values_ref, cols_ref, x_ref, out_ref):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("chunk_cols", "block_r", "block_l", "interpret"),
+    static_argnames=("chunk_cols", "block_r", "block_l", "interpret",
+                     "gather"),
 )
 def espim_spmv_batched_pallas(
     values: jnp.ndarray,
@@ -170,15 +198,25 @@ def espim_spmv_batched_pallas(
     *,
     chunk_cols: int,
     block_r: int = 128,
-    block_l: int = 256,
+    block_l: int = 128,
     interpret: bool = True,
+    gather: str = "block",
 ) -> jnp.ndarray:
-    """y_packed (R_pad, B) f32 = chunked-ELL(values, cols) @ x (M, B)."""
+    """y_packed (R_pad, B) f32 = chunked-ELL(values, cols) @ x (M, B).
+
+    ``gather="block"`` (default) runs one vectorized (RT, LC)-wide gather
+    per grid step; ``gather="loop"`` keeps the old serial per-l gather for
+    parity testing.  ``block_l`` bounds the gathered (RT, LC, B) slab.
+    """
+    if gather not in ("block", "loop"):
+        raise ValueError(f"unknown gather mode {gather!r}")
     values, cols, x, grid, block_r, block_l = _pad_inputs(
         values, cols, x, chunk_cols, block_r, block_l)
     b = x.shape[1]
+    kernel = (_spmv_batched_kernel if gather == "block"
+              else _spmv_batched_kernel_looped)
     return pl.pallas_call(
-        _spmv_batched_kernel,
+        kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_r, None, block_l), lambda i, k, j: (i, k, j)),

@@ -16,6 +16,8 @@ matvec path and lowers through the einsum reference.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -33,10 +35,23 @@ __all__ = [
     "espim_matvec",
     "EspimWeights",
     "pack_to_device",
+    "provenance",
     "DEFAULT_CHUNK_COLS",
+    "ENV_IMPL",
+    "ENV_INTERPRET",
 ]
 
 DEFAULT_CHUNK_COLS = 512
+
+# Environment overrides for the dispatch policy, so CI and benches can pin
+# the implementation explicitly instead of inferring it from the backend:
+#   ESPIM_IMPL=ref|pallas        force the lowering everywhere (wins over
+#                                per-call ``impl=`` arguments — that is the
+#                                point: pin the whole process)
+#   ESPIM_FORCE_INTERPRET=1|0    force Pallas interpret mode on (1) or off
+#                                (0) regardless of the detected backend
+ENV_IMPL = "ESPIM_IMPL"
+ENV_INTERPRET = "ESPIM_FORCE_INTERPRET"
 
 
 def on_tpu() -> bool:
@@ -44,11 +59,33 @@ def on_tpu() -> bool:
 
 
 def _resolve(impl: str | None) -> str:
+    env = os.environ.get(ENV_IMPL, "").strip()
+    if env:
+        impl = env
     if impl is None:
-        return "pallas"
+        impl = "pallas"
     if impl not in ("pallas", "ref"):
         raise ValueError(f"unknown impl {impl!r}")
     return impl
+
+
+def _interpret() -> bool:
+    env = os.environ.get(ENV_INTERPRET, "").strip()
+    if env:
+        return env not in ("0", "false", "False")
+    return not on_tpu()
+
+
+def provenance(impl: str | None = None) -> dict:
+    """Where a kernel call would run right now — recorded by the benches
+    so BENCH_*.json results carry their backend/impl context."""
+    return {
+        "backend": jax.default_backend(),
+        "impl": _resolve(impl),
+        "pallas_interpret": _interpret(),
+        "env": {ENV_IMPL: os.environ.get(ENV_IMPL) or None,
+                ENV_INTERPRET: os.environ.get(ENV_INTERPRET) or None},
+    }
 
 
 def _dispatch_spmv(values, cols, x, chunk_cols, impl,
@@ -78,7 +115,7 @@ def _dispatch_spmv(values, cols, x, chunk_cols, impl,
     if impl == "ref":
         return chunked_ref(values, cols, x, cc)
     return pallas_kernel(values, cols, x, chunk_cols=cc,
-                         interpret=not on_tpu())
+                         interpret=_interpret())
 
 
 def espim_spmv(values, cols, x, *, chunk_cols: int | None = None,
@@ -106,7 +143,7 @@ def dense_mv(w, x, *, impl: str | None = None) -> jnp.ndarray:
     """Dense MV (Newton-analogue path)."""
     if _resolve(impl) == "ref":
         return _ref.dense_mv_ref(w, x)
-    return dense_mv_pallas(w, x, interpret=not on_tpu())
+    return dense_mv_pallas(w, x, interpret=_interpret())
 
 
 # --------------------------------------------------------------------------

@@ -212,6 +212,9 @@ class ServeEngine:
             self._finish(i)
 
     def _next_key(self):
+        if self.temperature <= 0.0:
+            return None  # greedy sampling never reads the key: skip the
+            # per-tick jax.random.split dispatch on the hot path
         self._key, sub = jax.random.split(self._key)
         return sub
 

@@ -135,7 +135,10 @@ class PagedKVCache(_KVCacheBase):
             return out
 
         @jax.jit
-        def scatter_decode(pages, view, lens, phys, off):
+        def scatter_decode(pages, view, idx):
+            # idx: (3, B) int32 rows = (lens, phys, off) — one device_put
+            # per tick instead of three
+            lens, phys, off = idx[0], idx[1], idx[2]
             iota = jnp.arange(b)
             out = {}
             for n, arena in pages.items():
@@ -234,9 +237,9 @@ class PagedKVCache(_KVCacheBase):
                         self.num_blocks)                 # OOB -> dropped
         off = lens % self.block_size
         if self.pages:
+            idx = jnp.asarray(np.stack([lens, phys, off]).astype(np.int32))
             self.pages = self._scatter_decode(
-                self.pages, {n: new_cache[n] for n in self.seq_names},
-                jnp.asarray(lens), jnp.asarray(phys), jnp.asarray(off))
+                self.pages, {n: new_cache[n] for n in self.seq_names}, idx)
             # the view already contains this tick's writes for every slot;
             # inactive slots' garbage rows sit beyond their len (masked)
             # and tables are marked dirty whenever they change

@@ -8,6 +8,12 @@ to first token, with the final partial chunk padded up to C (pad positions
 are masked so every recurrent/attention state lands exactly where replay
 would put it — see the per-family ``prefill_chunk`` docstrings).
 
+The ESPIM engine applies the paper's flexible dense/sparse datapath
+(Section III-I) per serving phase: the GEMM-shaped prefill chunk runs the
+pruned *dense* copies (identical matrices, compute-bound phase), while
+decode runs the packed MV kernels (memory-bound phase, the format's whole
+point) — see DESIGN.md section 8.
+
 Each slot prefills into a private (B=1) scratch cache; after every chunk
 the freshly written K/V rows are sliced out for the engine to splice into
 the slot's pages (paged) or cache rows (contiguous).  The scratch cache

@@ -59,8 +59,10 @@ def serve_step_fn(cfg: ModelConfig, params, cache: dict, batch: dict,
 def serve_step_sparse_fn(cfg: ModelConfig, params, sparse: dict,
                          cache: dict, batch: dict,
                          temperature: float = 0.0, impl: str = "ref"):
-    """ESPIM-format decode step: MLPs run from the column-chunked packs
-    through the fused batched SpMV (``sparse`` from ``sparsify_mlps``).
+    """ESPIM-format decode step: one scanned layer stack whose MLPs run
+    from the width-bucketed packs through the fused gate+up SpMV, the
+    packed-order product, and the perm-folded down projection (``sparse``
+    from ``sparsify_mlps`` — DESIGN.md section 8).
 
     Same contract as ``serve_step_fn``: (next_tokens, logits, new_cache).
     """

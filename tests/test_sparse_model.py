@@ -42,6 +42,14 @@ def test_sparse_serving_matches_pruned_dense():
 
     stats = sparse_stats(sparse)
     assert stats["w_gate"]["pad_frac"] < 0.6  # balance keeps padding sane
+    # bucketed widths must never pad worse than the single global width
+    for proj in ("gateup", "down"):
+        assert (stats[proj]["pad_frac"]
+                <= stats[proj]["single_bucket_pad_frac"] + 1e-9)
+    # per-layer breakdown covers the stack and averages to the aggregate
+    per_layer = stats["gateup"]["pad_frac_per_layer"]
+    assert len(per_layer) == cfg.n_layers
+    assert abs(np.mean(per_layer) - stats["gateup"]["pad_frac"]) < 1e-6
 
 
 def test_sparsify_preserves_pattern():
@@ -50,4 +58,8 @@ def test_sparsify_preserves_pattern():
     sparse = sparsify_mlps(cfg, params, sparsity=0.8, row_tile=32)
     pruned = np.asarray(sparse["w_up_pruned"])
     assert abs((pruned == 0).mean() - 0.8) < 0.05
-    assert sparse["w_up"]["nnz"] == int((pruned != 0).sum())
+    stats = sparse_stats(sparse)
+    assert stats["w_up"]["nnz"] == int((pruned != 0).sum())
+    total = sum(int((np.asarray(sparse[f"{n}_pruned"]) != 0).sum())
+                for n in ("w_gate", "w_up", "w_down"))
+    assert stats["total"]["nnz"] == total

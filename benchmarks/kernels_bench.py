@@ -13,9 +13,14 @@ harness times the Pallas kernels natively — ``ESPIM_IMPL`` /
   per case: the seed einsum (materializes (R_pad, L, B)), the PR 2
   single-width chunked pack, and the PR 3 width-bucketed pack (2-4
   per-bucket ELL widths -> less gather volume; ``fused_us`` is the
-  bucketed path, ``prev_fused_us`` the PR 2 one).
+  bucketed path, ``prev_fused_us`` the PR 2 one).  Each case also sweeps
+  the value-plane encoding — fp32 vs int8 vs nibble-packed int4
+  (DESIGN.md section 9) — on the best bucketed layout, recording
+  ``bytes_per_mv`` (value + index planes streamed per matvec: the paper's
+  pin traffic) next to the time.
 * ``--smoke``: a single fused gate+up+down decode layer on tiny shapes,
-  asserted against the dense pruned MLP — the CI fail-fast microbench.
+  asserted against the dense pruned MLP, in fp AND quantized (int8/int4)
+  form — the CI fail-fast microbench for both datapaths.
 
 Writes machine-readable ``BENCH_kernels.json`` in the working directory so
 the perf trajectory is tracked across PRs.
@@ -33,6 +38,7 @@ import numpy as np
 from repro.core.pruning import magnitude_prune
 from repro.core.sparse_format import chunk_pack, pack_bucketed_stack, pack_ell
 from repro.kernels import ops, ref
+from repro.quant import default_spec, quantize_bucketed_stack
 
 from benchmarks.common import csv_row
 
@@ -103,6 +109,34 @@ def _bucketed_fn(pack, impl="ref"):
     return fused
 
 
+def _bucketed_quant_fn(pack, impl="ref"):
+    """The same launches from the quantized value planes (pack.qplanes):
+    codes + per-row-group scales through the quantized kernels."""
+    bufs = [(jnp.asarray(p.device_codes()[0]),
+             jnp.asarray(b["cols"][0], jnp.int32),
+             jnp.asarray(p.scales[0]), p.group_rows)
+            for b, p in zip(pack.buckets, pack.qplanes)]
+    cc = pack.chunk_cols
+
+    @jax.jit
+    def fused(x):
+        outs = [ops.espim_spmv_batched_quant(q, c, s, x, chunk_cols=cc,
+                                             group_rows=g, impl=impl)
+                for q, c, s, g in bufs]
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+
+    return fused
+
+
+def _pack_bytes(pack, quant=None):
+    """(value, index) plane bytes one matvec streams for a bucketed pack's
+    single layer (the pin-traffic figure recorded with each timing)."""
+    index = 4 * pack.padded_slots_per_layer
+    if quant is None:
+        return 4 * pack.padded_slots_per_layer, index
+    return sum(int(p.value_bytes_by_lead().sum()) for p in pack.qplanes), index
+
+
 def _bench_batched_decode(rows: list[str], report: dict) -> None:
     rng = np.random.default_rng(1)
     for name, r, c, s in DECODE_SHAPES:
@@ -119,6 +153,8 @@ def _bench_batched_decode(rows: list[str], report: dict) -> None:
                                             chunk_cols=cc,
                                             n_buckets=N_BUCKETS)
                     for cc in (*DECODE_CHUNKS, c)}
+        qcache: dict = {}    # (chunk_cols, mode) -> planes: quantize once,
+        # reuse across the batch sweep (calibration is B-independent)
         for b in DECODE_BATCH:
             x = jnp.asarray(rng.standard_normal((c, b)), jnp.float32)
             us_old = _time(old_fn, v2, c2, x, iters=3)
@@ -148,6 +184,32 @@ def _bench_batched_decode(rows: list[str], report: dict) -> None:
                 if best is None or us < best["us"]:
                     best = cand
 
+            # value-plane encodings on the best bucketed layout (sec. 9):
+            # fp32 vs int8 vs nibble-packed int4, bytes-per-MV alongside
+            bp_best = bucketed[best["chunk_cols"]]
+            vb_fp, ib = _pack_bytes(bp_best)
+            quant_rows = {"fp": {"us": best["us"], "value_bytes": vb_fp,
+                                 "index_bytes": ib,
+                                 "bytes_per_mv": vb_fp + ib}}
+            for mode in ("int8", "int4"):
+                key = (best["chunk_cols"], mode)
+                if key not in qcache:
+                    qcache[key] = quantize_bucketed_stack(
+                        bp_best, default_spec(mode), attach=False)
+                bp_best.qplanes = qcache[key]
+                us_q = _time(_bucketed_quant_fn(bp_best), x, iters=3)
+                vb, _ = _pack_bytes(bp_best, quant=mode)
+                quant_rows[mode] = {
+                    "us": round(us_q, 1),
+                    "value_bytes": vb,
+                    "index_bytes": ib,
+                    "bytes_per_mv": vb + ib,
+                    "bits_per_nnz": round(8.0 * vb / max(1, bp_best.nnz), 2),
+                    "speedup_vs_fp": round(best["us"] / us_q, 3),
+                    "storage": bp_best.qplanes[0].storage,
+                }
+            bp_best.qplanes = None
+
             entry = {
                 "shape": name, "rows": r, "cols": c, "sparsity": s, "B": b,
                 "ell_width": plain.ell_width,
@@ -162,6 +224,7 @@ def _bench_batched_decode(rows: list[str], report: dict) -> None:
                 "speedup_vs_einsum": round(us_old / best["us"], 3),
                 "speedup_vs_prev": round(prev["us"] / best["us"], 3),
                 "bucketed_configs": detail,
+                "quant": quant_rows,
             }
             report["batched_decode"].append(entry)
             rows.append(csv_row(
@@ -176,21 +239,28 @@ def _bench_batched_decode(rows: list[str], report: dict) -> None:
 def _smoke(report: dict) -> None:
     """Single fused decode layer, tiny shapes: parity-asserted timing of
     the serving MLP datapath (gate+up fused SpMV -> product in packed
-    order -> perm-folded down SpMV) vs the dense pruned MLP."""
+    order -> perm-folded down SpMV) vs the dense pruned MLP — in fp AND
+    from the quantized value planes (int8 / int4 vs their dequantized
+    dense copies), so a quant-kernel regression fails CI in seconds."""
     from repro.configs.registry import get_config
     from repro.core import sparse_model as SM
     from repro.models import factory
 
     cfg = get_config("llama7b-espim", reduced=True)
     params = factory.init_params(cfg, jax.random.PRNGKey(0))
-    sparse = SM.sparsify_mlps(cfg, params, 0.9)
     rng = np.random.default_rng(0)
     hn = jnp.asarray(rng.standard_normal((8, 1, cfg.d_model)), jnp.float32)
-    bufs = jax.tree.map(lambda x: x[0], SM._scan_bufs(sparse))
-    wl = {n: sparse[f"{n}_pruned"][0] for n in ("w_gate", "w_up", "w_down")}
 
-    fused = jax.jit(lambda x: SM._fused_mlp(cfg, sparse, bufs, x, "ref"))
-    dense = jax.jit(lambda x: SM._pruned_mlp(cfg, sparse, wl, x))
+    def layer_pair(quant):
+        sparse = SM.sparsify_mlps(cfg, params, 0.9, quant=quant)
+        bufs = jax.tree.map(lambda x: x[0], SM._scan_bufs(sparse))
+        wl = {n: sparse[f"{n}_pruned"][0]
+              for n in ("w_gate", "w_up", "w_down")}
+        fused = jax.jit(lambda x: SM._fused_mlp(cfg, sparse, bufs, x, "ref"))
+        dense = jax.jit(lambda x: SM._pruned_mlp(cfg, sparse, wl, x))
+        return sparse, fused, dense
+
+    sparse, fused, dense = layer_pair(None)
     got, want = fused(hn), dense(hn)
     err = float(jnp.abs(got - want).max() / jnp.abs(want).max())
     assert err < 5e-5, f"fused decode layer diverged from pruned dense: {err}"
@@ -202,29 +272,55 @@ def _smoke(report: dict) -> None:
         "max_rel_err": err,
         "gateup_buckets": list(sparse["gateup"]["bucket_rows"]),
         "gateup_widths": list(sparse["gateup"]["widths"]),
+        "quant": {},
     }
+    for mode in ("int8", "int4"):
+        sparse_q, fused_q, dense_q = layer_pair(mode)
+        got_q, want_q = fused_q(hn), dense_q(hn)
+        # the dense copies are the DEQUANTIZED weights: parity is exact-ish
+        err_q = float(jnp.abs(got_q - want_q).max() / jnp.abs(want_q).max())
+        assert err_q < 5e-5, (
+            f"{mode} fused layer diverged from its dequantized dense "
+            f"reference: {err_q}")
+        st = SM.sparse_stats(sparse_q)
+        report["smoke_result"]["quant"][mode] = {
+            "fused_layer_us": round(_time(fused_q, hn), 1),
+            "max_rel_err": err_q,
+            "bits_per_nnz": round(st["total"]["bits_per_nnz"], 2),
+            "bytes_per_token": st["total"]["bytes_per_token"],
+        }
 
 
 def check_schema(report: dict, smoke: bool) -> None:
-    assert report["schema"] == "espim-kernels-bench/v2"
+    assert report["schema"] == "espim-kernels-bench/v3"
     assert "provenance" in report and "backend" in report["provenance"]
+    assert "quant" in report["provenance"]
     if smoke:
         s = report["smoke_result"]
         for k in ("fused_layer_us", "dense_layer_us", "max_rel_err"):
             assert k in s, f"smoke_result.{k} missing"
+        for mode in ("int8", "int4"):
+            q = s["quant"][mode]
+            for k in ("fused_layer_us", "max_rel_err", "bits_per_nnz"):
+                assert k in q, f"smoke_result.quant.{mode}.{k} missing"
         return
     for e in report["batched_decode"]:
         for k in ("einsum_us", "prev_fused_us", "fused_us", "pad_frac",
                   "speedup_vs_prev"):
             assert k in e, f"batched_decode.{k} missing"
+        for mode in ("fp", "int8", "int4"):
+            assert "bytes_per_mv" in e["quant"][mode], (e["shape"], mode)
+        assert (e["quant"]["int4"]["bytes_per_mv"]
+                < e["quant"]["int8"]["bytes_per_mv"]
+                < e["quant"]["fp"]["bytes_per_mv"])
 
 
 def run(smoke: bool = False) -> list[str]:
     rows: list[str] = []
     report = {
-        "schema": "espim-kernels-bench/v2",
+        "schema": "espim-kernels-bench/v3",
         "backend": jax.default_backend(),
-        "provenance": ops.provenance(impl="ref"),
+        "provenance": ops.provenance(impl="ref", quant="sweep"),
         "smoke": smoke,
         "unbatched": [],
         "batched_decode": [],
@@ -255,6 +351,15 @@ def run(smoke: bool = False) -> list[str]:
             "min_pad_frac_bucketed": min(
                 (c["pad_frac"] for e in by_case.values()
                  for c in e["bucketed_configs"]), default=None),
+            # the quantization acceptance metrics: value+index bytes one
+            # MV streams, fp -> int8 -> int4, and the int8 time ratio
+            "bytes_per_mv": {
+                k: {m: e["quant"][m]["bytes_per_mv"]
+                    for m in ("fp", "int8", "int4")}
+                for k, e in by_case.items()},
+            "min_int8_speedup_vs_fp": min(
+                (e["quant"]["int8"]["speedup_vs_fp"]
+                 for e in by_case.values()), default=None),
         }
     check_schema(report, smoke)
     with open(SMOKE_JSON_PATH if smoke else JSON_PATH, "w") as f:
@@ -274,12 +379,18 @@ if __name__ == "__main__":
         doc = json.load(f)
     if args.smoke:
         s = doc["smoke_result"]
+        q8, q4 = s["quant"]["int8"], s["quant"]["int4"]
         print(f"smoke ok: fused layer {s['fused_layer_us']:.0f}us vs dense "
               f"{s['dense_layer_us']:.0f}us (err {s['max_rel_err']:.1e}); "
-              f"wrote {SMOKE_JSON_PATH}")
+              f"int8 {q8['fused_layer_us']:.0f}us @ "
+              f"{q8['bits_per_nnz']:.1f} bits/nnz, int4 "
+              f"{q4['fused_layer_us']:.0f}us @ {q4['bits_per_nnz']:.1f} "
+              f"bits/nnz (parity asserted); wrote {SMOKE_JSON_PATH}")
     else:
         print(f"wrote {JSON_PATH}: min fused-vs-einsum speedup at B>=8 = "
               f"{doc['summary']['min_speedup_at_B_ge_8']}, vs PR2 fused = "
               f"{doc['summary']['min_speedup_vs_prev_at_B_ge_8']}, min "
               f"bucketed pad_frac = "
-              f"{doc['summary']['min_pad_frac_bucketed']}")
+              f"{doc['summary']['min_pad_frac_bucketed']}, min int8 "
+              f"speedup vs fp = "
+              f"{doc['summary']['min_int8_speedup_vs_fp']}")

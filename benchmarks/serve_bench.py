@@ -2,18 +2,34 @@
 and emit BENCH_serve.json.
 
 Measures, for dense and ESPIM-sparse engines on the quickstart config
-(llama7b-espim, reduced):
+(llama7b-espim, reduced), in TWO serving scenarios:
 
-* steady-state throughput (tok/s) and per-request TTFT / TPOT / queue
-  delay p50/p95 under a mixed prompt/output-length arrival trace;
-* the chunked-prefill TTFT win: wall-clock and jitted-call counts for a
-  prompt_len-P request served via chunked prefill vs token replay
-  (ceil(P/chunk) prefill calls vs P decode steps);
-* paged-vs-contiguous bit-parity: the block-pool cache must reproduce the
-  contiguous engine's sampled tokens exactly at temperature=0.
+* ``single_stream`` (slots=1) — the paper's own deployment: ESPIM is a
+  memory-bound MV accelerator and decode at B=1 streams every weight
+  plane per token, so this is where the compressed format's bytes
+  translate to time.  The headline ``sparse_dense_ratio`` (the
+  serving-default encoding, ``cfg.espim_quant``, vs dense) is computed
+  here.
+* ``batched`` (continuous batching over ``slots`` decode slots, mixed
+  prompt/output-length Poisson-ish arrivals) — this repo's serving
+  extension; on CPU-ref the batched gather competes with BLAS GEMM
+  (DESIGN.md sections 8/9), so its ratio is reported but not the
+  headline.
+
+Every sparse mode runs in three value-plane encodings — fp32, int8,
+nibble-packed int4 (section 9) — each row carrying the weight-side
+``bytes_per_token`` it streams (value + index planes).  Mode repeats are
+INTERLEAVED round-robin so shared-host drift hits every mode equally
+(sequential best-of runs measured the host, not the engine).
+
+Also measured: the chunked-prefill TTFT win (wall clock + jitted-call
+counts vs token replay) and paged-vs-contiguous bit-parity at
+temperature=0.  Loud warnings fire when the default sparse mode loses to
+dense single-stream, or when a quantized mode loses to the fp sparse path
+it exists to beat.
 
 Run:   PYTHONPATH=src:. python benchmarks/serve_bench.py [--smoke]
-Smoke: tiny trace + schema assertion (wired into scripts/ci.sh).
+Smoke: tiny traces + schema assertion (wired into scripts/ci.sh).
 """
 from __future__ import annotations
 
@@ -26,13 +42,14 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.core.sparse_model import sparsify_mlps
+from repro.core.sparse_model import sparse_stats, sparsify_mlps
 from repro.kernels import ops
 from repro.models import factory
 from repro.serve.engine import Request, ServeEngine
 
 ARCH = "llama7b-espim"
 SPARSITY = 0.9
+QUANT_MODES = ("int8", "int4")
 
 
 def make_trace(rng, n_requests, prompt_lens, out_lens, mean_gap_steps):
@@ -73,40 +90,56 @@ def drive(eng, trace):
 
 def bench_mode(cfg, params, trace, *, sparse=None, slots, max_len,
                block_size, chunk, paged=True, repeats=3):
-    """Drive the trace ``repeats`` times on one warmed engine and keep the
-    best run — single-shot wall clocks on a shared host are too noisy for
-    a steady-state serving number (same best-of discipline as the kernel
-    bench's ``_time``)."""
-    eng = ServeEngine(cfg, params, batch_slots=slots, max_len=max_len,
-                      sparse=sparse, paged=paged, block_size=block_size,
-                      prefill_chunk=chunk)
-    # warm the jits so the trace measures steady-state serving
-    warm = Request(rid=-1, prompt=[1] * (chunk + 2), max_new_tokens=2)
-    eng.submit(warm)
-    eng.run()
+    """Single-engine best-of run (used for the paged-parity token check)."""
+    res, toks = bench_many(cfg, params, trace, sparse_by_mode={"m": sparse},
+                           slots=slots, max_len=max_len,
+                           block_size=block_size, chunk=chunk, paged=paged,
+                           repeats=repeats)
+    return res["m"], toks["m"]
 
-    best, toks = None, None
+
+def bench_many(cfg, params, trace, *, sparse_by_mode: dict, slots, max_len,
+               block_size, chunk, paged=True, repeats=5):
+    """Drive the trace ``repeats`` times per mode with the repeats
+    INTERLEAVED round-robin across the warmed engines, keeping each
+    mode's best run.  Sequential per-mode best-of runs let minutes-scale
+    host drift land entirely on one mode; interleaving spreads it evenly,
+    so the mode *ratios* are trustworthy even on a noisy shared host."""
+    engines, best, toks = {}, {}, {}
+    for label, sparse in sparse_by_mode.items():
+        eng = ServeEngine(cfg, params, batch_slots=slots, max_len=max_len,
+                          sparse=sparse, paged=paged, block_size=block_size,
+                          prefill_chunk=chunk)
+        # warm the jits so the trace measures steady-state serving
+        eng.submit(Request(rid=-1, prompt=[1] * (chunk + 2),
+                           max_new_tokens=2))
+        eng.run()
+        engines[label] = eng
     for _ in range(repeats):
-        eng.reset_stats()
-        reqs, dt = drive(eng, trace)
-        lat = eng.stats.latency_summary()
-        res = {
-            "throughput_tok_s": eng.stats.tokens_generated / max(dt, 1e-9),
-            "tokens": eng.stats.tokens_generated,
-            "requests": eng.stats.requests_completed,
-            "engine_steps": eng.stats.steps,
-            "prefill_chunks": eng.stats.prefill_chunks,
-            "decode_steps": eng.stats.decode_steps,
-            "slot_occupancy": eng.stats.slot_occupancy,
-            "ttft_s": lat["ttft_s"],
-            "tpot_s": lat["tpot_s"],
-            "queue_delay_s": lat["queue_delay_s"],
-            "wall_s": dt,
-            "repeats": repeats,
-        }
-        if best is None or res["throughput_tok_s"] > best["throughput_tok_s"]:
-            best = res
-            toks = [r.output for r in reqs]
+        for label, eng in engines.items():
+            eng.reset_stats()
+            reqs, dt = drive(eng, trace)
+            lat = eng.stats.latency_summary()
+            res = {
+                "throughput_tok_s": eng.stats.tokens_generated
+                / max(dt, 1e-9),
+                "tokens": eng.stats.tokens_generated,
+                "requests": eng.stats.requests_completed,
+                "engine_steps": eng.stats.steps,
+                "prefill_chunks": eng.stats.prefill_chunks,
+                "decode_steps": eng.stats.decode_steps,
+                "slot_occupancy": eng.stats.slot_occupancy,
+                "ttft_s": lat["ttft_s"],
+                "tpot_s": lat["tpot_s"],
+                "queue_delay_s": lat["queue_delay_s"],
+                "wall_s": dt,
+                "repeats": repeats,
+            }
+            if (label not in best
+                    or res["throughput_tok_s"]
+                    > best[label]["throughput_tok_s"]):
+                best[label] = res
+                toks[label] = [r.output for r in reqs]
     return best, toks
 
 
@@ -142,13 +175,26 @@ def bench_ttft(cfg, params, prompt_len, chunk, max_len):
 
 def check_schema(doc: dict) -> None:
     assert doc["paged_parity"] is True, "paged/contiguous tokens diverged"
-    for mode in ("dense", "sparse"):
-        m = doc["modes"][mode]
-        for k in ("throughput_tok_s", "tokens", "requests", "ttft_s",
-                  "tpot_s", "queue_delay_s", "slot_occupancy"):
-            assert k in m, f"modes.{mode}.{k} missing"
-        assert m["ttft_s"]["p50"] is not None
-    assert "provenance" in doc and "backend" in doc["provenance"]
+    for scen_name in ("single_stream", "batched"):
+        scen = doc["scenarios"][scen_name]
+        for mode in ("dense", "sparse", "sparse_int8", "sparse_int4"):
+            m = scen["modes"][mode]
+            for k in ("throughput_tok_s", "tokens", "requests", "ttft_s",
+                      "tpot_s", "queue_delay_s", "slot_occupancy"):
+                assert k in m, f"{scen_name}.{mode}.{k} missing"
+            assert m["ttft_s"]["p50"] is not None
+            if mode != "dense":
+                assert "bytes_per_token" in m and "bits_per_nnz" in m, mode
+        # quantization must shrink the weight bytes a decode token streams
+        assert (scen["modes"]["sparse_int4"]["bytes_per_token"]
+                < scen["modes"]["sparse_int8"]["bytes_per_token"]
+                < scen["modes"]["sparse"]["bytes_per_token"])
+        assert scen["sparse_dense_ratio"] > 0
+        assert scen["sparse_fp_dense_ratio"] > 0
+        for mode in QUANT_MODES:
+            assert scen["quant_vs_fp"][mode] > 0
+    assert doc["modes"] is doc["scenarios"]["single_stream"]["modes"]
+    assert "provenance" in doc and "quant" in doc["provenance"]
     assert doc["sparse_dense_ratio"] > 0
     t = doc["ttft_improvement"]
     for k in ("prompt_len", "chunk", "speedup", "call_reduction",
@@ -171,28 +217,68 @@ def main():
     if args.smoke:
         slots, max_len, block_size, chunk = 2, 64, 8, 8
         trace = make_trace(rng, 4, [4, 9, 17], [3, 5], 2)
+        ss_trace = make_trace(rng, 2, [6, 12], [6], 0)
+        repeats_ss, repeats_b = 2, 2
         ttft_prompt = 16
     else:
+        # batched: decode-weighted mixed-length arrivals (prefill runs the
+        # dense GEMMs in every sparse mode — Section III-I — so decode is
+        # where the modes differ); single_stream: back-to-back requests on
+        # one slot, the paper's B=1 MV deployment
         slots, max_len, block_size, chunk = 4, 192, 16, 32
-        trace = make_trace(rng, 12, [8, 24, 64, 120], [8, 16, 32], 4)
+        trace = make_trace(rng, 12, [8, 24, 64, 120], [24, 32, 48], 2)
+        ss_trace = make_trace(rng, 4, [16, 48], [48], 0)
+        repeats_ss, repeats_b = 5, 3
         ttft_prompt = 128
 
-    modes = {}
-    modes["dense"], toks_paged = bench_mode(
-        cfg, params, trace, slots=slots, max_len=max_len,
-        block_size=block_size, chunk=chunk, paged=True)
+    sparses = {"dense": None}
+    plane_stats = {}
+    for label, quant in (("sparse", None),
+                         *((f"sparse_{m}", m) for m in QUANT_MODES)):
+        sp = sparsify_mlps(cfg, params, SPARSITY, quant=quant)
+        sparses[label] = sp
+        plane_stats[label] = sparse_stats(sp)["total"]
+
+    def run_scenario(tr, n_slots, repeats):
+        res, toks = bench_many(cfg, params, tr, sparse_by_mode=sparses,
+                               slots=n_slots, max_len=max_len,
+                               block_size=block_size, chunk=chunk,
+                               repeats=repeats)
+        for label, st in plane_stats.items():
+            res[label]["quant"] = sparses[label]["quant"]
+            res[label]["bytes_per_token"] = st["bytes_per_token"]
+            res[label]["bits_per_nnz"] = round(st["bits_per_nnz"], 2)
+        dense_tok = max(res["dense"]["throughput_tok_s"], 1e-9)
+        fp_tok = max(res["sparse"]["throughput_tok_s"], 1e-9)
+        default_mode = ("sparse" if cfg.espim_quant == "none"
+                        else f"sparse_{cfg.espim_quant}")
+        scen = {
+            "slots": n_slots,
+            "n_requests": len(tr),
+            "repeats": repeats,
+            "modes": res,
+            "sparse_default_mode": default_mode,
+            "sparse_dense_ratio": res[default_mode]["throughput_tok_s"]
+            / dense_tok,
+            "sparse_fp_dense_ratio": fp_tok / dense_tok,
+            "quant_vs_fp": {
+                m: res[f"sparse_{m}"]["throughput_tok_s"] / fp_tok
+                for m in QUANT_MODES},
+        }
+        return scen, toks
+
+    single, _ = run_scenario(ss_trace, 1, repeats_ss)
+    batched, toks_all = run_scenario(trace, slots, repeats_b)
     _, toks_contig = bench_mode(
         cfg, params, trace, slots=slots, max_len=max_len,
-        block_size=block_size, chunk=chunk, paged=False)
-    parity = toks_paged == toks_contig
+        block_size=block_size, chunk=chunk, paged=False, repeats=1)
+    parity = toks_all["dense"] == toks_contig
 
-    sparse = sparsify_mlps(cfg, params, SPARSITY)
-    modes["sparse"], _ = bench_mode(
-        cfg, params, trace, sparse=sparse, slots=slots, max_len=max_len,
-        block_size=block_size, chunk=chunk, paged=True)
-
-    ratio = (modes["sparse"]["throughput_tok_s"]
-             / max(modes["dense"]["throughput_tok_s"], 1e-9))
+    # headline ratios come from the paper's own serving mode (B=1 MV)
+    modes = single["modes"]
+    default_mode = single["sparse_default_mode"]
+    ratio = single["sparse_dense_ratio"]
+    fp_tok = modes["sparse"]["throughput_tok_s"]
     doc = {
         "bench": "serve",
         "arch": ARCH,
@@ -204,9 +290,20 @@ def main():
         "prefill_chunk": chunk,
         "n_requests": len(trace),
         "sparsity": SPARSITY,
-        "provenance": ops.provenance(impl="ref"),
+        "provenance": ops.provenance(impl="ref", quant=cfg.espim_quant),
+        "scenarios": {"single_stream": single, "batched": batched},
+        # headline fields = the single_stream (paper B=1 MV) scenario;
+        # "modes" kept as its alias for cross-PR continuity
         "modes": modes,
+        "sparse_default_mode": default_mode,
         "sparse_dense_ratio": ratio,
+        "sparse_fp_dense_ratio": single["sparse_fp_dense_ratio"],
+        "quant_vs_fp": single["quant_vs_fp"],
+        "batched_sparse_dense_ratio": batched["sparse_dense_ratio"],
+        "bytes_per_token_reduction": {
+            m: (modes["sparse"]["bytes_per_token"]
+                / max(1, modes[f"sparse_{m}"]["bytes_per_token"]))
+            for m in QUANT_MODES},
         "ttft_improvement": bench_ttft(cfg, params, ttft_prompt, chunk,
                                        max_len),
         "paged_parity": parity,
@@ -215,10 +312,16 @@ def main():
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)
     t = doc["ttft_improvement"]
-    print(f"wrote {args.out}: dense "
-          f"{modes['dense']['throughput_tok_s']:.1f} tok/s, sparse "
-          f"{modes['sparse']['throughput_tok_s']:.1f} tok/s "
-          f"(ratio {ratio:.2f}); TTFT@"
+    print(f"wrote {args.out}: single-stream dense "
+          f"{modes['dense']['throughput_tok_s']:.1f} tok/s, sparse fp "
+          f"{fp_tok:.1f}, int8 "
+          f"{modes['sparse_int8']['throughput_tok_s']:.1f}, int4 "
+          f"{modes['sparse_int4']['throughput_tok_s']:.1f} tok/s "
+          f"({default_mode}/dense ratio {ratio:.2f}, batched ratio "
+          f"{batched['sparse_dense_ratio']:.2f}; bytes/token "
+          f"{modes['sparse']['bytes_per_token']} -> "
+          f"{modes['sparse_int8']['bytes_per_token']} -> "
+          f"{modes['sparse_int4']['bytes_per_token']}); TTFT@"
           f"{t['prompt_len']} chunked {t['chunked']['ttft_s']:.3f}s vs "
           f"replay {t['replay']['ttft_s']:.3f}s "
           f"({t['speedup']:.1f}x wall, {t['call_reduction']:.1f}x fewer "
@@ -226,8 +329,8 @@ def main():
     if ratio < 1.0:
         print(
             "\n" + "!" * 72 + "\n"
-            f"!! WARNING: ESPIM-sparse serving is SLOWER than dense "
-            f"(ratio {ratio:.2f}).\n"
+            f"!! WARNING: ESPIM-sparse serving ({default_mode}) is SLOWER "
+            f"than dense (ratio {ratio:.2f}).\n"
             f"!! The compressed format should never lose the serving race "
             f"it exists to win\n"
             f"!! (paper Sec. I/IV) — check BENCH_kernels.json and the "
@@ -235,6 +338,23 @@ def main():
             f"!! (backend={doc['provenance']['backend']}, "
             f"impl={doc['provenance']['impl']}).\n" + "!" * 72,
             file=sys.stderr)
+    for m in QUANT_MODES:
+        if doc["quant_vs_fp"][m] < 1.0:
+            print(
+                "\n" + "!" * 72 + "\n"
+                f"!! WARNING: {m}-quantized sparse serving is SLOWER than "
+                f"the fp sparse path\n"
+                f"!! (ratio {doc['quant_vs_fp'][m]:.2f}) despite streaming "
+                f"{doc['bytes_per_token_reduction'][m]:.2f}x fewer weight "
+                f"bytes/token.\n"
+                f"!! The narrow value plane pays off only where decode is "
+                f"bandwidth-bound —\n"
+                f"!! on this backend "
+                f"(backend={doc['provenance']['backend']}, "
+                f"impl={doc['provenance']['impl']}) the dequant\n"
+                f"!! arithmetic is winning; see BENCH_kernels.json "
+                f"quant rows before shipping {m}.\n" + "!" * 72,
+                file=sys.stderr)
 
 
 if __name__ == "__main__":

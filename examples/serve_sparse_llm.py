@@ -4,8 +4,13 @@ serving stack — paged KV cache, chunked prefill, and a latency-aware
 scheduler — and compare the sparse projections' outputs against the
 dense-pruned reference.
 
-Run:  PYTHONPATH=src python examples/serve_sparse_llm.py
+``--quant {none,int8,int4}`` (default: the config's serving preset,
+int8 for llama7b-espim) re-encodes the packs' value planes (DESIGN.md
+section 9) and prints the measured weight-bytes/token reduction.
+
+Run:  PYTHONPATH=src python examples/serve_sparse_llm.py [--quant int4]
 """
+import argparse
 import time
 
 import jax
@@ -15,13 +20,19 @@ import numpy as np
 from repro.configs.registry import get_config
 from repro.core.espim_linear import ESPIMLinear
 from repro.core.pruning import magnitude_prune
-from repro.core.sparse_model import sparsify_mlps
+from repro.core.sparse_model import sparse_stats, sparsify_mlps
 from repro.models import factory
 from repro.serve.engine import Request, ServeEngine
 
 SPARSITY = 0.9
 
 cfg = get_config("llama7b-espim", reduced=True)
+ap = argparse.ArgumentParser()
+ap.add_argument("--quant", choices=("none", "int8", "int4"),
+                default=cfg.espim_quant,
+                help="value-plane encoding for the packed MLPs "
+                     f"(default: the config preset, {cfg.espim_quant})")
+QUANT = ap.parse_args().quant
 params = factory.init_params(cfg, jax.random.PRNGKey(0))
 
 # --- flexible dense/sparse projections (Section III-I) ---------------------
@@ -43,7 +54,19 @@ for name in ("wq", "wk", "wv", "wo"):
 # The shortest-prompt-first policy admits the short prompts ahead of the
 # long ones (lower mean TTFT); chunked prefill turns each long prompt into
 # ceil(len/chunk) jitted calls; all slots share one block-pool KV arena.
-sparse = sparsify_mlps(cfg, params, SPARSITY)
+# ``--quant`` serves decode from int8/int4 value planes (section 9): same
+# packs, same schedules, narrow codes + per-row-group scales.
+sparse = sparsify_mlps(cfg, params, SPARSITY, quant=QUANT)
+if QUANT != "none":
+    st = sparse_stats(sparse)["total"]
+    # the fp baseline needs no second packing pass: fp32 values cost 4
+    # bytes/slot — exactly the quant-invariant int32 index plane's size
+    fp_bytes = 2 * st["index_plane_bytes"]
+    fp_bits = 8.0 * st["index_plane_bytes"] / st["nnz"]
+    print(f"\nquant={QUANT}: weight bytes/token "
+          f"{fp_bytes} -> {st['bytes_per_token']} "
+          f"({fp_bytes / st['bytes_per_token']:.2f}x smaller; value plane "
+          f"{st['bits_per_nnz']:.1f} bits/nnz vs fp {fp_bits:.1f})")
 prompt_lens = [3, 40, 2, 56, 5, 24, 4, 12]
 prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
            for n in prompt_lens]

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # One reproducible entrypoint: install deps, run the decode-path smoke
-# microbench FIRST (single fused layer, tiny shapes, parity-asserted — a
-# kernel-level regression fails here in seconds, long before the full
+# microbench FIRST (single fused layer, tiny shapes, parity-asserted in
+# fp AND from the quantized int8/int4 value planes — a kernel- or
+# quant-level regression fails here in seconds, long before the full
 # serve bench), then tier-1 tests, then the serving benchmark smoke.
 #
 #   scripts/ci.sh                  # smoke benches + tests
@@ -18,7 +19,7 @@ fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== decode-path smoke microbench (fail fast) =="
+echo "== decode-path smoke microbench, fp + quantized int8/int4 (fail fast) =="
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" ESPIM_IMPL=ref \
     python benchmarks/kernels_bench.py --smoke
 

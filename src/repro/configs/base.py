@@ -60,6 +60,7 @@ class ModelConfig:
     kv_chunk: int = 1024
     # ESPIM sparsity (serving)
     espim_sparsity: float = 0.0  # 0 = dense serving
+    espim_quant: str = "none"    # value-plane encoding: none | int8 | int4
 
     @property
     def hd(self) -> int:

@@ -61,7 +61,12 @@ class ESPIMLinear:
         row_tile: int = 128,
         chunk_cols: int = ops.DEFAULT_CHUNK_COLS,
         dtype=jnp.float32,
+        quant=None,
     ) -> "ESPIMLinear":
+        """``quant`` ("int8" | "int4" | a ``repro.quant.QuantSpec``)
+        quantizes the pack's value plane on the sparse path (DESIGN.md
+        section 9); the dense path ignores it — narrow fixed-point values
+        are the compressed format's lever, not the GEMM path's."""
         w = np.asarray(w)
         if prune_sparsity is not None:
             w = magnitude_prune(w, prune_sparsity)
@@ -70,7 +75,9 @@ class ESPIMLinear:
         if sparse:
             pack = pack_ell_chunked(w, row_tile=row_tile,
                                     chunk_cols=chunk_cols)
-            weights = ops.pack_to_device(pack, dtype=dtype)
+            if quant in ("none",):
+                quant = None
+            weights = ops.pack_to_device(pack, dtype=dtype, quant=quant)
         else:
             weights = jnp.asarray(w, dtype=dtype)
         b = None if bias is None else jnp.asarray(bias, dtype=jnp.float32)

@@ -72,11 +72,34 @@ class PackStats:
     padding_frac: float     # 1 - nnz / padded_slots  (the "stall" fraction)
     density: float
     tile_widths: tuple      # per-tile max nnz before global padding
+    # value-plane storage override: None = fp32 (4 bytes per slot); a
+    # quantized pack replaces it with the packed size (repro.quant.qpack)
+    value_bytes: int | None = None
+
+    @property
+    def value_plane_bytes(self) -> int:
+        """Bytes the value plane occupies in the stored format."""
+        return (4 * self.padded_slots if self.value_bytes is None
+                else self.value_bytes)
+
+    @property
+    def index_plane_bytes(self) -> int:
+        """Bytes the index plane occupies (int32 chunk-local col ids) —
+        untouched by quantization, per the paper's value/index decoupling."""
+        return 4 * self.padded_slots
+
+    @property
+    def bits_per_nnz(self) -> float:
+        """Value-plane bits per useful cell — the bytes/nnz crossing the
+        pin that the paper's narrow fixed-point values optimize (padding
+        slots and scale overhead charged to the nnz they serve)."""
+        return 8.0 * self.value_plane_bytes / max(1, self.nnz)
 
     def __str__(self) -> str:  # pragma: no cover - debug aid
         return (
             f"PackStats({self.n_rows}x{self.n_cols}, nnz={self.nnz}, "
-            f"L={self.ell_width}, pad={self.padding_frac:.3f})"
+            f"L={self.ell_width}, pad={self.padding_frac:.3f}, "
+            f"bits/nnz={self.bits_per_nnz:.1f})"
         )
 
 
@@ -98,6 +121,7 @@ class ELLPack:
     n_cols: int
     row_tile: int
     stats: PackStats
+    qplane: object = None   # QuantizedValuePlane (repro.quant.qpack)
 
     @property
     def r_pad(self) -> int:
@@ -226,6 +250,7 @@ class ELLChunkedPack:
     chunk_cols: int
     stats: PackStats
     plan: ChunkPlan
+    qplane: object = None   # QuantizedValuePlane (repro.quant.qpack)
 
     @property
     def r_pad(self) -> int:
@@ -367,6 +392,7 @@ class BucketedStackedPack:
     plan: WidthBucketPlan
     nnz_per_layer: np.ndarray       # (L,) over all halves
     nnz_per_half: np.ndarray        # (halves, L)
+    qplanes: list | None = None     # per-bucket QuantizedValuePlane
 
     @property
     def n_layers(self) -> int:

@@ -22,8 +22,18 @@ The decode datapath is fully fused (DESIGN.md section 8):
   down output (``scatter_rows_ref`` is gone from the per-token path);
 * ``x`` stays in (in, B) layout across the whole MLP — one transpose in,
   one out, per layer.
+
+Quantized serving (``quant="int8"|"int4"``, DESIGN.md section 9): only the
+packs' *value planes* are re-encoded (repro.quant) — per-bucket-row-group
+scales ride the layer scan as one more stacked leaf and the fused SpMV
+launches dispatch to the quantized kernels; cols/perms/plans and the whole
+datapath shape are untouched.  The pruned dense copies are replaced by the
+*dequantized* reconstructions, so the GEMM prefill path and every parity
+test see exactly the weights the quantized kernels compute with.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +41,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.pruning import magnitude_prune
-from repro.core.sparse_format import BucketedStackedPack, pack_bucketed_stack
+from repro.core.sparse_format import (BucketedStackedPack,
+                                      bucketed_stack_to_dense,
+                                      pack_bucketed_stack)
 from repro.kernels import ops
 from repro.models import transformer as T
 
@@ -43,7 +55,37 @@ _MLP_NAMES = ("w_gate", "w_up", "w_down")
 
 def _to_device(pack: BucketedStackedPack) -> dict:
     """BucketedStackedPack -> the jnp dict the serving step consumes.
-    ``valid`` masks and nnz stats stay host-side (stats/tests only)."""
+    ``valid`` masks, nnz stats and the host QuantizedValuePlanes stay
+    host-side (stats/tests only); quantized packs upload per-bucket codes
+    (``q``) + pre-expanded per-row scales (``srow``, stacked over layers
+    like every other scan leaf) in place of the fp ``values``, and record
+    static ``quant`` meta (bits / effective group_rows / storage family)
+    per bucket."""
+    if pack.qplanes is None:
+        buckets = [
+            {"values": jnp.asarray(b["values"]),
+             "cols": jnp.asarray(b["cols"], jnp.int32),
+             "valid": b["valid"]}
+            for b in pack.buckets
+        ]
+        quant_meta = None
+    else:
+        # quantized serving never touches the fp plane: upload ONLY the
+        # codes and the per-row scales (expanded offline so the fused
+        # path folds the whole dequant into ONE multiply per bucket) —
+        # uploading the fp32 values just to drop them would transiently
+        # hold 4-8x the quantized footprint on device
+        buckets = [
+            {"q": jnp.asarray(plane.device_codes()),     # (L, HR, K, Lc[/2])
+             "cols": jnp.asarray(b["cols"], jnp.int32),
+             "srow": jnp.asarray(
+                 np.repeat(plane.scales, plane.group_rows, axis=-1)),
+             "valid": b["valid"]}
+            for b, plane in zip(pack.buckets, pack.qplanes)
+        ]
+        quant_meta = tuple(
+            {"bits": p.bits, "group_rows": p.group_rows, "storage": p.storage}
+            for p in pack.qplanes)
     return {
         "halves": pack.halves,
         "n_rows": pack.n_rows,
@@ -52,12 +94,7 @@ def _to_device(pack: BucketedStackedPack) -> dict:
         "chunk_cols": pack.chunk_cols,
         "bucket_rows": pack.bucket_rows,
         "widths": pack.widths,
-        "buckets": [
-            {"values": jnp.asarray(b["values"]),
-             "cols": jnp.asarray(b["cols"], jnp.int32),
-             "valid": b["valid"]}
-            for b in pack.buckets
-        ],
+        "buckets": buckets,
         "perm": jnp.asarray(pack.perm, jnp.int32),
         "inv_perm": jnp.asarray(pack.inv_perm, jnp.int32),
         "nnz": pack.nnz,
@@ -65,14 +102,33 @@ def _to_device(pack: BucketedStackedPack) -> dict:
         "nnz_per_half": np.asarray(pack.nnz_per_half),
         "padded_per_layer": pack.padded_slots_per_layer,
         "plan": pack.plan,
+        "quant": quant_meta,
+        "qplanes": pack.qplanes,
     }
+
+
+def _dequantized_halves(pack: BucketedStackedPack) -> list:
+    """Reconstruct the dense (transposed) matrices the quantized pack
+    actually encodes: dequantize each bucket plane and unscatter — these
+    replace the pruned copies so the dense prefill datapath (Section
+    III-I) and the parity tests run the *same* effective weights as the
+    quantized kernels."""
+    deq = dataclasses.replace(pack, buckets=[
+        dict(b, values=plane.dequantize())
+        for b, plane in zip(pack.buckets, pack.qplanes)])
+    return [[bucketed_stack_to_dense(deq, l, h)
+             for l in range(pack.n_layers)]
+            for h in range(pack.halves)]
 
 
 def sparsify_mlps(cfg: ModelConfig, params: dict, sparsity: float,
                   row_tile: int = 128,
                   chunk_cols: int = ops.DEFAULT_CHUNK_COLS,
-                  n_buckets: int = 4) -> dict:
-    """Offline pipeline: prune + fuse + pack every MLP projection.
+                  n_buckets: int = 4,
+                  quant: str | None = None,
+                  quant_spec=None) -> dict:
+    """Offline pipeline: prune + fuse + pack (+ quantize) every MLP
+    projection.
 
     Returns the fused serving packs plus pruned dense copies for
     verification:
@@ -81,9 +137,16 @@ def sparsify_mlps(cfg: ModelConfig, params: dict, sparsity: float,
       shared permutation (``halves == 2``; just up for non-gated MLPs);
     * ``"down"``: w_down with its column ids pre-composed with the gateup
       packed order (its gather domain is the gateup ``r_pad``).
+
+    ``quant`` ("int8" | "int4"; or pass an explicit
+    ``repro.quant.QuantSpec`` via ``quant_spec``) re-encodes the packs'
+    value planes per bucket row group and swaps the pruned dense copies
+    for their dequantized reconstructions — decode then serves from the
+    narrow codes while the GEMM prefill path stays weight-consistent.
     """
+    quant = None if quant in (None, "none") else quant
     out: dict = {"sparsity": sparsity, "format": "espim-fused-bucketed/v2",
-                 "gated": bool(cfg.gated_mlp)}
+                 "gated": bool(cfg.gated_mlp), "quant": quant or "none"}
     mlp = params["layers"]["mlp"]
     required = _MLP_NAMES if cfg.gated_mlp else ("w_up", "w_down")
     missing = [n for n in required if n not in mlp]
@@ -104,6 +167,23 @@ def sparsify_mlps(cfg: ModelConfig, params: dict, sparsity: float,
     gu = pack_bucketed_stack(halves, row_tile=row_tile,
                              chunk_cols=chunk_cols, n_buckets=n_buckets)
 
+    if quant is not None or quant_spec is not None:
+        from repro.quant import (QuantSpec, default_spec,
+                                 quantize_bucketed_stack)
+        spec = (quant_spec if isinstance(quant_spec, QuantSpec)
+                else default_spec(quant))
+        out["quant"] = quant or f"int{spec.bits}"
+        out["quant_spec"] = spec
+        quantize_bucketed_stack(gu, spec)
+        # the dequantized halves are the weights decode actually applies:
+        # make them the dense copies (prefill GEMMs + parity references)
+        deq_halves = _dequantized_halves(gu)
+        names = ("w_gate", "w_up") if cfg.gated_mlp else ("w_up",)
+        for h, name in enumerate(names):
+            pruned[name] = np.stack([m.T for m in deq_halves[h]])
+            out[f"{name}_pruned"] = jnp.asarray(pruned[name],
+                                                mlp[name].dtype)
+
     # Fold the gate/up permutation into w_down offline: permute w_down's
     # columns to the gateup *packed* order (pad positions stay zero
     # columns), so at runtime the packed intermediate feeds it directly.
@@ -116,6 +196,14 @@ def sparsify_mlps(cfg: ModelConfig, params: dict, sparsity: float,
     dn = pack_bucketed_stack([down_remapped], row_tile=row_tile,
                              chunk_cols=chunk_cols, n_buckets=n_buckets)
 
+    if quant is not None or quant_spec is not None:
+        quantize_bucketed_stack(dn, out["quant_spec"])
+        deq_down = _dequantized_halves(dn)[0]           # (d_model, gu_r_pad)
+        wdq = np.stack([m[:, gu.inv_perm[l]].T          # back to logical cols
+                        for l, m in enumerate(deq_down)])
+        pruned["w_down"] = wdq
+        out["w_down_pruned"] = jnp.asarray(wdq, mlp["w_down"].dtype)
+
     out["gateup"] = _to_device(gu)
     out["down"] = _to_device(dn)
     return out
@@ -126,12 +214,36 @@ def sparsify_mlps(cfg: ModelConfig, params: dict, sparsity: float,
 # --------------------------------------------------------------------------
 def _scan_bufs(sparse: dict):
     """The per-layer arrays threaded through the layer scan (everything
-    else about the packs is static geometry closed over by the step)."""
+    else about the packs is static geometry closed over by the step).
+    Quantized packs thread (codes, cols, scales) triples — the stacked
+    (L, G) scales are just one more scan leaf."""
+
+    def bufs(p):
+        if p["quant"] is not None:
+            return [(b["q"], b["cols"], b["srow"]) for b in p["buckets"]]
+        return [(b["values"], b["cols"]) for b in p["buckets"]]
+
     return {
-        "gu": [(b["values"], b["cols"]) for b in sparse["gateup"]["buckets"]],
-        "dn": [(b["values"], b["cols"]) for b in sparse["down"]["buckets"]],
+        "gu": bufs(sparse["gateup"]),
+        "dn": bufs(sparse["down"]),
         "dn_inv": sparse["down"]["inv_perm"],
     }
+
+
+def _bucket_spmv(pack: dict, buf: tuple, g: int, xt: jnp.ndarray,
+                 impl: str) -> jnp.ndarray:
+    """One bucket's SpMV launch, fp or quantized per the pack's meta.
+    Quantized launches return the code-domain accumulator and dequantize
+    with one multiply by the pre-expanded per-row scales."""
+    if pack["quant"] is not None:
+        codes, cols, srow = buf
+        yp = ops.espim_spmv_batched_quant(
+            codes, cols, None, xt, chunk_cols=pack["chunk_cols"],
+            group_rows=pack["quant"][g]["group_rows"], impl=impl)
+        return yp * srow[:, None]
+    vals, cols = buf
+    return ops.espim_spmv_batched(vals, cols, xt,
+                                  chunk_cols=pack["chunk_cols"], impl=impl)
 
 
 def _fused_mlp(cfg: ModelConfig, sparse: dict, bufs: dict, hn: jnp.ndarray,
@@ -149,9 +261,8 @@ def _fused_mlp(cfg: ModelConfig, sparse: dict, bufs: dict, hn: jnp.ndarray,
     xt = hn.reshape(-1, hn.shape[-1]).T.astype(jnp.float32)   # (in, B*T)
 
     parts = []
-    for (vals, cols), rg in zip(bufs["gu"], gu["bucket_rows"]):
-        yp = ops.espim_spmv_batched(vals, cols, xt,
-                                    chunk_cols=gu["chunk_cols"], impl=impl)
+    for g, (buf, rg) in enumerate(zip(bufs["gu"], gu["bucket_rows"])):
+        yp = _bucket_spmv(gu, buf, g, xt, impl)
         if sparse["gated"]:
             # gate rows and up rows of the bucket share packed order: the
             # product needs no unscatter (act(0)*0 == 0 on pad rows)
@@ -160,9 +271,8 @@ def _fused_mlp(cfg: ModelConfig, sparse: dict, bufs: dict, hn: jnp.ndarray,
             parts.append(act(yp))
     inter = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
 
-    outs = [ops.espim_spmv_batched(vals, cols, inter,
-                                   chunk_cols=dn["chunk_cols"], impl=impl)
-            for (vals, cols) in bufs["dn"]]
+    outs = [_bucket_spmv(dn, buf, g, inter, impl)
+            for g, buf in enumerate(bufs["dn"])]
     yd = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
     y = jnp.take(yd, bufs["dn_inv"], axis=0)                  # (d_model, B*T)
     return y.T.reshape(b, t, -1).astype(hn.dtype)
@@ -272,9 +382,26 @@ def prefill_chunk_sparse(cfg: ModelConfig, params: dict, sparse: dict,
 # --------------------------------------------------------------------------
 # Stats
 # --------------------------------------------------------------------------
+def _plane_bytes(p: dict) -> tuple:
+    """(value_bytes_total, index_bytes_total, per-layer value bytes) for a
+    pack dict: fp32 planes cost 4 bytes/slot; quantized planes use the
+    packed accounting (codes at their group's bit width + scales + the
+    int4 fallback map).  The index plane is int32 and quant-invariant —
+    the paper's value/index decoupling in byte form."""
+    n_layers = len(p["nnz_per_layer"])
+    index_total = 4 * p["padded_per_layer"] * n_layers
+    if p["qplanes"] is not None:
+        per_layer = np.sum([pl.value_bytes_by_lead() for pl in p["qplanes"]],
+                           axis=0)
+        return int(per_layer.sum()), index_total, [int(b) for b in per_layer]
+    per = 4 * p["padded_per_layer"]
+    return per * n_layers, index_total, [per] * n_layers
+
+
 def _pack_stats(p: dict) -> dict:
     n_layers = len(p["nnz_per_layer"])
     padded = p["padded_per_layer"] * n_layers
+    vbytes, ibytes, vbytes_layer = _plane_bytes(p)
     return {
         "nnz": int(p["nnz"]),
         "padded_slots": int(padded),
@@ -288,19 +415,31 @@ def _pack_stats(p: dict) -> dict:
         "single_bucket_pad_frac": 1 - p["nnz"] / max(
             1, p["plan"].single_bucket_slots * p["buckets"][0]["cols"].shape[2]
             * p["halves"] * n_layers),
+        "value_plane_bytes": vbytes,
+        "index_plane_bytes": ibytes,
+        "value_plane_bytes_per_layer": vbytes_layer,
+        "bits_per_nnz": 8.0 * vbytes / max(1, int(p["nnz"])),
+        "bits_per_nnz_per_layer": [
+            8.0 * b / max(1, int(n))
+            for b, n in zip(vbytes_layer, p["nnz_per_layer"])
+        ],
     }
 
 
 def sparse_stats(sparse: dict) -> dict:
-    """Aggregate + per-projection + per-layer padding stats.
+    """Aggregate + per-projection + per-layer padding AND byte-plane stats.
 
     The fused gateup pack reports per-half (per-projection) nnz under the
-    original projection names; padding is a property of the fused pack, so
-    per-projection ``pad_frac`` splits the fused pack's dead slots evenly
-    between the halves (they share every bucket width)."""
+    original projection names; padding (and the value/index planes) is a
+    property of the fused pack, so per-projection figures split the fused
+    pack's slots evenly between the halves (they share every bucket
+    width).  ``value_plane_bytes`` / ``index_plane_bytes`` /
+    ``bits_per_nnz`` report the stored (possibly quantized) format — the
+    bytes a decode token streams across the pin per layer/projection."""
     gu, dn = sparse["gateup"], sparse["down"]
     n_layers = len(gu["nnz_per_layer"])
-    out = {"gateup": _pack_stats(gu), "down": _pack_stats(dn)}
+    out = {"quant": sparse.get("quant", "none"),
+           "gateup": _pack_stats(gu), "down": _pack_stats(dn)}
     half_names = ("w_gate", "w_up") if sparse["gated"] else ("w_up",)
     half_padded = gu["padded_per_layer"] * n_layers // gu["halves"]
     for h, name in enumerate(half_names):
@@ -313,13 +452,29 @@ def sparse_stats(sparse: dict) -> dict:
                 1 - int(n) / (gu["padded_per_layer"] // gu["halves"])
                 for n in gu["nnz_per_half"][h]
             ],
+            "value_plane_bytes": out["gateup"]["value_plane_bytes"]
+            // gu["halves"],
+            "index_plane_bytes": out["gateup"]["index_plane_bytes"]
+            // gu["halves"],
+            "bits_per_nnz": 8.0 * (out["gateup"]["value_plane_bytes"]
+                                   / gu["halves"]) / max(1, nnz_h),
         }
     out["w_down"] = dict(out["down"])
     total_nnz = gu["nnz"] + dn["nnz"]
     total_padded = (gu["padded_per_layer"] + dn["padded_per_layer"]) * n_layers
+    total_value = (out["gateup"]["value_plane_bytes"]
+                   + out["down"]["value_plane_bytes"])
+    total_index = (out["gateup"]["index_plane_bytes"]
+                   + out["down"]["index_plane_bytes"])
     out["total"] = {
         "nnz": int(total_nnz),
         "padded_slots": int(total_padded),
         "pad_frac": 1 - total_nnz / total_padded,
+        "value_plane_bytes": int(total_value),
+        "index_plane_bytes": int(total_index),
+        "bits_per_nnz": 8.0 * total_value / max(1, total_nnz),
+        # every decode token streams each layer's planes once: the
+        # weight-side bytes-moved-per-token the serve bench records
+        "bytes_per_token": int(total_value + total_index),
     }
     return out

@@ -40,7 +40,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["espim_spmv_pallas", "espim_spmv_batched_pallas"]
+__all__ = ["espim_spmv_pallas", "espim_spmv_batched_pallas",
+           "espim_spmv_batched_quant_pallas"]
 
 
 def _check_chunked(values: jnp.ndarray, cols: jnp.ndarray) -> None:
@@ -184,6 +185,149 @@ def _spmv_batched_kernel_looped(values_ref, cols_ref, x_ref, out_ref):
     @pl.when((k != 0) | (j != 0))
     def _acc():
         out_ref[...] = out_ref[...] + partial
+
+
+# --------------------------------------------------------------------------
+# Quantized value planes (DESIGN.md section 9)
+#
+# The paper stores narrow fixed-point cell values in DRAM; here the value
+# block a grid step DMAs is int8 codes (or nibble-packed int4 — two codes
+# per byte) instead of fp32, and dequantization is in-register: the gather
+# geometry (cols, grid, BlockSpecs) is IDENTICAL to the fp kernel — only
+# the value plane narrows, exactly the paper's value/index decoupling.
+# One scale per ``group_rows`` packed rows rides in as a tiny side input
+# whose block is (block_r // group_rows,) — it loads once per grid step
+# and multiplies the (RT, B) partial AFTER the reduce, so the per-cell
+# inner loop is integer-code * activation with no extra multiplies.
+# --------------------------------------------------------------------------
+def _row_scales(scales_ref, group_rows: int):
+    """(block_r // group_rows,) scale block -> per-row (block_r,) f32."""
+    s = scales_ref[...]
+    return jnp.broadcast_to(s[:, None], (s.shape[0], group_rows)).reshape(-1)
+
+
+def _quant_step(codes, cols_ref, scales_ref, x_ref, out_ref, group_rows):
+    """Shared quant decode step body: gather as the fp kernel, multiply-
+    reduce the f32 codes, dequantize the (RT, B) partial by the per-row-
+    group scale AFTER the reduce, init/accumulate across grid steps."""
+    k = pl.program_id(1)
+    j = pl.program_id(2)
+    cols = cols_ref[...]                                 # (RT, LC) local ids
+    x = x_ref[...]                                       # (CC, B) active slab
+    gathered = jnp.take(x, cols, axis=0).astype(jnp.float32)  # (RT, LC, B)
+    partial = jnp.sum(codes[..., None] * gathered, axis=1)    # (RT, B)
+    srow = _row_scales(scales_ref, group_rows)
+    partial = partial * srow[:, None]
+
+    @pl.when((k == 0) & (j == 0))
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when((k != 0) | (j != 0))
+    def _acc():
+        out_ref[...] = out_ref[...] + partial
+
+
+def _spmv_batched_quant_kernel(values_ref, cols_ref, scales_ref, x_ref,
+                               out_ref, *, group_rows):
+    """int8-code decode step: the value block is int8 codes."""
+    _quant_step(values_ref[...].astype(jnp.float32), cols_ref, scales_ref,
+                x_ref, out_ref, group_rows)
+
+
+def _spmv_batched_q4_kernel(values_ref, cols_ref, scales_ref, x_ref,
+                            out_ref, *, group_rows):
+    """Nibble-packed int4 decode step: the value block is uint8 with TWO
+    codes per byte (half the bytes of int8, a quarter of fp32); unpack
+    in-register — slot 2j is the low nibble of byte j (the same
+    ``nibble_unpack_ref`` helper the jnp lowering uses) — then proceed as
+    the int8 kernel."""
+    from repro.kernels.ref import nibble_unpack_ref
+    codes = nibble_unpack_ref(values_ref[...]).astype(jnp.float32)
+    _quant_step(codes, cols_ref, scales_ref, x_ref, out_ref, group_rows)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk_cols", "group_rows", "block_r", "block_l",
+                     "interpret"),
+)
+def espim_spmv_batched_quant_pallas(
+    values: jnp.ndarray,
+    cols: jnp.ndarray,
+    scales: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    chunk_cols: int,
+    group_rows: int,
+    block_r: int = 128,
+    block_l: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y_packed (R_pad, B) f32 = dequant(chunked-ELL codes) @ x (M, B).
+
+    ``values`` is the quantized value plane: int8 codes (R_pad, K, Lc), or
+    nibble-packed uint8 (R_pad, K, ceil(Lc/2)) — the storage family is
+    inferred from the width mismatch vs ``cols``.  ``scales`` is one f32
+    per ``group_rows`` packed rows ((R_pad // group_rows,)); if the row
+    block cannot cover whole groups the scales are pre-expanded per-row.
+    """
+    _check_chunked(values, cols)
+    r_pad, n_chunks, lc = cols.shape
+    packed = values.shape[-1] != lc
+    if packed:
+        if lc % 2:                     # odd width: one pad col slot (id 0,
+            cols = jnp.pad(cols, ((0, 0), (0, 0), (0, 1)))  # code 0)
+            lc += 1
+        if 2 * values.shape[-1] != lc:
+            raise ValueError(
+                f"nibble-packed values width {values.shape[-1]} does not "
+                f"match cols width {cols.shape[-1]}")
+    if r_pad % block_r:
+        block_r = math.gcd(r_pad, block_r)
+        if block_r < 8:
+            raise ValueError(
+                f"R_pad={r_pad} has no sublane-aligned row block "
+                f"(gcd with requested block_r gives {block_r})")
+    if r_pad % group_rows or block_r % group_rows:
+        # scale groups must tile the row block; expand to per-row scales
+        scales = jnp.repeat(scales, group_rows)[:r_pad]
+        group_rows = 1
+    block_l = min(block_l, max(8, lc))
+    if packed:
+        block_l += block_l % 2         # nibble pairs never straddle blocks
+    pad_l = (-lc) % block_l
+    if pad_l:
+        cols = jnp.pad(cols, ((0, 0), (0, 0), (0, pad_l)))
+        pad_v = pad_l // 2 if packed else pad_l
+        values = jnp.pad(values, ((0, 0), (0, 0), (0, pad_v)))
+        lc += pad_l
+    m_pad = n_chunks * chunk_cols - x.shape[0]
+    if m_pad < 0:
+        raise ValueError(
+            f"x has {x.shape[0]} rows > n_chunks*chunk_cols = "
+            f"{n_chunks * chunk_cols}")
+    if m_pad:
+        x = jnp.pad(x, ((0, m_pad), (0, 0)))
+    grid = (r_pad // block_r, n_chunks, lc // block_l)
+    b = x.shape[1]
+    block_v = block_l // 2 if packed else block_l
+    kernel = functools.partial(
+        _spmv_batched_q4_kernel if packed else _spmv_batched_quant_kernel,
+        group_rows=group_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, None, block_v), lambda i, k, j: (i, k, j)),
+            pl.BlockSpec((block_r, None, block_l), lambda i, k, j: (i, k, j)),
+            pl.BlockSpec((block_r // group_rows,), lambda i, k, j: (i,)),
+            pl.BlockSpec((chunk_cols, b), lambda i, k, j: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, b), lambda i, k, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, b), jnp.float32),
+        interpret=interpret,
+    )(values, cols, scales, x)
 
 
 @functools.partial(

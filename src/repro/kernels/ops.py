@@ -25,15 +25,19 @@ import numpy as np
 from repro.core.sparse_format import ELLChunkedPack, ELLPack, chunk_pack
 from repro.kernels import ref as _ref
 from repro.kernels.dense_mv import dense_mv_pallas
-from repro.kernels.espim_spmv import espim_spmv_batched_pallas, espim_spmv_pallas
+from repro.kernels.espim_spmv import (espim_spmv_batched_pallas,
+                                      espim_spmv_batched_quant_pallas,
+                                      espim_spmv_pallas)
 
 __all__ = [
     "on_tpu",
     "espim_spmv",
     "espim_spmv_batched",
+    "espim_spmv_batched_quant",
     "dense_mv",
     "espim_matvec",
     "EspimWeights",
+    "QuantEspimWeights",
     "pack_to_device",
     "provenance",
     "DEFAULT_CHUNK_COLS",
@@ -76,12 +80,14 @@ def _interpret() -> bool:
     return not on_tpu()
 
 
-def provenance(impl: str | None = None) -> dict:
+def provenance(impl: str | None = None, quant: str | None = None) -> dict:
     """Where a kernel call would run right now — recorded by the benches
-    so BENCH_*.json results carry their backend/impl context."""
+    so BENCH_*.json results carry their backend/impl context.  ``quant``
+    names the value-plane encoding the caller is timing (none/int8/int4)."""
     return {
         "backend": jax.default_backend(),
         "impl": _resolve(impl),
+        "quant": quant or "none",
         "pallas_interpret": _interpret(),
         "env": {ENV_IMPL: os.environ.get(ENV_IMPL) or None,
                 ENV_INTERPRET: os.environ.get(ENV_INTERPRET) or None},
@@ -139,6 +145,53 @@ def espim_spmv_batched(values, cols, x, *, chunk_cols: int | None = None,
                           espim_spmv_batched_pallas)
 
 
+def espim_spmv_batched_quant(values, cols, scales, x, *,
+                             chunk_cols: int | None = None,
+                             group_rows: int = 1,
+                             impl: str | None = None) -> jnp.ndarray:
+    """Quantized batched ELL sparse MV: int8 codes (or nibble-packed uint8
+    — inferred from the width mismatch vs ``cols``) + one f32 scale per
+    ``group_rows`` packed rows; x (M, B) -> (R_pad, B) f32.
+
+    ``scales=None`` returns the UNSCALED code-domain accumulator — the
+    fused serving path folds its per-row scales into one precomputed
+    multiply per bucket instead of one repeat+multiply per launch.
+
+    Same dispatch policy as the fp ops (``ESPIM_IMPL`` pin wins); the
+    plain (R_pad, L) layout lowers through the reference as a one-chunk
+    plane.
+    """
+    impl = _resolve(impl)
+    if scales is None and impl != "ref":
+        # unit scales through the kernel's own scaling path (exact)
+        scales = jnp.ones(1, jnp.float32)
+        group_rows = cols.shape[0]
+    if cols.ndim == 2:
+        if impl == "pallas":
+            raise ValueError(
+                "the Pallas kernels consume the column-chunked layout; "
+                "re-pack with pack_ell_chunked (plain ELL is ref-only)")
+        return _ref.espim_spmv_batched_chunked_quant_ref(
+            values[:, None, :], cols[:, None, :], scales, x,
+            x.shape[0], group_rows)
+    if chunk_cols is None:
+        raise ValueError(
+            "chunk_cols is required for the chunked (R_pad, K, Lc) layout; "
+            f"got cols of shape {cols.shape}")
+    cc = int(chunk_cols)
+    n_chunks = cols.shape[1]
+    if n_chunks > 1 and n_chunks * cc - x.shape[0] >= cc:
+        raise ValueError(
+            f"chunk_cols={cc} inconsistent with pack: {n_chunks} chunks x "
+            f"{cc} cols span past x of length {x.shape[0]}")
+    if impl == "ref":
+        return _ref.espim_spmv_batched_chunked_quant_ref(
+            values, cols, scales, x, cc, group_rows)
+    return espim_spmv_batched_quant_pallas(
+        values, cols, scales, x, chunk_cols=cc, group_rows=group_rows,
+        interpret=_interpret())
+
+
 def dense_mv(w, x, *, impl: str | None = None) -> jnp.ndarray:
     """Dense MV (Newton-analogue path)."""
     if _resolve(impl) == "ref":
@@ -178,34 +231,98 @@ jax.tree_util.register_pytree_node(
 )
 
 
+class QuantEspimWeights:
+    """Device-resident column-chunked pack with a quantized value plane
+    (repro.quant): int8 codes or nibble-packed uint8 + per-row-group
+    scales; indices and perm identical to ``EspimWeights``."""
+
+    def __init__(self, values, cols, perm, scales, n_rows: int, n_cols: int,
+                 chunk_cols: int, group_rows: int, bits: int):
+        self.values = values          # (R_pad, K, Lc) i8 | (R_pad, K, Lc/2) u8
+        self.cols = cols              # (R_pad, K, Lc) int32, chunk-local
+        self.perm = perm              # (R_pad,) int32, -1 = pad row
+        self.scales = scales          # (R_pad // group_rows,) f32
+        self.n_rows = n_rows
+        self.n_cols = n_cols
+        self.chunk_cols = chunk_cols
+        self.group_rows = group_rows
+        self.bits = bits
+
+    def tree_flatten(self):
+        return ((self.values, self.cols, self.perm, self.scales),
+                (self.n_rows, self.n_cols, self.chunk_cols, self.group_rows,
+                 self.bits))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+jax.tree_util.register_pytree_node(
+    QuantEspimWeights,
+    lambda w: w.tree_flatten(),
+    lambda aux, ch: QuantEspimWeights.tree_unflatten(aux, ch),
+)
+
+
 def pack_to_device(pack: ELLPack | ELLChunkedPack, dtype=jnp.float32,
-                   chunk_cols: int = DEFAULT_CHUNK_COLS) -> EspimWeights:
+                   chunk_cols: int = DEFAULT_CHUNK_COLS,
+                   quant=None) -> EspimWeights | QuantEspimWeights:
     """Move an offline pack onto the device arrays the kernels consume.
 
     A plain ELLPack is run through the SDDS chunk pass first (with
-    ``chunk_cols``); an ELLChunkedPack is uploaded as-is.
+    ``chunk_cols``); an ELLChunkedPack is uploaded as-is.  ``quant``
+    ("int8" | "int4" | a ``repro.quant.QuantSpec``) quantizes the value
+    plane on the way up (or reuses an already-attached ``pack.qplane``)
+    and returns ``QuantEspimWeights``.
     """
     if isinstance(pack, ELLPack):
         pack = chunk_pack(pack, chunk_cols)
-    return EspimWeights(
-        values=jnp.asarray(pack.values, dtype=dtype),
+    if quant is None:
+        return EspimWeights(
+            values=jnp.asarray(pack.values, dtype=dtype),
+            cols=jnp.asarray(pack.cols, dtype=jnp.int32),
+            perm=jnp.asarray(np.asarray(pack.perm), dtype=jnp.int32),
+            n_rows=pack.n_rows,
+            n_cols=pack.n_cols,
+            chunk_cols=pack.chunk_cols,
+        )
+    from repro.quant import QuantSpec, default_spec, quantize_pack
+    spec = quant if isinstance(quant, QuantSpec) else default_spec(quant)
+    plane = pack.qplane
+    # reuse the attached plane only when it was produced by this exact
+    # spec — a same-bits plane with different calib/group/err_bound would
+    # silently serve the wrong encoding
+    if plane is None or plane.spec != spec:
+        plane = quantize_pack(pack, spec)
+    return QuantEspimWeights(
+        values=jnp.asarray(plane.device_codes()),
         cols=jnp.asarray(pack.cols, dtype=jnp.int32),
         perm=jnp.asarray(np.asarray(pack.perm), dtype=jnp.int32),
+        scales=jnp.asarray(plane.scales),
         n_rows=pack.n_rows,
         n_cols=pack.n_cols,
         chunk_cols=pack.chunk_cols,
+        group_rows=plane.group_rows,
+        bits=plane.bits,
     )
 
 
-def espim_matvec(w: EspimWeights, x: jnp.ndarray, *, impl: str | None = None
-                 ) -> jnp.ndarray:
+def espim_matvec(w: EspimWeights | QuantEspimWeights, x: jnp.ndarray, *,
+                 impl: str | None = None) -> jnp.ndarray:
     """y (n_rows,) or (n_rows, B) = W @ x with packed-row unscatter."""
-    if x.ndim == 1:
+    if x.ndim not in (1, 2):
+        raise ValueError(f"x must be 1-D or 2-D, got {x.shape}")
+    if isinstance(w, QuantEspimWeights):
+        xb = x[:, None] if x.ndim == 1 else x
+        yp = espim_spmv_batched_quant(w.values, w.cols, w.scales, xb,
+                                      chunk_cols=w.chunk_cols,
+                                      group_rows=w.group_rows, impl=impl)
+        yp = yp[:, 0] if x.ndim == 1 else yp
+    elif x.ndim == 1:
         yp = espim_spmv(w.values, w.cols, x, chunk_cols=w.chunk_cols,
                         impl=impl)
-    elif x.ndim == 2:
+    else:
         yp = espim_spmv_batched(w.values, w.cols, x,
                                 chunk_cols=w.chunk_cols, impl=impl)
-    else:
-        raise ValueError(f"x must be 1-D or 2-D, got {x.shape}")
     return _ref.scatter_rows_ref(yp, w.perm, w.n_rows)

@@ -24,6 +24,9 @@ __all__ = [
     "espim_spmv_batched_ref",
     "espim_spmv_chunked_ref",
     "espim_spmv_batched_chunked_ref",
+    "espim_spmv_batched_chunked_quant_ref",
+    "nibble_unpack_ref",
+    "dequantize_plane_ref",
     "dense_mv_ref",
     "scatter_rows_ref",
 ]
@@ -96,6 +99,75 @@ def espim_spmv_batched_chunked_ref(values: jnp.ndarray, cols: jnp.ndarray,
         acc = acc + jnp.einsum("rl,rlb->rb", values[:, i].astype(jnp.float32),
                                g.astype(jnp.float32))
     return acc
+
+
+def nibble_unpack_ref(packed: jnp.ndarray) -> jnp.ndarray:
+    """uint8 (..., P) -> int4 codes in an int8 container (..., 2P); slot 2j
+    is the low nibble of byte j (``repro.quant.qpack.nibble_pack``).
+    Sign extension is two arithmetic shifts on the int8 bit pattern — no
+    compares, no widening."""
+    b = jax.lax.bitcast_convert_type(packed, jnp.int8)
+    lo = jnp.right_shift(jnp.left_shift(b, 4), 4)      # low nibble, signed
+    hi = jnp.right_shift(b, 4)                         # high nibble, signed
+    inter = jnp.stack([lo, hi], axis=-1)               # (..., P, 2)
+    return inter.reshape(*packed.shape[:-1], 2 * packed.shape[-1])
+
+
+def dequantize_plane_ref(codes: jnp.ndarray, scales: jnp.ndarray,
+                         group_rows: int) -> jnp.ndarray:
+    """fp32 value plane from int8 codes (..., R, K, Lc) + per-row-group
+    scales (..., R // group_rows) — the quant-kernel oracle."""
+    s = jnp.repeat(scales, group_rows, axis=-1)
+    return codes.astype(jnp.float32) * s[..., :, None, None]
+
+
+# Formulation switch for the quantized lowering: a materialized dot
+# (einsum) forces XLA-CPU to materialize the f32-converted codes plane,
+# erasing the narrow plane's byte win; the fused multiply-reduce (the
+# Pallas quant kernel's own schedule) keeps the int8 -> f32 convert inside
+# the reduction fusion, so the decode-regime read traffic really is 1/4.
+# The dot still wins once the gathered (Lc, B) block is large, so the
+# lowering switches on the static per-chunk block size.
+MULRED_MAX_BLOCK = 256  # Lc * B at or under this -> fused multiply-reduce
+
+
+def espim_spmv_batched_chunked_quant_ref(codes: jnp.ndarray,
+                                         cols: jnp.ndarray,
+                                         scales: jnp.ndarray,
+                                         x: jnp.ndarray, chunk_cols: int,
+                                         group_rows: int) -> jnp.ndarray:
+    """Quantized fused batched chunked-ELL MV: x (M, B) -> (R_pad, B) f32.
+
+    Same per-chunk gather-accumulate schedule as the fp lowering, run on
+    the int8 codes (nibble-packed uint8 planes are unpacked first); the
+    per-row-group scale multiplies the accumulated (R_pad, B) output
+    ONCE.  Decode-shaped blocks (``Lc * B <= MULRED_MAX_BLOCK``) use the
+    fused multiply-reduce — the Pallas quant kernel's schedule, and on
+    those shapes bit-identical to it; larger blocks use the same einsum
+    as the fp lowering, with which the unit-scale path is bit-identical
+    (the parity contracts ``tests/test_quant.py`` asserts).
+    """
+    r_pad, k, _lc = codes.shape
+    if codes.shape[-1] != cols.shape[-1]:              # nibble-packed plane
+        codes = nibble_unpack_ref(codes)[..., :cols.shape[-1]]
+    b = x.shape[1]
+    mulred = cols.shape[-1] * b <= MULRED_MAX_BLOCK
+    xp = _pad_x_to_chunks(x, k, chunk_cols)
+    acc = jnp.zeros((r_pad, b), jnp.float32)
+    for i in range(k):
+        xk = jax.lax.slice_in_dim(xp, i * chunk_cols, (i + 1) * chunk_cols,
+                                  axis=0)
+        g = jnp.take(xk, cols[:, i], axis=0)           # (R_pad, Lc, B)
+        ci = codes[:, i].astype(jnp.float32)
+        if mulred:
+            acc = acc + jnp.sum(ci[:, :, None] * g.astype(jnp.float32),
+                                axis=1)
+        else:
+            acc = acc + jnp.einsum("rl,rlb->rb", ci, g.astype(jnp.float32))
+    if scales is None:                                 # caller owns scaling
+        return acc
+    srow = jnp.repeat(scales, group_rows, axis=-1)
+    return acc * srow[:, None]
 
 
 def dense_mv_ref(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:

@@ -62,7 +62,10 @@ def serve_step_sparse_fn(cfg: ModelConfig, params, sparse: dict,
     """ESPIM-format decode step: one scanned layer stack whose MLPs run
     from the width-bucketed packs through the fused gate+up SpMV, the
     packed-order product, and the perm-folded down projection (``sparse``
-    from ``sparsify_mlps`` — DESIGN.md section 8).
+    from ``sparsify_mlps`` — DESIGN.md section 8).  When the packs were
+    built with ``quant="int8"|"int4"`` the same scan consumes the
+    quantized value planes (codes + per-row-group scale leaves) through
+    the quantized kernels — section 9.
 
     Same contract as ``serve_step_fn``: (next_tokens, logits, new_cache).
     """

@@ -1,0 +1,337 @@
+"""The quantized value-plane subsystem (DESIGN.md section 9): round-trip
+error bounds per scale group, unit-scale bit-exactness of the quantized
+SpMV vs the fp SpMV, kernel-variant parity (int8 container + nibble-packed
+int4, ref + Pallas), serialization, the int8 fallback rule, bytes/bits_per_
+nnz accounting, and end-to-end quantized decode staying cosine >= 0.99 on
+the tiny LM."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: fall back to a seeded random sweep
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs.registry import get_config
+from repro.core.espim_linear import ESPIMLinear
+from repro.core.pruning import magnitude_prune
+from repro.core.sparse_format import pack_ell, pack_ell_chunked
+from repro.core.sparse_model import (decode_step_sparse, sparse_stats,
+                                     sparsify_mlps)
+from repro.kernels import ops, ref
+from repro.models import factory
+from repro.quant import QuantSpec, default_spec, quantize_pack
+from repro.quant.calibrate import QMAX, group_rel_error
+from repro.quant.qpack import (QuantizedValuePlane, dequantize_plane,
+                               nibble_pack, nibble_unpack)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand_pack(rng, r, c, s, chunk_cols=64, row_tile=32):
+    w = magnitude_prune(rng.standard_normal((r, c)).astype(np.float32), s)
+    return w, pack_ell_chunked(w, row_tile=row_tile, chunk_cols=chunk_cols)
+
+
+# --------------------------------------------------------------------------
+# 1) round-trip property: dequant(quant(V)) error within the per-group bound
+# --------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(r=st.integers(8, 150), c=st.integers(4, 200), s=st.floats(0.0, 0.95),
+       bits=st.sampled_from([8, 4]),
+       calib=st.sampled_from(["absmax", "percentile"]),
+       seed=st.integers(0, 999))
+def test_roundtrip_error_within_group_bound(r, c, s, bits, calib, seed):
+    rng = np.random.default_rng(seed)
+    w, pack = _rand_pack(rng, r, c, s, row_tile=8)
+    spec = QuantSpec(bits=bits, calib=calib, group_rows=32)
+    plane = quantize_pack(pack, spec)
+    deq = plane.dequantize()
+    g = plane.group_rows
+    # per-group checks over valid cells
+    err = np.abs(np.where(pack.valid, deq - pack.values, 0.0))
+    gerr = err.reshape(-1, g * err.shape[1] * err.shape[2]).max(axis=1)
+    rel = group_rel_error(pack.values, deq, pack.valid, g).reshape(-1)
+    gb = plane.group_bits.reshape(-1)
+    sc = plane.scales.reshape(-1)
+    for i in range(plane.n_groups):
+        if gb[i] == 8 and (bits == 8 and calib == "percentile"):
+            continue          # clipped int8: no elementwise LSB promise
+        if gb[i] == 8:
+            # absmax int8 (direct or fallback): half-LSB elementwise bound
+            assert gerr[i] <= sc[i] / 2 + 1e-7, (i, gerr[i], sc[i])
+        else:
+            # surviving int4 group: the fallback rule's relative bound
+            assert rel[i] <= spec.err_bound + 1e-7, (i, rel[i])
+    # zeros quantize to zeros: the sparsity pattern never grows
+    assert not np.any(deq[~pack.valid])
+
+
+def test_nibble_pack_roundtrip():
+    rng = np.random.default_rng(3)
+    codes = rng.integers(-8, 8, size=(6, 2, 14), dtype=np.int8)
+    assert (nibble_unpack(nibble_pack(codes)) == codes).all()
+    got = np.asarray(ref.nibble_unpack_ref(jnp.asarray(nibble_pack(codes))))
+    assert (got == codes).all()
+
+
+# --------------------------------------------------------------------------
+# 2) unit scales: the quantized SpMV is bit-exact vs the fp SpMV
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("impl,c,s,b,cc", [
+    # pallas: fp and quant kernels share the multiply-reduce schedule —
+    # bit-exact at any shape
+    ("pallas", 150, 0.8, 3, 48),
+    # ref, dot regime (Lc * B > MULRED_MAX_BLOCK): quant takes the same
+    # einsum as the fp lowering
+    ("ref", 300, 0.4, 4, 300),
+    # ref, fused multiply-reduce regime: compare against the Pallas fp
+    # kernel, whose schedule the mulred lowering mirrors exactly
+    ("ref-mulred", 150, 0.8, 3, 48),
+])
+def test_unit_scale_spmv_bit_exact(impl, c, s, b, cc):
+    rng = np.random.default_rng(5)
+    w = magnitude_prune(
+        rng.integers(-100, 101, size=(64, c)).astype(np.float32), s)
+    pack = pack_ell_chunked(w, row_tile=32, chunk_cols=cc)
+    codes = pack.values.astype(np.int8)          # integer values ARE codes
+    assert (codes.astype(np.float32) == pack.values).all()
+    scales = np.ones(pack.r_pad // 32, np.float32)
+    plane = QuantizedValuePlane(q=codes, scales=scales,
+                                group_bits=np.full_like(scales, 8, np.uint8),
+                                group_rows=32, bits=8, nnz=pack.stats.nnz)
+    x = jnp.asarray(rng.standard_normal((c, b)), jnp.float32)
+    vals = jnp.asarray(pack.values)
+    cols = jnp.asarray(pack.cols, jnp.int32)
+    if impl == "ref-mulred":
+        assert cols.shape[-1] * b <= ref.MULRED_MAX_BLOCK
+        want = ops.espim_spmv_batched(vals, cols, x,
+                                      chunk_cols=pack.chunk_cols,
+                                      impl="pallas")
+        got = ops.espim_spmv_batched_quant(
+            jnp.asarray(plane.q), cols, jnp.asarray(scales), x,
+            chunk_cols=pack.chunk_cols, group_rows=32, impl="ref")
+    else:
+        if impl == "ref":
+            assert cols.shape[-1] * b > ref.MULRED_MAX_BLOCK
+        want = ops.espim_spmv_batched(vals, cols, x,
+                                      chunk_cols=pack.chunk_cols, impl=impl)
+        got = ops.espim_spmv_batched_quant(
+            jnp.asarray(plane.q), cols, jnp.asarray(scales), x,
+            chunk_cols=pack.chunk_cols, group_rows=32, impl=impl)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# 3) kernel variants: Pallas int8 + nibble-packed int4 vs ref vs oracle
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("mode,r,c,cc,rt", [
+    ("int8", 128, 300, 64, 128),
+    ("int4", 128, 300, 64, 128),
+    ("int8", 96, 200, 512, 32),
+    ("int4", 256, 137, 48, 64),      # odd Lc: nibble pad slot
+])
+def test_quant_kernel_parity(mode, r, c, cc, rt):
+    rng = np.random.default_rng(11)
+    w, pack = _rand_pack(rng, r, c, 0.88, chunk_cols=cc, row_tile=rt)
+    dev = ops.pack_to_device(pack, quant=mode)
+    if mode == "int4":
+        assert pack.qplane.storage == "nib4"
+        assert dev.values.dtype == jnp.uint8
+        assert 2 * dev.values.shape[-1] >= dev.cols.shape[-1]
+    x = jnp.asarray(rng.standard_normal((c, 5)), jnp.float32)
+    # oracle: dequantized plane through the fp reference
+    oracle = ops.espim_spmv_batched(
+        jnp.asarray(pack.qplane.dequantize()),
+        jnp.asarray(pack.cols, jnp.int32), x,
+        chunk_cols=pack.chunk_cols, impl="ref")
+    for impl in ("ref", "pallas"):
+        got = ops.espim_spmv_batched_quant(
+            dev.values, dev.cols, dev.scales, x, chunk_cols=dev.chunk_cols,
+            group_rows=dev.group_rows, impl=impl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_quant_plain_ell_ref_only():
+    rng = np.random.default_rng(13)
+    w = magnitude_prune(rng.standard_normal((32, 64)).astype(np.float32),
+                        0.8)
+    pack = pack_ell(w, row_tile=8)
+    plane = quantize_pack(pack, QuantSpec(bits=8, group_rows=8))
+    x = jnp.asarray(rng.standard_normal((64, 2)), jnp.float32)
+    got = ops.espim_spmv_batched_quant(
+        jnp.asarray(plane.q[:, 0]), jnp.asarray(pack.cols, jnp.int32),
+        jnp.asarray(plane.scales), x, group_rows=plane.group_rows,
+        impl="ref")
+    want = ref.espim_spmv_batched_ref(
+        jnp.asarray(plane.dequantize()[:, 0]),
+        jnp.asarray(pack.cols, jnp.int32), x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="column-chunked"):
+        ops.espim_spmv_batched_quant(
+            jnp.asarray(plane.q[:, 0]), jnp.asarray(pack.cols, jnp.int32),
+            jnp.asarray(plane.scales), x, group_rows=plane.group_rows,
+            impl="pallas")
+
+
+def test_env_impl_pin_covers_quant(monkeypatch):
+    monkeypatch.setenv(ops.ENV_IMPL, "ref")
+    rng = np.random.default_rng(17)
+    w, pack = _rand_pack(rng, 32, 64, 0.8, chunk_cols=32, row_tile=8)
+    dev = ops.pack_to_device(pack, quant="int8")
+    x = jnp.asarray(rng.standard_normal((64, 2)), jnp.float32)
+    # impl="pallas" must be overridden by the env pin (no pallas trace)
+    y = ops.espim_spmv_batched_quant(
+        dev.values, dev.cols, dev.scales, x, chunk_cols=dev.chunk_cols,
+        group_rows=dev.group_rows, impl="pallas")
+    assert y.shape == (pack.r_pad, 2)
+
+
+# --------------------------------------------------------------------------
+# 4) serialization + fallback rule + byte accounting
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["int8", "int4"])
+def test_serialization_roundtrip(mode):
+    rng = np.random.default_rng(19)
+    # heavy-tailed values so int4 mixes surviving and fallback groups
+    w = magnitude_prune(
+        (rng.standard_normal((96, 120)) ** 3).astype(np.float32), 0.7)
+    pack = pack_ell_chunked(w, row_tile=32, chunk_cols=64)
+    plane = quantize_pack(pack, default_spec(mode))
+    back = QuantizedValuePlane.from_bytes(plane.to_bytes())
+    np.testing.assert_array_equal(back.q, plane.q)
+    np.testing.assert_array_equal(back.scales, plane.scales)
+    np.testing.assert_array_equal(back.group_bits, plane.group_bits)
+    assert back.group_rows == plane.group_rows
+    assert back.nnz == plane.nnz
+    np.testing.assert_array_equal(back.dequantize(), plane.dequantize())
+
+
+def test_int8_fallback_rule():
+    rng = np.random.default_rng(23)
+    w, pack = _rand_pack(rng, 128, 160, 0.6, chunk_cols=64, row_tile=32)
+    # a tight bound forces every group to int8; a loose one keeps int4
+    tight = quantize_pack(pack, QuantSpec(bits=4, err_bound=1e-6),
+                          attach=False)
+    loose = quantize_pack(pack, QuantSpec(bits=4, err_bound=10.0),
+                          attach=False)
+    assert tight.n_fallback_groups == tight.n_groups
+    assert tight.storage == "i8"
+    assert loose.n_fallback_groups == 0
+    assert loose.storage == "nib4" and loose.uniform_int4
+    # fallback widens the codes and the bytes with it
+    assert np.abs(tight.q).max() > QMAX[4]
+    assert np.abs(loose.q).max() <= QMAX[4]
+    assert tight.value_bytes > loose.value_bytes
+    assert loose.bits_per_nnz < tight.bits_per_nnz
+    # and the fallback groups reconstruct better than the int4 ones would
+    err_t = np.abs(tight.dequantize() - pack.values).max()
+    err_l = np.abs(loose.dequantize() - pack.values).max()
+    assert err_t < err_l
+
+
+def test_pack_stats_byte_planes():
+    rng = np.random.default_rng(29)
+    w, pack = _rand_pack(rng, 64, 256, 0.85, chunk_cols=64, row_tile=32)
+    fp_vb = pack.stats.value_plane_bytes
+    fp_bits = pack.stats.bits_per_nnz
+    assert fp_vb == 4 * pack.stats.padded_slots
+    assert pack.stats.index_plane_bytes == fp_vb
+    assert fp_bits >= 32.0                   # fp32 + padding overhead
+    quantize_pack(pack, default_spec("int8"))  # attaches + rewrites stats
+    q_vb = pack.stats.value_plane_bytes
+    assert q_vb < fp_vb / 3                  # ~4x down, modulo scale meta
+    assert pack.stats.index_plane_bytes == fp_vb  # indices untouched
+    assert pack.stats.bits_per_nnz < fp_bits / 3
+
+
+# --------------------------------------------------------------------------
+# 5) the serving stack: stats fields, ESPIMLinear, e2e cosine
+# --------------------------------------------------------------------------
+def _setup(quant=None, sparsity=0.9):
+    cfg = get_config("llama7b-espim", reduced=True)
+    params = factory.init_params(cfg, KEY)
+    sparse = sparsify_mlps(cfg, params, sparsity, row_tile=32, quant=quant)
+    return cfg, params, sparse
+
+
+def test_sparse_stats_reports_byte_planes():
+    cfg, params, sp_fp = _setup()
+    cfg, params, sp_q = _setup(quant="int8")
+    st_fp, st_q = sparse_stats(sp_fp), sparse_stats(sp_q)
+    assert st_fp["quant"] == "none" and st_q["quant"] == "int8"
+    for proj in ("gateup", "down", "w_gate", "w_up", "w_down", "total"):
+        for k in ("value_plane_bytes", "index_plane_bytes", "bits_per_nnz"):
+            assert k in st_fp[proj] and k in st_q[proj], (proj, k)
+        # quant shrinks only the value plane
+        assert st_q[proj]["value_plane_bytes"] < st_fp[proj][
+            "value_plane_bytes"] / 3
+        assert st_q[proj]["index_plane_bytes"] == st_fp[proj][
+            "index_plane_bytes"]
+    for proj in ("gateup", "down"):
+        per_layer = st_q[proj]["value_plane_bytes_per_layer"]
+        assert len(per_layer) == cfg.n_layers
+        assert sum(per_layer) == st_q[proj]["value_plane_bytes"]
+    assert st_q["total"]["bytes_per_token"] < st_fp["total"]["bytes_per_token"]
+
+
+def test_espim_linear_quant():
+    rng = np.random.default_rng(31)
+    w = rng.standard_normal((96, 200)).astype(np.float32)
+    x = jnp.asarray(rng.standard_normal(200), jnp.float32)
+    want = magnitude_prune(w, 0.9) @ np.asarray(x)
+    for mode in ("int8", "int4"):
+        lin = ESPIMLinear.from_dense(w, prune_sparsity=0.9, row_tile=32,
+                                     quant=mode)
+        assert lin.sparse
+        assert isinstance(lin.weights, ops.QuantEspimWeights)
+        y = np.asarray(lin(x, impl="ref"))
+        rel = np.abs(y - want).max() / np.abs(want).max()
+        assert rel < (0.02 if mode == "int8" else 0.2), (mode, rel)
+
+
+@pytest.mark.parametrize("mode,min_cos", [("int8", 0.999), ("int4", 0.99)])
+def test_e2e_quantized_decode_cosine(mode, min_cos):
+    """End-to-end: quantized sparse decode logits vs the fp sparse decode
+    on the tiny LM stay cosine >= 0.99 (int8 holds >= 0.999)."""
+    cfg, params, sp_fp = _setup()
+    _, _, sp_q = _setup(quant=mode)
+    B, S = 2, 4
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    outs = {}
+    for name, sp in (("fp", sp_fp), ("q", sp_q)):
+        cache = factory.init_cache(cfg, B, S + 2)
+        dec = jax.jit(lambda p, c, b, _sp=sp: decode_step_sparse(
+            cfg, p, _sp, c, b))
+        lgs = []
+        for i in range(S):
+            lg, cache = dec(params, cache, {"tokens": toks[:, i:i + 1]})
+            lgs.append(lg)
+        outs[name] = np.asarray(jnp.concatenate(lgs, axis=1)).ravel()
+    a, b = outs["q"], outs["fp"]
+    cos = float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-12))
+    assert cos >= min_cos, (mode, cos)
+
+
+def test_quantized_decode_matches_dequantized_dense():
+    """The fused quantized MLP path must equal dense decode over the
+    *dequantized* copies sparsify_mlps exports — same effective weights on
+    both datapaths (the section 9 analogue of the PR 3 parity contract)."""
+    cfg, params, sparse = _setup(quant="int8")
+    pruned = jax.tree.map(lambda x: x, params)
+    for name in ("w_gate", "w_up", "w_down"):
+        pruned["layers"]["mlp"][name] = sparse[f"{name}_pruned"]
+    toks = jax.random.randint(KEY, (2, 1), 0, cfg.vocab_size)
+    cache_d = factory.init_cache(cfg, 2, 4)
+    cache_s = factory.init_cache(cfg, 2, 4)
+    lg_d, _ = factory.decode_step(cfg, pruned, cache_d, {"tokens": toks})
+    lg_s, _ = decode_step_sparse(cfg, params, sparse, cache_s,
+                                 {"tokens": toks})
+    err = float(jnp.abs(lg_d - lg_s).max() / jnp.abs(lg_d).max())
+    assert err < 5e-4, err

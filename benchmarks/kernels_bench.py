@@ -20,7 +20,9 @@ harness times the Pallas kernels natively — ``ESPIM_IMPL`` /
   pin traffic) next to the time.
 * ``--smoke``: a single fused gate+up+down decode layer on tiny shapes,
   asserted against the dense pruned MLP, in fp AND quantized (int8/int4)
-  form — the CI fail-fast microbench for both datapaths.
+  form, plus a whole-layer attention-sparse decode step (fused QKV + O
+  pack groups) asserted against dense decode over the pruned copies —
+  the CI fail-fast microbench for every packed datapath.
 
 Writes machine-readable ``BENCH_kernels.json`` in the working directory so
 the perf trajectory is tracked across PRs.
@@ -241,7 +243,10 @@ def _smoke(report: dict) -> None:
     the serving MLP datapath (gate+up fused SpMV -> product in packed
     order -> perm-folded down SpMV) vs the dense pruned MLP — in fp AND
     from the quantized value planes (int8 / int4 vs their dequantized
-    dense copies), so a quant-kernel regression fails CI in seconds."""
+    dense copies) — AND a whole-layer attention-sparse decode step
+    (fused QKV + O pack groups vs the same model with dense pruned
+    weights), so a kernel-, quant- or pack-group-level regression fails
+    CI in seconds."""
     from repro.configs.registry import get_config
     from repro.core import sparse_model as SM
     from repro.models import factory
@@ -290,6 +295,32 @@ def _smoke(report: dict) -> None:
             "bytes_per_token": st["total"]["bytes_per_token"],
         }
 
+    # whole-layer parity: EVERY per-token MV (q/k/v/o + gate/up/down)
+    # through the pack groups vs dense decode over the pruned copies
+    sparse_a = SM.sparsify_model(cfg, params, 0.9, projections="all")
+    pruned = SM.pruned_param_tree(params, sparse_a)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 1)), jnp.int32)
+    cache_d = factory.init_cache(cfg, 8, 4)
+    cache_s = factory.init_cache(cfg, 8, 4)
+    dec_d = jax.jit(lambda p, c, b: factory.decode_step(cfg, p, c, b))
+    dec_s = jax.jit(lambda p, c, b: SM.decode_step_sparse(cfg, p, sparse_a,
+                                                          c, b))
+    lg_d, _ = dec_d(pruned, cache_d, {"tokens": toks})
+    lg_s, _ = dec_s(params, cache_s, {"tokens": toks})
+    err_a = float(jnp.abs(lg_d - lg_s).max() / jnp.abs(lg_d).max())
+    assert err_a < 5e-4, (
+        f"attention-sparse decode step diverged from pruned dense: {err_a}")
+    st_a = SM.sparse_stats(sparse_a)
+    report["smoke_result"]["attn_sparse"] = {
+        "max_rel_err": err_a,
+        "sparse_step_us": round(_time(
+            lambda t: dec_s(params, cache_s, {"tokens": t})[0], toks), 1),
+        "dense_step_us": round(_time(
+            lambda t: dec_d(pruned, cache_d, {"tokens": t})[0], toks), 1),
+        "bytes_per_token": st_a["total"]["bytes_per_token"],
+        "groups": list(sparse_a["groups"]),
+    }
+
 
 def check_schema(report: dict, smoke: bool) -> None:
     assert report["schema"] == "espim-kernels-bench/v3"
@@ -303,6 +334,9 @@ def check_schema(report: dict, smoke: bool) -> None:
             q = s["quant"][mode]
             for k in ("fused_layer_us", "max_rel_err", "bits_per_nnz"):
                 assert k in q, f"smoke_result.quant.{mode}.{k} missing"
+        for k in ("max_rel_err", "sparse_step_us", "dense_step_us",
+                  "bytes_per_token", "groups"):
+            assert k in s["attn_sparse"], f"smoke_result.attn_sparse.{k}"
         return
     for e in report["batched_decode"]:
         for k in ("einsum_us", "prev_fused_us", "fused_us", "pad_frac",
@@ -380,12 +414,17 @@ if __name__ == "__main__":
     if args.smoke:
         s = doc["smoke_result"]
         q8, q4 = s["quant"]["int8"], s["quant"]["int4"]
+        a = s["attn_sparse"]
         print(f"smoke ok: fused layer {s['fused_layer_us']:.0f}us vs dense "
               f"{s['dense_layer_us']:.0f}us (err {s['max_rel_err']:.1e}); "
               f"int8 {q8['fused_layer_us']:.0f}us @ "
               f"{q8['bits_per_nnz']:.1f} bits/nnz, int4 "
               f"{q4['fused_layer_us']:.0f}us @ {q4['bits_per_nnz']:.1f} "
-              f"bits/nnz (parity asserted); wrote {SMOKE_JSON_PATH}")
+              f"bits/nnz; whole-layer attn-sparse step "
+              f"{a['sparse_step_us']:.0f}us vs dense "
+              f"{a['dense_step_us']:.0f}us (err {a['max_rel_err']:.1e}, "
+              f"groups {'/'.join(a['groups'])}) — all parity asserted; "
+              f"wrote {SMOKE_JSON_PATH}")
     else:
         print(f"wrote {JSON_PATH}: min fused-vs-einsum speedup at B>=8 = "
               f"{doc['summary']['min_speedup_at_B_ge_8']}, vs PR2 fused = "

@@ -2,7 +2,12 @@
 and emit BENCH_serve.json.
 
 Measures, for dense and ESPIM-sparse engines on the quickstart config
-(llama7b-espim, reduced), in TWO serving scenarios:
+(llama7b-espim, reduced), in TWO serving scenarios and along an
+``attn=dense|sparse`` dimension — ``sparse*`` rows pack only the MLPs
+(the pre-PR5 deployment, attention dense), ``sparse_attn*`` rows serve
+the WHOLE decoder layer (fused QKV + O groups, every per-token MV through
+the packed kernels) — so the bench answers both "does the format win"
+and "does covering attention win over covering the MLPs alone":
 
 * ``single_stream`` (slots=1) — the paper's own deployment: ESPIM is a
   memory-bound MV accelerator and decode at B=1 streams every weight
@@ -17,16 +22,19 @@ Measures, for dense and ESPIM-sparse engines on the quickstart config
   headline.
 
 Every sparse mode runs in three value-plane encodings — fp32, int8,
-nibble-packed int4 (section 9) — each row carrying the weight-side
-``bytes_per_token`` it streams (value + index planes).  Mode repeats are
-INTERLEAVED round-robin so shared-host drift hits every mode equally
-(sequential best-of runs measured the host, not the engine).
+nibble-packed int4 (section 9) — each row carrying the whole-model
+weight-side ``bytes_per_token`` it streams (packed value + index planes
+PLUS the dense attention bytes an MLP-only deployment still moves).
+Mode repeats are INTERLEAVED round-robin so shared-host drift hits every
+mode equally (sequential best-of runs measured the host, not the
+engine).
 
 Also measured: the chunked-prefill TTFT win (wall clock + jitted-call
 counts vs token replay) and paged-vs-contiguous bit-parity at
 temperature=0.  Loud warnings fire when the default sparse mode loses to
-dense single-stream, or when a quantized mode loses to the fp sparse path
-it exists to beat.
+dense single-stream, when a quantized mode loses to the fp sparse path
+it exists to beat, or when whole-layer sparse loses to MLP-only sparse
+(covering more projections should never cost throughput).
 
 Run:   PYTHONPATH=src:. python benchmarks/serve_bench.py [--smoke]
 Smoke: tiny traces + schema assertion (wired into scripts/ci.sh).
@@ -42,7 +50,7 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.core.sparse_model import sparse_stats, sparsify_mlps
+from repro.core.sparse_model import sparse_stats, sparsify_model
 from repro.kernels import ops
 from repro.models import factory
 from repro.serve.engine import Request, ServeEngine
@@ -50,6 +58,11 @@ from repro.serve.engine import Request, ServeEngine
 ARCH = "llama7b-espim"
 SPARSITY = 0.9
 QUANT_MODES = ("int8", "int4")
+# the attn dimension: "" = MLP-only packs (attention dense), "_attn" =
+# whole-layer packs (fused QKV + O groups)
+ATTN_MODES = (("", "mlp", "dense"), ("_attn", "all", "sparse"))
+SPARSE_MODES = tuple(f"sparse{a}{q}" for a, _, _ in ATTN_MODES
+                     for q in ("", "_int8", "_int4"))
 
 
 def make_trace(rng, n_requests, prompt_lens, out_lens, mean_gap_steps):
@@ -177,24 +190,34 @@ def check_schema(doc: dict) -> None:
     assert doc["paged_parity"] is True, "paged/contiguous tokens diverged"
     for scen_name in ("single_stream", "batched"):
         scen = doc["scenarios"][scen_name]
-        for mode in ("dense", "sparse", "sparse_int8", "sparse_int4"):
+        for mode in ("dense",) + SPARSE_MODES:
             m = scen["modes"][mode]
             for k in ("throughput_tok_s", "tokens", "requests", "ttft_s",
-                      "tpot_s", "queue_delay_s", "slot_occupancy"):
+                      "tpot_s", "queue_delay_s", "slot_occupancy", "attn"):
                 assert k in m, f"{scen_name}.{mode}.{k} missing"
             assert m["ttft_s"]["p50"] is not None
+            assert m["attn"] == ("sparse" if "_attn" in mode else "dense")
             if mode != "dense":
                 assert "bytes_per_token" in m and "bits_per_nnz" in m, mode
         # quantization must shrink the weight bytes a decode token streams
-        assert (scen["modes"]["sparse_int4"]["bytes_per_token"]
-                < scen["modes"]["sparse_int8"]["bytes_per_token"]
-                < scen["modes"]["sparse"]["bytes_per_token"])
+        for a in ("", "_attn"):
+            assert (scen["modes"][f"sparse{a}_int4"]["bytes_per_token"]
+                    < scen["modes"][f"sparse{a}_int8"]["bytes_per_token"]
+                    < scen["modes"][f"sparse{a}"]["bytes_per_token"])
+        # packing q/k/v/o must strictly shrink whole-model bytes/token vs
+        # leaving attention dense (the acceptance criterion of PR 5)
+        for q in ("", "_int8", "_int4"):
+            assert (scen["modes"][f"sparse_attn{q}"]["bytes_per_token"]
+                    < scen["modes"][f"sparse{q}"]["bytes_per_token"]), q
         assert scen["sparse_dense_ratio"] > 0
         assert scen["sparse_fp_dense_ratio"] > 0
         for mode in QUANT_MODES:
             assert scen["quant_vs_fp"][mode] > 0
+        for mode in ("fp",) + QUANT_MODES:
+            assert scen["attn_sparse_vs_mlp_only"][mode] > 0
     assert doc["modes"] is doc["scenarios"]["single_stream"]["modes"]
     assert "provenance" in doc and "quant" in doc["provenance"]
+    assert doc["provenance"]["attn"] == "sweep"
     assert doc["sparse_dense_ratio"] > 0
     t = doc["ttft_improvement"]
     for k in ("prompt_len", "chunk", "speedup", "call_reduction",
@@ -233,20 +256,28 @@ def main():
 
     sparses = {"dense": None}
     plane_stats = {}
-    for label, quant in (("sparse", None),
-                         *((f"sparse_{m}", m) for m in QUANT_MODES)):
-        sp = sparsify_mlps(cfg, params, SPARSITY, quant=quant)
-        sparses[label] = sp
-        plane_stats[label] = sparse_stats(sp)["total"]
+    for suffix, proj, attn in ATTN_MODES:
+        for qlabel, quant in (("", None),
+                              *((f"_{m}", m) for m in QUANT_MODES)):
+            label = f"sparse{suffix}{qlabel}"
+            sp = sparsify_model(cfg, params, SPARSITY, projections=proj,
+                                quant=quant)
+            sparses[label] = sp
+            plane_stats[label] = sparse_stats(sp)["total"]
 
     def run_scenario(tr, n_slots, repeats):
         res, toks = bench_many(cfg, params, tr, sparse_by_mode=sparses,
                                slots=n_slots, max_len=max_len,
                                block_size=block_size, chunk=chunk,
                                repeats=repeats)
+        res["dense"]["attn"] = "dense"
         for label, st in plane_stats.items():
             res[label]["quant"] = sparses[label]["quant"]
+            res[label]["attn"] = ("sparse" if sparses[label]["attn_sparse"]
+                                  else "dense")
             res[label]["bytes_per_token"] = st["bytes_per_token"]
+            res[label]["packed_bytes_per_token"] = st[
+                "packed_bytes_per_token"]
             res[label]["bits_per_nnz"] = round(st["bits_per_nnz"], 2)
         dense_tok = max(res["dense"]["throughput_tok_s"], 1e-9)
         fp_tok = max(res["sparse"]["throughput_tok_s"], 1e-9)
@@ -264,6 +295,13 @@ def main():
             "quant_vs_fp": {
                 m: res[f"sparse_{m}"]["throughput_tok_s"] / fp_tok
                 for m in QUANT_MODES},
+            # whole-layer (fused QKV + O) vs MLP-only, per encoding
+            "attn_sparse_vs_mlp_only": {
+                q or "fp": res[f"sparse_attn{f'_{q}' if q else ''}"]
+                ["throughput_tok_s"]
+                / max(res[f"sparse{f'_{q}' if q else ''}"]
+                      ["throughput_tok_s"], 1e-9)
+                for q in ("",) + QUANT_MODES},
         }
         return scen, toks
 
@@ -290,7 +328,8 @@ def main():
         "prefill_chunk": chunk,
         "n_requests": len(trace),
         "sparsity": SPARSITY,
-        "provenance": ops.provenance(impl="ref", quant=cfg.espim_quant),
+        "provenance": ops.provenance(impl="ref", quant=cfg.espim_quant,
+                                     attn="sweep"),
         "scenarios": {"single_stream": single, "batched": batched},
         # headline fields = the single_stream (paper B=1 MV) scenario;
         # "modes" kept as its alias for cross-PR continuity
@@ -299,6 +338,7 @@ def main():
         "sparse_dense_ratio": ratio,
         "sparse_fp_dense_ratio": single["sparse_fp_dense_ratio"],
         "quant_vs_fp": single["quant_vs_fp"],
+        "attn_sparse_vs_mlp_only": single["attn_sparse_vs_mlp_only"],
         "batched_sparse_dense_ratio": batched["sparse_dense_ratio"],
         "bytes_per_token_reduction": {
             m: (modes["sparse"]["bytes_per_token"]
@@ -318,10 +358,16 @@ def main():
           f"{modes['sparse_int8']['throughput_tok_s']:.1f}, int4 "
           f"{modes['sparse_int4']['throughput_tok_s']:.1f} tok/s "
           f"({default_mode}/dense ratio {ratio:.2f}, batched ratio "
-          f"{batched['sparse_dense_ratio']:.2f}; bytes/token "
+          f"{batched['sparse_dense_ratio']:.2f}; whole-layer fp "
+          f"{modes['sparse_attn']['throughput_tok_s']:.1f}, int8 "
+          f"{modes['sparse_attn_int8']['throughput_tok_s']:.1f} tok/s; "
+          f"bytes/token mlp-only "
           f"{modes['sparse']['bytes_per_token']} -> "
           f"{modes['sparse_int8']['bytes_per_token']} -> "
-          f"{modes['sparse_int4']['bytes_per_token']}); TTFT@"
+          f"{modes['sparse_int4']['bytes_per_token']}, whole-layer "
+          f"{modes['sparse_attn']['bytes_per_token']} -> "
+          f"{modes['sparse_attn_int8']['bytes_per_token']} -> "
+          f"{modes['sparse_attn_int4']['bytes_per_token']}); TTFT@"
           f"{t['prompt_len']} chunked {t['chunked']['ttft_s']:.3f}s vs "
           f"replay {t['replay']['ttft_s']:.3f}s "
           f"({t['speedup']:.1f}x wall, {t['call_reduction']:.1f}x fewer "
@@ -354,6 +400,25 @@ def main():
                 f"impl={doc['provenance']['impl']}) the dequant\n"
                 f"!! arithmetic is winning; see BENCH_kernels.json "
                 f"quant rows before shipping {m}.\n" + "!" * 72,
+                file=sys.stderr)
+    for m, r in doc["attn_sparse_vs_mlp_only"].items():
+        if r < 1.0:
+            bm = "" if m == "fp" else f"_{m}"
+            print(
+                "\n" + "!" * 72 + "\n"
+                f"!! WARNING: WHOLE-LAYER sparse serving ({m}: fused QKV + "
+                f"O packs) is SLOWER\n"
+                f"!! than MLP-only sparse (ratio {r:.2f}) despite streaming "
+                f"{modes[f'sparse{bm}']['bytes_per_token'] / max(1, modes[f'sparse_attn{bm}']['bytes_per_token']):.2f}x "
+                f"fewer weight bytes/token.\n"
+                f"!! Packing q/k/v/o should never lose to leaving them "
+                f"dense where decode is\n"
+                f"!! bandwidth-bound (paper Sec. III: the format is "
+                f"projection-agnostic); on this\n"
+                f"!! backend (backend={doc['provenance']['backend']}, "
+                f"impl={doc['provenance']['impl']}) the attention MVs are\n"
+                f"!! too small for the gather to beat GEMM — see "
+                f"BENCH_kernels.json before shipping.\n" + "!" * 72,
                 file=sys.stderr)
 
 

@@ -7,8 +7,12 @@ dense-pruned reference.
 ``--quant {none,int8,int4}`` (default: the config's serving preset,
 int8 for llama7b-espim) re-encodes the packs' value planes (DESIGN.md
 section 9) and prints the measured weight-bytes/token reduction.
+``--sparse-attn`` serves the WHOLE decoder layer from the format — the
+fused QKV + O pack groups (DESIGN.md section 10) on top of the MLP packs
+— and prints the dense-attention vs whole-layer bytes/token delta.
 
-Run:  PYTHONPATH=src python examples/serve_sparse_llm.py [--quant int4]
+Run:  PYTHONPATH=src python examples/serve_sparse_llm.py \
+          [--quant int4] [--sparse-attn]
 """
 import argparse
 import time
@@ -18,9 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.core.espim_linear import ESPIMLinear
+from repro.core.espim_linear import ESPIMGroupLinear
 from repro.core.pruning import magnitude_prune
-from repro.core.sparse_model import sparse_stats, sparsify_mlps
+from repro.core.sparse_model import sparse_stats, sparsify_model
 from repro.models import factory
 from repro.serve.engine import Request, ServeEngine
 
@@ -30,24 +34,32 @@ cfg = get_config("llama7b-espim", reduced=True)
 ap = argparse.ArgumentParser()
 ap.add_argument("--quant", choices=("none", "int8", "int4"),
                 default=cfg.espim_quant,
-                help="value-plane encoding for the packed MLPs "
+                help="value-plane encoding for the packed projections "
                      f"(default: the config preset, {cfg.espim_quant})")
-QUANT = ap.parse_args().quant
+ap.add_argument("--sparse-attn", action="store_true",
+                help="pack q/k/v/o too (fused QKV + O groups) and serve "
+                     "every per-token MV from the compressed format")
+args = ap.parse_args()
+QUANT = args.quant
 params = factory.init_params(cfg, jax.random.PRNGKey(0))
 
 # --- flexible dense/sparse projections (Section III-I) ---------------------
-# Pack every attention projection of layer 0 through ESPIMLinear and verify
-# against the dense-pruned reference.
-print(f"packing layer-0 projections at {SPARSITY:.0%} sparsity:")
+# Pack layer 0's q/k/v as ONE fused group (shared balance perm, one SpMV
+# launch for all three) and verify each output against its dense-pruned
+# reference — the PackGroup contract as a standalone layer.
+print(f"packing layer-0 q/k/v as one fused group at {SPARSITY:.0%} "
+      f"sparsity:")
 rng = np.random.default_rng(0)
-for name in ("wq", "wk", "wv", "wo"):
-    w = np.asarray(params["layers"]["attn"][name][0], np.float32).T
-    lin = ESPIMLinear.from_dense(w, prune_sparsity=SPARSITY)
-    x = rng.standard_normal(w.shape[1]).astype(np.float32)
-    y = np.asarray(lin(jnp.asarray(x), impl="ref"))
+named = {name: np.asarray(params["layers"]["attn"][name][0], np.float32).T
+         for name in ("wq", "wk", "wv")}
+group = ESPIMGroupLinear.from_dense(named, prune_sparsity=SPARSITY)
+x = rng.standard_normal(cfg.d_model).astype(np.float32)
+ys = group(jnp.asarray(x), impl="ref")
+for name, w in named.items():
     ref = magnitude_prune(w, SPARSITY) @ x
-    print(f"  {name}: sparse path={lin.sparse}, "
-          f"max err vs dense-pruned = {np.abs(y - ref).max():.2e}")
+    print(f"  {name}: max err vs dense-pruned = "
+          f"{np.abs(np.asarray(ys[name]) - ref).max():.2e} "
+          f"(one launch for all of {'/'.join(group.names)})")
 
 # --- production serving: paged cache + chunked prefill + scheduler ---------
 # A mixed-length trace: short chat-like prompts interleaved with long ones.
@@ -56,12 +68,33 @@ for name in ("wq", "wk", "wv", "wo"):
 # ceil(len/chunk) jitted calls; all slots share one block-pool KV arena.
 # ``--quant`` serves decode from int8/int4 value planes (section 9): same
 # packs, same schedules, narrow codes + per-row-group scales.
-sparse = sparsify_mlps(cfg, params, SPARSITY, quant=QUANT)
+# ``--sparse-attn`` compiles the fused QKV + O groups too (section 10) so
+# decode runs EVERY per-token MV through the packed kernels.
+proj = "all" if args.sparse_attn else "mlp"
+sparse = sparsify_model(cfg, params, SPARSITY, projections=proj,
+                        quant=QUANT)
+st_all = sparse_stats(sparse)
+st = st_all["total"]
+if args.sparse_attn:
+    # the delta the flag buys: whole-layer packed vs MLP-only (which still
+    # streams every dense attention byte per decode token).  No second
+    # packing pass: the MLP-only baseline is the gateup+down planes of
+    # THIS pack plus the dense q/k/v/o bytes.
+    attn_w = params["layers"]["attn"]
+    attn_dense = sum(int(np.size(attn_w[n])) * attn_w[n].dtype.itemsize
+                     for n in ("wq", "wk", "wv", "wo"))
+    mlp_only = attn_dense + sum(
+        st_all[g]["value_plane_bytes"] + st_all[g]["index_plane_bytes"]
+        for g in ("gateup", "down"))
+    print(f"\nsparse-attn: whole-model weight bytes/token "
+          f"{mlp_only} (MLP packs + {attn_dense} dense attention bytes) "
+          f"-> {st['bytes_per_token']} all-packed "
+          f"({mlp_only / st['bytes_per_token']:.2f}x smaller)")
 if QUANT != "none":
-    st = sparse_stats(sparse)["total"]
     # the fp baseline needs no second packing pass: fp32 values cost 4
     # bytes/slot — exactly the quant-invariant int32 index plane's size
-    fp_bytes = 2 * st["index_plane_bytes"]
+    fp_bytes = (2 * st["index_plane_bytes"]
+                + st["dense_proj_bytes_per_token"])
     fp_bits = 8.0 * st["index_plane_bytes"] / st["nnz"]
     print(f"\nquant={QUANT}: weight bytes/token "
           f"{fp_bytes} -> {st['bytes_per_token']} "

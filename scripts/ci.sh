@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # One reproducible entrypoint: install deps, run the decode-path smoke
 # microbench FIRST (single fused layer, tiny shapes, parity-asserted in
-# fp AND from the quantized int8/int4 value planes — a kernel- or
-# quant-level regression fails here in seconds, long before the full
-# serve bench), then tier-1 tests, then the serving benchmark smoke.
+# fp AND from the quantized int8/int4 value planes, AND a whole-layer
+# attention-sparse decode step — fused QKV + O pack groups vs dense over
+# the pruned copies — so a kernel-, quant- or pack-group regression
+# fails here in seconds, long before the full serve bench), then tier-1
+# tests, then the serving benchmark smoke.
 #
 #   scripts/ci.sh                  # smoke benches + tests
 #   FULL_BENCH=1 scripts/ci.sh     # also regenerate the full BENCH_kernels.json
@@ -19,7 +21,7 @@ fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== decode-path smoke microbench, fp + quantized int8/int4 (fail fast) =="
+echo "== decode-path smoke microbench: fp + quant int8/int4 + attention-sparse fused layer (fail fast) =="
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" ESPIM_IMPL=ref \
     python benchmarks/kernels_bench.py --smoke
 

@@ -1,6 +1,8 @@
 """ESPIMLinear — the paper's flexible dense/sparse datapath (Section III-I)
-as a first-class JAX projection layer, plus the cluster-level "bank"
-distribution of the sparse MV.
+as a first-class JAX projection layer — plus ``ESPIMGroupLinear`` (several
+same-input projections packed as ONE fused group, the PackGroup contract
+of DESIGN.md section 10) and the cluster-level "bank" distribution of the
+sparse MV.
 
 Flexible configuration: a projection holds either a dense weight (Newton's
 16-MAC path) or an ESPIM ELL pack (11-MAC + FIFOs + switch path).  The
@@ -32,7 +34,8 @@ from repro.core.sparse_format import pack_ell, pack_ell_chunked, shard_ell
 from repro.kernels import ops
 from repro.kernels import ref as kref
 
-__all__ = ["ESPIMLinear", "espim_matvec_sharded", "make_sharded_weights"]
+__all__ = ["ESPIMLinear", "ESPIMGroupLinear", "espim_matvec_sharded",
+           "make_sharded_weights"]
 
 
 @dataclasses.dataclass
@@ -95,6 +98,74 @@ class ESPIMLinear:
             y = y + self.bias
         y = y.reshape(x.shape[:-1] + (self.n_out,)) if not squeeze else y[0]
         return y
+
+
+@dataclasses.dataclass
+class ESPIMGroupLinear:
+    """Several projections sharing one input, packed as ONE fused group —
+    the PackGroup contract (DESIGN.md section 10) as a standalone layer.
+
+    The member matrices are row-concatenated (their combined per-row nnz
+    drives one shared balance permutation and one set of width buckets)
+    and a single SpMV launch computes every member; ``espim_matvec``'s
+    unscatter restores logical row order, so ``__call__`` returns a dict
+    of per-projection outputs identical to running each member alone —
+    at one launch instead of len(names).
+    """
+
+    names: tuple
+    sizes: tuple          # n_out per projection, in ``names`` order
+    n_in: int
+    weights: object       # EspimWeights | QuantEspimWeights of the fused pack
+    density: float = 1.0
+
+    @classmethod
+    def from_dense(
+        cls,
+        named_ws: dict,
+        *,
+        prune_sparsity: float | None = None,
+        row_tile: int = 128,
+        chunk_cols: int = ops.DEFAULT_CHUNK_COLS,
+        dtype=jnp.float32,
+        quant=None,
+    ) -> "ESPIMGroupLinear":
+        """``named_ws``: {name: (n_out, n_in)} sharing ``n_in`` (e.g.
+        ``{"wq": ..., "wk": ..., "wv": ...}`` — GQA row counts may
+        differ).  Prunes each member, row-concatenates, and packs once."""
+        names = tuple(named_ws)
+        mats = []
+        for n in names:
+            w = np.asarray(named_ws[n])
+            if prune_sparsity is not None:
+                w = magnitude_prune(w, prune_sparsity)
+            mats.append(w)
+        n_in = mats[0].shape[1]
+        if any(m.shape[1] != n_in for m in mats):
+            raise ValueError("group members must share the input dim")
+        cat = np.concatenate(mats, axis=0)
+        pack = pack_ell_chunked(cat, row_tile=row_tile,
+                                chunk_cols=chunk_cols)
+        if quant in ("none",):
+            quant = None
+        weights = ops.pack_to_device(pack, dtype=dtype, quant=quant)
+        return cls(names, tuple(m.shape[0] for m in mats), n_in, weights,
+                   float((cat != 0).mean()))
+
+    def __call__(self, x: jnp.ndarray, *, impl: str | None = None) -> dict:
+        """x: (n_in,) or (..., n_in) -> {name: (n_out_name,) or
+        (..., n_out_name)} — one fused launch for the whole group."""
+        squeeze = x.ndim == 1
+        xb = x.reshape(-1, self.n_in) if not squeeze else x[None, :]
+        y = ops.espim_matvec(self.weights, xb.T, impl=impl).T
+        out, r0 = {}, 0
+        for name, n_out in zip(self.names, self.sizes):
+            seg = y[:, r0:r0 + n_out]
+            seg = (seg.reshape(x.shape[:-1] + (n_out,)) if not squeeze
+                   else seg[0])
+            out[name] = seg
+            r0 += n_out
+        return out
 
 
 # --------------------------------------------------------------------------

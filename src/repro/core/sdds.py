@@ -54,6 +54,9 @@ __all__ = [
     "plan_chunks",
     "WidthBucketPlan",
     "plan_width_buckets",
+    "PackGroupSpec",
+    "validate_group_specs",
+    "decoder_layer_groups",
 ]
 
 
@@ -399,6 +402,148 @@ def plan_width_buckets(widths, *, rows_per_group: int, n_buckets: int = 4,
         single_bucket_slots=int(single),
         widths_per_group=tuple(int(w) for w in widths),
     )
+
+
+# --------------------------------------------------------------------------
+# Pack groups (projection-generic SDDS compilation units)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PackGroupSpec:
+    """Declarative spec for one *pack group*: a set of same-input
+    projections compiled into ONE width-bucketed layer-stacked pack under
+    ONE balance permutation and one set of width buckets.
+
+    The paper's format and scheduling are projection-agnostic — every MV
+    of the decode step gets fine-grained interleaving, balance permutation
+    and decoupled value/index planes — so pack/partition planning is a
+    reusable compilation pass over group specs, not per-matrix special
+    cases.
+
+    * ``projections``: parameter leaf names under
+      ``params["layers"][module]``, row-concatenated in this order (rows
+      of the packed matrix are the projections' *output* dims).
+    * ``fuse``: how the projections share the pack.
+
+      - ``"concat"``: row-concatenated into one matrix (per-projection
+        row counts may differ — QKV under GQA).  The group output is a
+        packed-order vector whose logical split points are the recorded
+        per-projection row offsets.
+      - ``"halves"``: every projection is one *half* of each bucket under
+        a SHARED permutation (requires identical shapes); half outputs
+        pair up elementwise in packed order, so products between them
+        (``act(gate) * up``) need no unscatter.
+
+    * ``compose_with``: name of an upstream group whose packed output
+      this group consumes.  The group's column ids are pre-composed
+      OFFLINE with the upstream packed order (its gather domain becomes
+      the upstream ``r_pad``), deleting the inter-group permutation from
+      the per-token path.
+    * ``output``: the group's output contract.
+
+      - ``"take"``: one static ``jnp.take`` by ``inv_perm`` restores
+        logical row order at runtime.  Required whenever the consumer
+        needs logical positions — QKV must unscatter because RoPE pairs
+        head dims positionally and the paged KV cache stores logical
+        head rows; the O/down projections feed the residual stream.
+      - ``"folded"``: the output stays in packed order and exactly one
+        downstream group declares ``compose_with`` = this group (gate+up
+        feeding down).
+    """
+
+    name: str
+    projections: tuple
+    module: str = "mlp"          # params["layers"][<module>][<projection>]
+    fuse: str = "concat"         # "concat" | "halves"
+    compose_with: str | None = None
+    output: str = "take"         # "take" | "folded"
+
+    def __post_init__(self):
+        if not self.projections:
+            raise ValueError(f"group {self.name!r} lists no projections")
+        if self.fuse not in ("concat", "halves"):
+            raise ValueError(f"group {self.name!r}: unknown fuse "
+                             f"{self.fuse!r}")
+        if self.output not in ("take", "folded"):
+            raise ValueError(f"group {self.name!r}: unknown output "
+                             f"{self.output!r}")
+
+
+def validate_group_specs(specs) -> dict:
+    """Check a group-spec list's fold/compose contract; returns
+    ``{name: spec}`` in compilation order.
+
+    * names and projection leaves are unique;
+    * ``compose_with`` must reference an *earlier* group (packs compile
+      in order, the composed group needs the upstream packed order);
+    * ``output="folded"`` requires exactly one downstream consumer
+      composing with the group (a folded output that nobody composes
+      with would never return to logical order), and ``output="take"``
+      requires none (the take would double-unscatter).
+    """
+    by_name: dict = {}
+    seen_proj: set = set()
+    for s in specs:
+        if s.name in by_name:
+            raise ValueError(f"duplicate group name {s.name!r}")
+        for p in s.projections:
+            key = (s.module, p)
+            if key in seen_proj:
+                raise ValueError(
+                    f"projection {s.module}/{p} appears in two groups")
+            seen_proj.add(key)
+        by_name[s.name] = s
+    consumers: dict = {}
+    for s in specs:
+        if s.compose_with is not None:
+            if s.compose_with not in by_name:
+                raise ValueError(
+                    f"group {s.name!r} composes with unknown group "
+                    f"{s.compose_with!r}")
+            if list(by_name).index(s.compose_with) >= list(by_name).index(
+                    s.name):
+                raise ValueError(
+                    f"group {s.name!r} composes with {s.compose_with!r}, "
+                    f"which must be compiled earlier")
+            consumers.setdefault(s.compose_with, []).append(s.name)
+    for s in specs:
+        n = len(consumers.get(s.name, ()))
+        if s.output == "folded" and n != 1:
+            raise ValueError(
+                f"group {s.name!r} has output='folded' but {n} composing "
+                f"consumers (need exactly 1)")
+        if s.output == "take" and n != 0:
+            raise ValueError(
+                f"group {s.name!r} has output='take' but downstream "
+                f"groups compose with its packed order")
+    return by_name
+
+
+def decoder_layer_groups(gated: bool = True, attn: bool = True,
+                         mlp: bool = True) -> tuple:
+    """The standard decoder-layer group set.
+
+    MLP: gate+up as shared-perm halves folding into the perm-composed
+    down projection.  Attention: q/k/v row-concatenated (one SpMV, output
+    unscattered by one static take so RoPE head pairing and KV-cache
+    writes see logical order) and the O projection feeding the residual.
+    """
+    specs: list = []
+    if attn:
+        specs += [
+            PackGroupSpec("qkv", ("wq", "wk", "wv"), module="attn",
+                          fuse="concat", output="take"),
+            PackGroupSpec("attn_out", ("wo",), module="attn",
+                          fuse="concat", output="take"),
+        ]
+    if mlp:
+        gu = ("w_gate", "w_up") if gated else ("w_up",)
+        specs += [
+            PackGroupSpec("gateup", gu, module="mlp", fuse="halves",
+                          output="folded"),
+            PackGroupSpec("down", ("w_down",), module="mlp", fuse="concat",
+                          compose_with="gateup", output="take"),
+        ]
+    return tuple(specs)
 
 
 # --------------------------------------------------------------------------

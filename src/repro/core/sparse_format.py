@@ -53,6 +53,9 @@ __all__ = [
     "pack_ell_chunked",
     "chunk_pack",
     "pack_bucketed_stack",
+    "pack_group",
+    "compose_cols_with_pack",
+    "projection_padded_slots",
     "ell_to_dense",
     "ell_chunked_to_dense",
     "bucketed_stack_to_dense",
@@ -529,6 +532,90 @@ def pack_bucketed_stack(
         nnz_per_layer=nnz_per_half.sum(axis=0),
         nnz_per_half=nnz_per_half,
     )
+
+
+# --------------------------------------------------------------------------
+# Projection-generic pack groups (the PackGroupSpec compilation step)
+# --------------------------------------------------------------------------
+def pack_group(
+    mats_by_proj: dict,
+    fuse: str = "concat",
+    row_tile: int = LANE,
+    chunk_cols: int = 512,
+    n_buckets: int = 4,
+    width_multiple: int = 8,
+    balance: bool = True,
+) -> tuple:
+    """Compile one pack group: ``mats_by_proj[name][layer]`` are the
+    transposed per-layer matrices (rows = the projection's output dim).
+
+    ``fuse="halves"`` packs each projection as one half under the shared
+    permutation (identical shapes required — gate+up); ``fuse="concat"``
+    row-concatenates the projections into one matrix per layer (row
+    counts may differ — fused QKV under GQA).
+
+    Returns ``(BucketedStackedPack, row_offsets)`` where
+    ``row_offsets[name] = (half, r0, r1)`` locates the projection's rows
+    in the group's logical (pre-permutation) row domain.
+    """
+    names = list(mats_by_proj)
+    n_layers = len(mats_by_proj[names[0]])
+    if fuse == "halves":
+        halves = [list(mats_by_proj[n]) for n in names]
+        n_rows = np.asarray(halves[0][0]).shape[0]
+        offsets = {n: (h, 0, n_rows) for h, n in enumerate(names)}
+    elif fuse == "concat":
+        offsets = {}
+        r0 = 0
+        for n in names:
+            rows = np.asarray(mats_by_proj[n][0]).shape[0]
+            offsets[n] = (0, r0, r0 + rows)
+            r0 += rows
+        halves = [[np.concatenate([np.asarray(mats_by_proj[n][l])
+                                   for n in names], axis=0)
+                   for l in range(n_layers)]]
+    else:
+        raise ValueError(f"unknown fuse {fuse!r}")
+    pack = pack_bucketed_stack(halves, row_tile=row_tile,
+                               chunk_cols=chunk_cols, n_buckets=n_buckets,
+                               width_multiple=width_multiple,
+                               balance=balance)
+    return pack, offsets
+
+
+def compose_cols_with_pack(mats: list, upstream: BucketedStackedPack) -> list:
+    """Offline column pre-composition: permute each layer matrix's columns
+    to the upstream group's *packed* row order (pad positions become zero
+    columns), so the upstream packed output feeds this group's pack with
+    zero runtime permutation.  The returned matrices' gather domain is the
+    upstream ``r_pad``."""
+    out = []
+    for l, m in enumerate(mats):
+        m = np.asarray(m)
+        mp = np.zeros((m.shape[0], upstream.r_pad), np.float32)
+        mp[:, upstream.inv_perm[l]] = m
+        out.append(mp)
+    return out
+
+
+def projection_padded_slots(pack: BucketedStackedPack,
+                            row_offsets: dict) -> dict:
+    """Exact per-projection padded-slot counts, (L,) per projection.
+
+    A logical row's slots are set by the width bucket its packed position
+    landed in (``n_chunks * Lc_bucket``); the balance permutation scatters
+    a projection's rows across buckets, so this walks ``inv_perm``.
+    Bucket widths are shared by every half, so the count is
+    half-independent.
+    """
+    slots_per_pos = np.repeat(
+        [pack.n_chunks * lc for lc in pack.widths],
+        [rg for rg in pack.bucket_rows]).astype(np.int64)
+    out = {}
+    for name, (_, r0, r1) in row_offsets.items():
+        pos = pack.inv_perm[:, r0:r1]                  # (L, rows)
+        out[name] = slots_per_pos[pos].sum(axis=1)     # (L,)
+    return out
 
 
 def bucketed_stack_to_dense(pack: BucketedStackedPack, layer: int,

@@ -2,34 +2,42 @@
 
 The paper's deployment (Section IV): take a trained model, magnitude-prune
 the projection matrices, and serve MV decode from the compressed format.
-This module converts a dense LM's stacked MLP weights into stacked ELL
-packs (the offline SDDS-analogue pipeline: prune -> balance -> chunk ->
-width-bucket) and runs the decode step with the sparse kernels in place of
-the dense matmuls — attention stays dense (its per-layer matrices are small
-relative to the MLPs, which hold ~2/3 of LLaMA-class weights).
+ESPIM's format and SDDS scheduling are projection-agnostic — the paper
+applies fine-grained interleaving, balance permutation and decoupled
+value/index planes to EVERY MV of the decode step — so the offline
+pipeline here is a projection-generic **pack-group compiler**
+(``sparsify_model``): a list of declarative ``PackGroupSpec``s
+(repro.core.sdds) is compiled, group by group, into width-bucketed
+layer-stacked packs (prune -> fuse -> balance -> chunk -> width-bucket ->
+[quantize]), and the decode step runs every per-token MV — q/k/v/o AND
+gate/up/down — through the packed kernels.
 
-The decode datapath is fully fused (DESIGN.md section 8):
+The default decoder-layer group set (DESIGN.md section 10):
 
-* one ``jax.lax.scan`` over the layer stack — the packs are padded to
-  uniform per-bucket shapes for exactly this;
-* gate and up are row-concatenated into ONE pack per bucket sharing one
-  balance permutation (the paper's vector-broadcast sharing applied across
-  projections): a single SpMV launch yields both halves, and
-  ``silu(gate) * up`` runs directly in packed order;
-* the down projection's column ids are pre-composed offline with the
-  gate/up packed order, so the intermediate never needs unscattering; the
-  only runtime permutation left is one ``take`` by ``inv_perm`` on the
-  down output (``scatter_rows_ref`` is gone from the per-token path);
-* ``x`` stays in (in, B) layout across the whole MLP — one transpose in,
-  one out, per layer.
+* ``qkv``: q, k, v row-concatenated into ONE pack under one balance perm
+  (one SpMV launch per bucket for all three projections; per-projection
+  row counts may differ — GQA).  Output contract ``take``: one static
+  ``jnp.take`` by ``inv_perm`` restores logical row order, because RoPE
+  pairs head dims positionally and the KV cache stores logical head rows.
+* ``attn_out``: the O projection, feeding the residual (``take``).
+* ``gateup``: gate+up as shared-perm *halves* — ``silu(gate) * up`` runs
+  directly in packed order (output contract ``folded``).
+* ``down``: column ids pre-composed offline with the gateup packed order
+  (``compose_with="gateup"``), output restored by one ``take``.
 
-Quantized serving (``quant="int8"|"int4"``, DESIGN.md section 9): only the
-packs' *value planes* are re-encoded (repro.quant) — per-bucket-row-group
-scales ride the layer scan as one more stacked leaf and the fused SpMV
-launches dispatch to the quantized kernels; cols/perms/plans and the whole
-datapath shape are untouched.  The pruned dense copies are replaced by the
-*dequantized* reconstructions, so the GEMM prefill path and every parity
-test see exactly the weights the quantized kernels compute with.
+The decode datapath is fully fused (DESIGN.md section 8): one
+``jax.lax.scan`` over the layer stack, packs padded to uniform per-bucket
+shapes, activations kept in ``(features, B)`` layout between launches.
+``sparsify_mlps`` survives as a thin MLP-only preset of
+``sparsify_model`` (attention stays dense — the pre-PR5 behavior).
+
+Quantized serving (``quant="int8"|"int4"``, DESIGN.md section 9): only
+the packs' *value planes* are re-encoded (repro.quant) — per-bucket-row-
+group scales ride the layer scan as one more stacked leaf and the fused
+SpMV launches dispatch to the quantized kernels; cols/perms/plans and the
+whole datapath shape are untouched.  The pruned dense copies are replaced
+by the *dequantized* reconstructions, so the GEMM prefill path and every
+parity test see exactly the weights the quantized kernels compute with.
 """
 from __future__ import annotations
 
@@ -41,16 +49,21 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.pruning import magnitude_prune
+from repro.core.sdds import (PackGroupSpec, decoder_layer_groups,
+                             validate_group_specs)
 from repro.core.sparse_format import (BucketedStackedPack,
                                       bucketed_stack_to_dense,
-                                      pack_bucketed_stack)
+                                      compose_cols_with_pack, pack_group,
+                                      projection_padded_slots)
 from repro.kernels import ops
 from repro.models import transformer as T
 
-__all__ = ["sparsify_mlps", "decode_step_sparse", "prefill_chunk_sparse",
-           "sparse_stats"]
+__all__ = ["sparsify_model", "sparsify_mlps", "pruned_param_tree",
+           "decode_step_sparse", "prefill_chunk_sparse", "sparse_stats"]
 
-_MLP_NAMES = ("w_gate", "w_up", "w_down")
+# the standard decoder-layer projections NOT covered by a group still
+# stream their dense bytes every decode token — sparse_stats charges them
+_DENSE_MODULES = ("attn", "mlp")
 
 
 def _to_device(pack: BucketedStackedPack) -> dict:
@@ -107,18 +120,192 @@ def _to_device(pack: BucketedStackedPack) -> dict:
     }
 
 
-def _dequantized_halves(pack: BucketedStackedPack) -> list:
-    """Reconstruct the dense (transposed) matrices the quantized pack
-    actually encodes: dequantize each bucket plane and unscatter — these
-    replace the pruned copies so the dense prefill datapath (Section
-    III-I) and the parity tests run the *same* effective weights as the
-    quantized kernels."""
+def _dequantized_projs(pack: BucketedStackedPack, offsets: dict,
+                       upstream: BucketedStackedPack | None) -> dict:
+    """Reconstruct the dense (L, in, out) matrices a quantized group
+    actually encodes: dequantize each bucket plane, unscatter, slice each
+    projection's rows, and (for composed groups) map the columns back to
+    the logical order — these replace the pruned copies so the dense
+    prefill datapath (Section III-I) and the parity tests run the *same*
+    effective weights as the quantized kernels."""
     deq = dataclasses.replace(pack, buckets=[
         dict(b, values=plane.dequantize())
         for b, plane in zip(pack.buckets, pack.qplanes)])
-    return [[bucketed_stack_to_dense(deq, l, h)
-             for l in range(pack.n_layers)]
-            for h in range(pack.halves)]
+    out = {}
+    for name, (hf, r0, r1) in offsets.items():
+        mats = []
+        for l in range(pack.n_layers):
+            m = bucketed_stack_to_dense(deq, l, hf)[r0:r1]
+            if upstream is not None:
+                m = m[:, upstream.inv_perm[l]]       # back to logical cols
+            mats.append(m.T)                         # (in, out)
+        out[name] = np.stack(mats)
+    return out
+
+
+def _uncovered_dense_bytes(params: dict, covered: set) -> int:
+    """Per-token weight bytes of the standard decoder projections NOT
+    compiled into a pack group (stacked 2-D weights only; biases/norms are
+    negligible).  This is what an MLP-only deployment still streams
+    densely for attention every decode token."""
+    total = 0
+    for module in _DENSE_MODULES:
+        sub = params.get("layers", {}).get(module, {})
+        for name, w in sub.items():
+            if (module, name) in covered or np.ndim(w) != 3:
+                continue
+            total += int(np.size(w)) * jnp.dtype(w.dtype).itemsize
+    return total
+
+
+def _resolve_specs(cfg: ModelConfig, projections) -> dict:
+    if projections == "all":
+        specs = decoder_layer_groups(cfg.gated_mlp, attn=True, mlp=True)
+    elif projections == "mlp":
+        specs = decoder_layer_groups(cfg.gated_mlp, attn=False, mlp=True)
+    elif projections == "attn":
+        specs = decoder_layer_groups(cfg.gated_mlp, attn=True, mlp=False)
+    elif isinstance(projections, str):
+        raise ValueError(f"unknown projections preset {projections!r} "
+                         "(all | mlp | attn | explicit PackGroupSpec list)")
+    else:
+        specs = tuple(projections)
+    by_name = validate_group_specs(specs)
+    # the fused decode runtime drives each module through its canonical
+    # group names and projection sets — enforce the coupling HERE so a
+    # custom spec list that the runtime cannot serve (or, worse, would
+    # silently bypass, running attention from the unpruned params while
+    # the stats claim it is packed) fails at build, not at trace
+    runtime = {"attn": {"qkv": {"wq", "wk", "wv"}, "attn_out": {"wo"}},
+               "mlp": {"gateup": ({"w_gate", "w_up"} if cfg.gated_mlp
+                                  else {"w_up"}),
+                       "down": {"w_down"}}}
+    for module, req in runtime.items():
+        covering = {s.name: set(s.projections) for s in by_name.values()
+                    if s.module == module}
+        if covering and covering != req:
+            raise ValueError(
+                f"the fused decode runtime serves {module} via groups "
+                f"{ {n: sorted(p) for n, p in req.items()} }; "
+                f"got { {n: sorted(p) for n, p in covering.items()} }")
+    return by_name
+
+
+def sparsify_model(cfg: ModelConfig, params: dict, sparsity: float, *,
+                   projections="all",
+                   row_tile: int = 128,
+                   chunk_cols: int = ops.DEFAULT_CHUNK_COLS,
+                   n_buckets: int = 4,
+                   quant: str | None = None,
+                   quant_spec=None) -> dict:
+    """Offline pack-group compiler: prune + fuse + pack (+ quantize) the
+    decoder layer's projections per a declarative group-spec list.
+
+    ``projections``: ``"all"`` (default — fused QKV + O + gate/up + down:
+    the whole decoder layer serves from the compressed format),
+    ``"mlp"``/``"attn"`` presets (the uncovered side runs dense from the
+    layer params), or an explicit ``PackGroupSpec`` tuple.
+
+    Returns the serving dict: per-group device packs under ``"groups"``
+    (also aliased at the top level by group name), pruned dense copies
+    per projection (``"pruned"`` + ``"<name>_pruned"`` aliases) for the
+    GEMM prefill path and verification, and the compiled ``"specs"``.
+
+    ``quant`` ("int8" | "int4"; or pass an explicit
+    ``repro.quant.QuantSpec`` via ``quant_spec``) re-encodes every group's
+    value planes per bucket row group and swaps the pruned dense copies
+    for their dequantized reconstructions — decode then serves from the
+    narrow codes while the GEMM prefill path stays weight-consistent.
+    """
+    quant = None if quant in (None, "none") else quant
+    by_name = _resolve_specs(cfg, projections)
+    n_layers = cfg.n_layers
+
+    qspec = None
+    if quant is not None or quant_spec is not None:
+        from repro.quant import QuantSpec, default_spec
+        qspec = (quant_spec if isinstance(quant_spec, QuantSpec)
+                 else default_spec(quant))
+        quant = quant or f"int{qspec.bits}"
+
+    # ---- prune every covered projection ---------------------------------
+    pruned: dict = {}
+    dtypes: dict = {}
+    for spec in by_name.values():
+        sub = params["layers"].get(spec.module, {})
+        missing = [n for n in spec.projections if n not in sub]
+        if missing:
+            raise ValueError(
+                f"params missing {spec.module} projection(s) {missing} "
+                f"for group {spec.name!r} (gated_mlp={cfg.gated_mlp})")
+        for name in spec.projections:
+            w = np.asarray(sub[name], np.float32)        # (L, in, out)
+            pruned[name] = np.stack([magnitude_prune(w[l], sparsity)
+                                     for l in range(n_layers)])
+            dtypes[name] = sub[name].dtype
+
+    # ---- compile the groups in spec order -------------------------------
+    host_packs: dict = {}
+    groups: dict = {}
+    for spec in by_name.values():
+        # rows of the packed matrix are W^T's rows (the output dim)
+        mats = {n: [pruned[n][l].T for l in range(n_layers)]
+                for n in spec.projections}
+        proj_nnz = {n: np.asarray([(pruned[n][l] != 0).sum()
+                                   for l in range(n_layers)], np.int64)
+                    for n in spec.projections}
+        upstream = host_packs.get(spec.compose_with)
+        if upstream is not None:
+            mats = {n: compose_cols_with_pack(ms, upstream)
+                    for n, ms in mats.items()}
+        pack, offsets = pack_group(mats, fuse=spec.fuse, row_tile=row_tile,
+                                   chunk_cols=chunk_cols,
+                                   n_buckets=n_buckets)
+        if qspec is not None:
+            from repro.quant import quantize_bucketed_stack
+            quantize_bucketed_stack(pack, qspec)
+            # the dequantized matrices are the weights decode actually
+            # applies: make them the pruned copies (prefill GEMMs +
+            # parity references)
+            for name, arr in _dequantized_projs(pack, offsets,
+                                                upstream).items():
+                pruned[name] = arr
+        host_packs[spec.name] = pack
+        g = _to_device(pack)
+        g.update({
+            "name": spec.name,
+            "module": spec.module,
+            "projections": tuple(spec.projections),
+            "fuse": spec.fuse,
+            "output": spec.output,
+            "compose_with": spec.compose_with,
+            "row_offsets": offsets,
+            "proj_nnz": proj_nnz,
+            "proj_padded": projection_padded_slots(pack, offsets),
+        })
+        groups[spec.name] = g
+
+    covered = {(s.module, n) for s in by_name.values()
+               for n in s.projections}
+    out: dict = {
+        "format": "espim-packgroups/v3",
+        "sparsity": sparsity,
+        "gated": bool(cfg.gated_mlp),
+        "quant": quant or "none",
+        "attn_sparse": "qkv" in groups,
+        "mlp_sparse": "gateup" in groups,
+        "specs": tuple(by_name.values()),
+        "groups": groups,
+        "dense_proj_bytes": _uncovered_dense_bytes(params, covered),
+        "pruned": {n: jnp.asarray(w, dtypes[n]) for n, w in pruned.items()},
+    }
+    if qspec is not None:
+        out["quant_spec"] = qspec
+    for name, g in groups.items():             # legacy top-level aliases
+        out[name] = g
+    for name, w in out["pruned"].items():
+        out[f"{name}_pruned"] = w
+    return out
 
 
 def sparsify_mlps(cfg: ModelConfig, params: dict, sparsity: float,
@@ -127,107 +314,49 @@ def sparsify_mlps(cfg: ModelConfig, params: dict, sparsity: float,
                   n_buckets: int = 4,
                   quant: str | None = None,
                   quant_spec=None) -> dict:
-    """Offline pipeline: prune + fuse + pack (+ quantize) every MLP
-    projection.
+    """MLP-only preset of ``sparsify_model``: gate+up fused halves + the
+    perm-composed down projection; attention stays on the dense path (the
+    pre-PR5 serving mode, kept for the attn=dense benchmark dimension)."""
+    return sparsify_model(cfg, params, sparsity, projections="mlp",
+                          row_tile=row_tile, chunk_cols=chunk_cols,
+                          n_buckets=n_buckets, quant=quant,
+                          quant_spec=quant_spec)
 
-    Returns the fused serving packs plus pruned dense copies for
-    verification:
 
-    * ``"gateup"``: gate and up row-concatenated per bucket under one
-      shared permutation (``halves == 2``; just up for non-gated MLPs);
-    * ``"down"``: w_down with its column ids pre-composed with the gateup
-      packed order (its gather domain is the gateup ``r_pad``).
-
-    ``quant`` ("int8" | "int4"; or pass an explicit
-    ``repro.quant.QuantSpec`` via ``quant_spec``) re-encodes the packs'
-    value planes per bucket row group and swaps the pruned dense copies
-    for their dequantized reconstructions — decode then serves from the
-    narrow codes while the GEMM prefill path stays weight-consistent.
-    """
-    quant = None if quant in (None, "none") else quant
-    out: dict = {"sparsity": sparsity, "format": "espim-fused-bucketed/v2",
-                 "gated": bool(cfg.gated_mlp), "quant": quant or "none"}
-    mlp = params["layers"]["mlp"]
-    required = _MLP_NAMES if cfg.gated_mlp else ("w_up", "w_down")
-    missing = [n for n in required if n not in mlp]
-    if missing:
-        raise ValueError(f"params missing MLP projection(s) {missing} "
-                         f"(gated_mlp={cfg.gated_mlp})")
-    pruned = {}
-    for name in required:
-        w = np.asarray(mlp[name], np.float32)          # (L, in, out)
-        pruned[name] = np.stack([magnitude_prune(w[i], sparsity)
-                                 for i in range(w.shape[0])])
-        out[f"{name}_pruned"] = jnp.asarray(pruned[name], mlp[name].dtype)
-
-    # y = x @ W  ->  rows of the packed matrix are W^T's rows (out dim)
-    up_t = [m.T for m in pruned["w_up"]]
-    halves = ([[m.T for m in pruned["w_gate"]], up_t] if cfg.gated_mlp
-              else [up_t])
-    gu = pack_bucketed_stack(halves, row_tile=row_tile,
-                             chunk_cols=chunk_cols, n_buckets=n_buckets)
-
-    if quant is not None or quant_spec is not None:
-        from repro.quant import (QuantSpec, default_spec,
-                                 quantize_bucketed_stack)
-        spec = (quant_spec if isinstance(quant_spec, QuantSpec)
-                else default_spec(quant))
-        out["quant"] = quant or f"int{spec.bits}"
-        out["quant_spec"] = spec
-        quantize_bucketed_stack(gu, spec)
-        # the dequantized halves are the weights decode actually applies:
-        # make them the dense copies (prefill GEMMs + parity references)
-        deq_halves = _dequantized_halves(gu)
-        names = ("w_gate", "w_up") if cfg.gated_mlp else ("w_up",)
-        for h, name in enumerate(names):
-            pruned[name] = np.stack([m.T for m in deq_halves[h]])
-            out[f"{name}_pruned"] = jnp.asarray(pruned[name],
-                                                mlp[name].dtype)
-
-    # Fold the gate/up permutation into w_down offline: permute w_down's
-    # columns to the gateup *packed* order (pad positions stay zero
-    # columns), so at runtime the packed intermediate feeds it directly.
-    down_remapped = []
-    for l, m in enumerate(pruned["w_down"]):
-        wd = m.T                                        # (d_model, d_ff)
-        wd_p = np.zeros((wd.shape[0], gu.r_pad), np.float32)
-        wd_p[:, gu.inv_perm[l]] = wd
-        down_remapped.append(wd_p)
-    dn = pack_bucketed_stack([down_remapped], row_tile=row_tile,
-                             chunk_cols=chunk_cols, n_buckets=n_buckets)
-
-    if quant is not None or quant_spec is not None:
-        quantize_bucketed_stack(dn, out["quant_spec"])
-        deq_down = _dequantized_halves(dn)[0]           # (d_model, gu_r_pad)
-        wdq = np.stack([m[:, gu.inv_perm[l]].T          # back to logical cols
-                        for l, m in enumerate(deq_down)])
-        pruned["w_down"] = wdq
-        out["w_down_pruned"] = jnp.asarray(wdq, mlp["w_down"].dtype)
-
-    out["gateup"] = _to_device(gu)
-    out["down"] = _to_device(dn)
-    return out
+def pruned_param_tree(params: dict, sparse: dict) -> dict:
+    """A params tree with every covered projection's weights replaced by
+    the sparse dict's pruned (or dequantized) copies — the dense
+    reference model the parity tests and smoke benches decode with."""
+    pruned = jax.tree.map(lambda x: x, params)
+    for module in _DENSE_MODULES:
+        sub = params.get("layers", {}).get(module, {})
+        for name in sub:
+            if name in sparse["pruned"]:
+                pruned["layers"][module][name] = sparse["pruned"][name]
+    return pruned
 
 
 # --------------------------------------------------------------------------
 # Fused runtime path
 # --------------------------------------------------------------------------
 def _scan_bufs(sparse: dict):
-    """The per-layer arrays threaded through the layer scan (everything
-    else about the packs is static geometry closed over by the step).
-    Quantized packs thread (codes, cols, scales) triples — the stacked
-    (L, G) scales are just one more scan leaf."""
+    """The per-layer arrays threaded through the layer scan, one entry per
+    pack group (everything else about the packs is static geometry closed
+    over by the step).  Quantized packs thread (codes, cols, scales)
+    triples — the stacked (L, G) scales are just one more scan leaf;
+    ``take``-output groups also thread their (L, n_rows) ``inv_perm``."""
 
-    def bufs(p):
-        if p["quant"] is not None:
-            return [(b["q"], b["cols"], b["srow"]) for b in p["buckets"]]
-        return [(b["values"], b["cols"]) for b in p["buckets"]]
+    def bufs(g):
+        if g["quant"] is not None:
+            b = [(b["q"], b["cols"], b["srow"]) for b in g["buckets"]]
+        else:
+            b = [(b["values"], b["cols"]) for b in g["buckets"]]
+        entry = {"bufs": b}
+        if g["output"] == "take":
+            entry["inv"] = g["inv_perm"]
+        return entry
 
-    return {
-        "gu": bufs(sparse["gateup"]),
-        "dn": bufs(sparse["down"]),
-        "dn_inv": sparse["down"]["inv_perm"],
-    }
+    return {name: bufs(g) for name, g in sparse["groups"].items()}
 
 
 def _bucket_spmv(pack: dict, buf: tuple, g: int, xt: jnp.ndarray,
@@ -246,6 +375,70 @@ def _bucket_spmv(pack: dict, buf: tuple, g: int, xt: jnp.ndarray,
                                   chunk_cols=pack["chunk_cols"], impl=impl)
 
 
+def _group_apply(pack: dict, gb: dict, xt: jnp.ndarray, impl: str) -> list:
+    """All of one group's bucket launches -> per-bucket packed outputs."""
+    return [_bucket_spmv(pack, buf, g, xt, impl)
+            for g, buf in enumerate(gb["bufs"])]
+
+
+def _group_take(gb: dict, parts: list) -> jnp.ndarray:
+    """Concatenate bucket outputs and restore logical row order with the
+    group's one static ``take`` (the ``output="take"`` contract)."""
+    yp = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+    return jnp.take(yp, gb["inv"], axis=0)
+
+
+def _fused_qkv(cfg: ModelConfig, sparse: dict, bufs: dict, attn_p: dict,
+               hn: jnp.ndarray, impl: str):
+    """The fused QKV pack: hn (B, T, D) -> q (B, T, H, hd), k/v
+    (B, T, KV, hd) in *logical* head order.
+
+    One SpMV launch per bucket computes all three projections; the single
+    static ``take`` by ``inv_perm`` unscatters the packed rows so RoPE's
+    positional head-dim pairing and the KV-cache writes see exactly the
+    rows the dense path produces.  QKV biases (qwen-style) are added
+    post-take — biases are never packed."""
+    g = sparse["groups"]["qkv"]
+    gb = bufs["qkv"]
+    b, t = hn.shape[0], hn.shape[1]
+    xt = hn.reshape(-1, hn.shape[-1]).T.astype(jnp.float32)   # (D, B*T)
+    y = _group_take(gb, _group_apply(g, gb, xt, impl))        # (rows, B*T)
+
+    def cut(name: str, n_heads: int) -> jnp.ndarray:
+        _, r0, r1 = g["row_offsets"][name]
+        seg = y[r0:r1]
+        bias = attn_p.get("b" + name[1])                      # wq -> bq
+        if bias is not None:
+            seg = seg + bias.astype(jnp.float32)[:, None]
+        return seg.T.reshape(b, t, n_heads, cfg.hd).astype(hn.dtype)
+
+    return (cut("wq", cfg.n_heads), cut("wk", cfg.n_kv_heads),
+            cut("wv", cfg.n_kv_heads))
+
+
+def _fused_o(cfg: ModelConfig, sparse: dict, bufs: dict,
+             out_h: jnp.ndarray, impl: str) -> jnp.ndarray:
+    """The packed O projection: attention heads (B, T, H, hd) -> residual
+    contribution (B, T, D) via one bucketed SpMV + the static take."""
+    g = sparse["groups"]["attn_out"]
+    gb = bufs["attn_out"]
+    b, t = out_h.shape[0], out_h.shape[1]
+    xt = out_h.reshape(b * t, -1).T.astype(jnp.float32)       # (H*hd, B*T)
+    y = _group_take(gb, _group_apply(g, gb, xt, impl))        # (D, B*T)
+    return y.T.reshape(b, t, -1).astype(out_h.dtype)
+
+
+def _pruned_qkv(cfg: ModelConfig, px: dict, attn_p: dict, hn: jnp.ndarray):
+    """Dense-path QKV from the pruned copies (GEMM prefill, Section
+    III-I): same matrices the packs hold, applied as GEMMs; biases come
+    from the layer params (they are never pruned)."""
+    p = {"wq": px["wq"], "wk": px["wk"], "wv": px["wv"]}
+    for bn in ("bq", "bk", "bv"):
+        if bn in attn_p:
+            p[bn] = attn_p[bn]
+    return T._qkv(cfg, p, hn)
+
+
 def _fused_mlp(cfg: ModelConfig, sparse: dict, bufs: dict, hn: jnp.ndarray,
                impl: str) -> jnp.ndarray:
     """One layer's MLP through the fused packs.
@@ -256,13 +449,14 @@ def _fused_mlp(cfg: ModelConfig, sparse: dict, bufs: dict, hn: jnp.ndarray,
     """
     from repro.models.layers import act_fn
     act = act_fn(cfg.activation)
-    gu, dn = sparse["gateup"], sparse["down"]
+    gu = sparse["groups"]["gateup"]
+    dn = sparse["groups"]["down"]
     b, t = hn.shape[0], hn.shape[1]
     xt = hn.reshape(-1, hn.shape[-1]).T.astype(jnp.float32)   # (in, B*T)
 
     parts = []
-    for g, (buf, rg) in enumerate(zip(bufs["gu"], gu["bucket_rows"])):
-        yp = _bucket_spmv(gu, buf, g, xt, impl)
+    for yp, rg in zip(_group_apply(gu, bufs["gateup"], xt, impl),
+                      gu["bucket_rows"]):
         if sparse["gated"]:
             # gate rows and up rows of the bucket share packed order: the
             # product needs no unscatter (act(0)*0 == 0 on pad rows)
@@ -271,11 +465,9 @@ def _fused_mlp(cfg: ModelConfig, sparse: dict, bufs: dict, hn: jnp.ndarray,
             parts.append(act(yp))
     inter = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
 
-    outs = [_bucket_spmv(dn, buf, g, inter, impl)
-            for g, buf in enumerate(bufs["dn"])]
-    yd = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
-    y = jnp.take(yd, bufs["dn_inv"], axis=0)                  # (d_model, B*T)
-    return y.T.reshape(b, t, -1).astype(hn.dtype)
+    y = _group_take(bufs["down"],
+                    _group_apply(dn, bufs["down"], inter, impl))
+    return y.T.reshape(b, t, -1).astype(hn.dtype)             # (B, T, D)
 
 
 def _pruned_mlp(cfg: ModelConfig, sparse: dict, wl: dict, hn: jnp.ndarray
@@ -291,36 +483,62 @@ def _pruned_mlp(cfg: ModelConfig, sparse: dict, wl: dict, hn: jnp.ndarray
     return L.mlp_relu2(hn, wl["w_up"], wl["w_down"], cfg.activation)
 
 
-def _mlp_xs(sparse: dict, mlp_path: str):
-    """Per-layer MLP inputs threaded through the scan for either path."""
-    if mlp_path == "kernel":
+def _proj_xs(sparse: dict, proj_path: str):
+    """Per-layer projection inputs threaded through the scan: the pack
+    buffers for the kernel path, the pruned dense copies for the GEMM
+    path."""
+    if proj_path == "kernel":
         return _scan_bufs(sparse)
-    if mlp_path != "dense":
-        raise ValueError(f"unknown mlp_path {mlp_path!r}")
-    names = (("w_gate", "w_up", "w_down") if sparse["gated"]
-             else ("w_up", "w_down"))
-    return {n: sparse[f"{n}_pruned"] for n in names}
+    if proj_path != "dense":
+        raise ValueError(f"unknown proj_path {proj_path!r}")
+    return dict(sparse["pruned"])
 
 
 def _layer_stack(cfg: ModelConfig, params: dict, sparse: dict, cache: dict,
-                 h, attn_step, impl: str, unroll: bool,
-                 mlp_path: str = "kernel"):
+                 h, attn_step, attn_core, impl: str, unroll: bool,
+                 proj_path: str = "kernel"):
     """Shared layer loop for decode/prefill: scan by default; ``unroll``
-    keeps the per-layer Python loop as the parity reference."""
+    keeps the per-layer Python loop as the parity reference.
+
+    ``attn_step`` is the whole-attention closure used when the sparse
+    dict does not cover attention (dense weights from the layer params);
+    ``attn_core`` is the projection-free middle (RoPE + cache +
+    attention) wrapped by the packed QKV / O groups when it does.  The
+    MLP is symmetric: uncovered (``projections="attn"``) it runs dense
+    from the layer params on both proj paths.
+    """
+    attn_sparse = sparse.get("attn_sparse", False)
+    mlp_sparse = sparse.get("mlp_sparse", "gateup" in sparse["groups"])
 
     def body(h, xs):
-        lp, kc, vc, mx = xs
-        a, kc, vc, _, _ = attn_step(lp, T._norm(cfg, lp["ln1"], h), kc, vc)
+        lp, kc, vc, px = xs
+        hn = T._norm(cfg, lp["ln1"], h)
+        if attn_sparse:
+            if proj_path == "kernel":
+                q, k, v = _fused_qkv(cfg, sparse, px, lp["attn"], hn, impl)
+            else:
+                q, k, v = _pruned_qkv(cfg, px, lp["attn"], hn)
+            a_h, kc, vc = attn_core(q, k, v, kc, vc)
+            if proj_path == "kernel":
+                a = _fused_o(cfg, sparse, px, a_h, impl)
+            else:
+                from repro.models import layers as L
+                b, t = hn.shape[0], hn.shape[1]
+                a = L.dense(a_h.reshape(b, t, -1), px["wo"])
+        else:
+            a, kc, vc, _, _ = attn_step(lp, hn, kc, vc)
         h = h + a
         hn = T._norm(cfg, lp["ln2"], h)
-        if mlp_path == "kernel":
-            h = h + _fused_mlp(cfg, sparse, mx, hn, impl)
+        if not mlp_sparse:
+            h = h + T.mlp_apply(cfg, lp["mlp"], hn)
+        elif proj_path == "kernel":
+            h = h + _fused_mlp(cfg, sparse, px, hn, impl)
         else:
-            h = h + _pruned_mlp(cfg, sparse, mx, hn)
+            h = h + _pruned_mlp(cfg, sparse, px, hn)
         return h, (kc, vc)
 
     xs = (params["layers"], cache["k"], cache["v"],
-          _mlp_xs(sparse, mlp_path))
+          _proj_xs(sparse, proj_path))
     if unroll:
         k_new, v_new = [], []
         for i in range(cfg.n_layers):
@@ -335,15 +553,23 @@ def _layer_stack(cfg: ModelConfig, params: dict, sparse: dict, cache: dict,
 def decode_step_sparse(cfg: ModelConfig, params: dict, sparse: dict,
                        cache: dict, batch: dict, impl: str = "ref",
                        unroll: bool = False):
-    """transformer.decode_step with ESPIM-format MLPs (dense attention)."""
+    """transformer.decode_step with ESPIM-format projections — every
+    per-token MV runs through the packed kernels when ``sparse`` covers
+    the whole layer (``sparsify_model``), or just the MLPs when it was
+    built by the ``sparsify_mlps`` preset (dense attention)."""
     tokens = batch["tokens"]
     h = T.embed_tokens(cfg, params, tokens)
 
     def attn_step(lp, hn, kc, vc):
         return T.attn_decode_apply(cfg, lp["attn"], hn, kc, vc, cache["len"])
 
+    def attn_core(q, k, v, kc, vc):
+        out, kc, vc, _, _ = T.attn_decode_core(cfg, q, k, v, kc, vc,
+                                               cache["len"])
+        return out, kc, vc
+
     h, k_new, v_new = _layer_stack(cfg, params, sparse, cache, h, attn_step,
-                                   impl, unroll)
+                                   attn_core, impl, unroll)
     logits = T.logits_from_hidden(cfg, params, h)
     new_cache = {"k": k_new, "v": v_new, "len": cache["len"] + 1}
     return logits, new_cache
@@ -351,15 +577,16 @@ def decode_step_sparse(cfg: ModelConfig, params: dict, sparse: dict,
 
 def prefill_chunk_sparse(cfg: ModelConfig, params: dict, sparse: dict,
                          cache: dict, batch: dict, impl: str = "ref",
-                         unroll: bool = False, mlp_path: str = "dense"):
-    """transformer.prefill_chunk for the ESPIM-format engine (dense
-    attention): a C-token chunk lands at cache["len"]..  Same contract as
+                         unroll: bool = False, proj_path: str = "dense"):
+    """transformer.prefill_chunk for the ESPIM-format engine: a C-token
+    chunk lands at cache["len"]..  Same contract as
     ``factory.prefill_chunk``.
 
-    ``mlp_path`` picks the projection datapath — the paper's flexible
+    ``proj_path`` picks the projection datapath — the paper's flexible
     dense/sparse configuration (Section III-I) applied per serving phase:
     ``"dense"`` (default) runs the GEMM-shaped chunk through the pruned
-    dense copies (bit-identical matrices, compute-bound phase);
+    dense copies (bit-identical matrices, compute-bound phase) for every
+    covered projection — attention included when the group set covers it;
     ``"kernel"`` feeds the fused packs with B*C columns (the MV datapath,
     used by the parity tests and on PIM-like backends)."""
     tokens = batch["tokens"]
@@ -372,8 +599,13 @@ def prefill_chunk_sparse(cfg: ModelConfig, params: dict, sparse: dict,
     def attn_step(lp, hn, kc, vc):
         return T.attn_prefill_apply(cfg, lp["attn"], hn, kc, vc, start)
 
+    def attn_core(q, k, v, kc, vc):
+        out, kc, vc, _, _ = T.attn_prefill_core(cfg, q, k, v, kc, vc, start)
+        return out, kc, vc
+
     h, k_new, v_new = _layer_stack(cfg, params, sparse, cache, h, attn_step,
-                                   impl, unroll, mlp_path=mlp_path)
+                                   attn_core, impl, unroll,
+                                   proj_path=proj_path)
     logits = T.logits_from_hidden(cfg, params, h)
     new_cache = {"k": k_new, "v": v_new, "len": start + n_valid}
     return logits, new_cache
@@ -426,55 +658,73 @@ def _pack_stats(p: dict) -> dict:
     }
 
 
-def sparse_stats(sparse: dict) -> dict:
-    """Aggregate + per-projection + per-layer padding AND byte-plane stats.
+def _proj_stats(g: dict, group_stats: dict, proj: str) -> dict:
+    """Per-projection stats inside a group.  nnz and padded slots are
+    exact (the balance perm scatters a projection's rows across width
+    buckets — ``projection_padded_slots`` walks ``inv_perm``); the
+    quantized value plane is attributed by padded-slot share (scale
+    groups can straddle projections)."""
+    n_layers = len(g["nnz_per_layer"])
+    nnz_l = g["proj_nnz"][proj]
+    padded_l = g["proj_padded"][proj]
+    nnz, padded = int(nnz_l.sum()), int(padded_l.sum())
+    share = padded / max(1, g["padded_per_layer"] * n_layers)
+    vbytes = (int(round(group_stats["value_plane_bytes"] * share))
+              if g["qplanes"] is not None else 4 * padded)
+    return {
+        "nnz": nnz,
+        "padded_slots": padded,
+        "pad_frac": 1 - nnz / max(1, padded),
+        "pad_frac_per_layer": [1 - int(n) / max(1, int(p))
+                               for n, p in zip(nnz_l, padded_l)],
+        "value_plane_bytes": vbytes,
+        "index_plane_bytes": 4 * padded,
+        "bits_per_nnz": 8.0 * vbytes / max(1, nnz),
+    }
 
-    The fused gateup pack reports per-half (per-projection) nnz under the
-    original projection names; padding (and the value/index planes) is a
-    property of the fused pack, so per-projection figures split the fused
-    pack's slots evenly between the halves (they share every bucket
-    width).  ``value_plane_bytes`` / ``index_plane_bytes`` /
-    ``bits_per_nnz`` report the stored (possibly quantized) format — the
-    bytes a decode token streams across the pin per layer/projection."""
-    gu, dn = sparse["gateup"], sparse["down"]
-    n_layers = len(gu["nnz_per_layer"])
-    out = {"quant": sparse.get("quant", "none"),
-           "gateup": _pack_stats(gu), "down": _pack_stats(dn)}
-    half_names = ("w_gate", "w_up") if sparse["gated"] else ("w_up",)
-    half_padded = gu["padded_per_layer"] * n_layers // gu["halves"]
-    for h, name in enumerate(half_names):
-        nnz_h = int(gu["nnz_per_half"][h].sum())
-        out[name] = {
-            "nnz": nnz_h,
-            "padded_slots": half_padded,
-            "pad_frac": 1 - nnz_h / half_padded,
-            "pad_frac_per_layer": [
-                1 - int(n) / (gu["padded_per_layer"] // gu["halves"])
-                for n in gu["nnz_per_half"][h]
-            ],
-            "value_plane_bytes": out["gateup"]["value_plane_bytes"]
-            // gu["halves"],
-            "index_plane_bytes": out["gateup"]["index_plane_bytes"]
-            // gu["halves"],
-            "bits_per_nnz": 8.0 * (out["gateup"]["value_plane_bytes"]
-                                   / gu["halves"]) / max(1, nnz_h),
-        }
-    out["w_down"] = dict(out["down"])
-    total_nnz = gu["nnz"] + dn["nnz"]
-    total_padded = (gu["padded_per_layer"] + dn["padded_per_layer"]) * n_layers
-    total_value = (out["gateup"]["value_plane_bytes"]
-                   + out["down"]["value_plane_bytes"])
-    total_index = (out["gateup"]["index_plane_bytes"]
-                   + out["down"]["index_plane_bytes"])
+
+def sparse_stats(sparse: dict) -> dict:
+    """Aggregate + per-group + per-projection + per-layer padding AND
+    byte-plane stats for every compiled pack group.
+
+    Group entries carry the pack-level figures (padding is a property of
+    the fused pack); each projection additionally reports its own exact
+    nnz/padded split under its original name (``w_gate``, ``wq``, ...).
+    ``value_plane_bytes`` / ``index_plane_bytes`` / ``bits_per_nnz``
+    report the stored (possibly quantized) format — the bytes a decode
+    token streams across the pin per layer/projection.
+
+    ``total.bytes_per_token`` is the WHOLE-MODEL per-token projection
+    traffic: the packed planes plus the dense bytes of every standard
+    decoder projection the group set does not cover
+    (``dense_proj_bytes_per_token`` — attention, in an MLP-only
+    deployment).  Before PR 5 this silently reported the MLP-only packed
+    totals as if they were the model."""
+    out: dict = {"quant": sparse.get("quant", "none"),
+                 "attn_sparse": sparse.get("attn_sparse", False)}
+    tot_nnz = tot_padded = tot_value = tot_index = 0
+    for name, g in sparse["groups"].items():
+        gs = _pack_stats(g)
+        out[name] = gs
+        for proj in g["projections"]:
+            out[proj] = _proj_stats(g, gs, proj)
+        n_layers = len(g["nnz_per_layer"])
+        tot_nnz += g["nnz"]
+        tot_padded += g["padded_per_layer"] * n_layers
+        tot_value += gs["value_plane_bytes"]
+        tot_index += gs["index_plane_bytes"]
+    dense_bytes = int(sparse.get("dense_proj_bytes", 0))
     out["total"] = {
-        "nnz": int(total_nnz),
-        "padded_slots": int(total_padded),
-        "pad_frac": 1 - total_nnz / total_padded,
-        "value_plane_bytes": int(total_value),
-        "index_plane_bytes": int(total_index),
-        "bits_per_nnz": 8.0 * total_value / max(1, total_nnz),
-        # every decode token streams each layer's planes once: the
-        # weight-side bytes-moved-per-token the serve bench records
-        "bytes_per_token": int(total_value + total_index),
+        "nnz": int(tot_nnz),
+        "padded_slots": int(tot_padded),
+        "pad_frac": 1 - tot_nnz / max(1, tot_padded),
+        "value_plane_bytes": int(tot_value),
+        "index_plane_bytes": int(tot_index),
+        "bits_per_nnz": 8.0 * tot_value / max(1, tot_nnz),
+        # every decode token streams each layer's planes once — plus the
+        # dense weights of any projection left outside the group set
+        "packed_bytes_per_token": int(tot_value + tot_index),
+        "dense_proj_bytes_per_token": dense_bytes,
+        "bytes_per_token": int(tot_value + tot_index + dense_bytes),
     }
     return out

@@ -80,14 +80,18 @@ def _interpret() -> bool:
     return not on_tpu()
 
 
-def provenance(impl: str | None = None, quant: str | None = None) -> dict:
+def provenance(impl: str | None = None, quant: str | None = None,
+               attn: str | None = None) -> dict:
     """Where a kernel call would run right now — recorded by the benches
     so BENCH_*.json results carry their backend/impl context.  ``quant``
-    names the value-plane encoding the caller is timing (none/int8/int4)."""
+    names the value-plane encoding the caller is timing (none/int8/int4);
+    ``attn`` names the attention projection datapath (dense = MLP-only
+    packs, sparse = whole-layer fused QKV + O packs, sweep = both)."""
     return {
         "backend": jax.default_backend(),
         "impl": _resolve(impl),
         "quant": quant or "none",
+        "attn": attn or "dense",
         "pallas_interpret": _interpret(),
         "env": {ENV_IMPL: os.environ.get(ENV_IMPL) or None,
                 ENV_INTERPRET: os.environ.get(ENV_INTERPRET) or None},

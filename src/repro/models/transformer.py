@@ -19,7 +19,8 @@ from repro.models import layers as L
 __all__ = [
     "init_params", "forward", "init_cache", "decode_step", "prefill_chunk",
     "init_attn_layer", "attn_apply", "attn_decode_apply",
-    "attn_prefill_apply", "splice_rows",
+    "attn_decode_core", "attn_prefill_apply", "attn_prefill_core",
+    "splice_rows",
     "init_mlp_layer", "mlp_apply", "remat_wrap", "stack_layer_init",
     "embed_tokens", "logits_from_hidden",
 ]
@@ -94,17 +95,18 @@ def _quantize_kv(x):
     return q, scale.astype(jnp.bfloat16)
 
 
-def attn_decode_apply(cfg: ModelConfig, p, x, k_cache, v_cache, cache_len,
-                      positions3=None, k_scale=None, v_scale=None):
-    """One-token decode: update caches at ``cache_len``, attend over cache.
+def attn_decode_core(cfg: ModelConfig, q, k, v, k_cache, v_cache, cache_len,
+                     positions3=None, k_scale=None, v_scale=None):
+    """RoPE + cache update + attention for one decode token, on
+    *precomputed* q/k/v heads — the projection-agnostic middle of the
+    attention step, shared by the dense path (``attn_decode_apply``) and
+    the ESPIM packed-QKV path (``sparse_model``), which computes q/k/v
+    through the fused QKV pack and applies the O projection itself.
 
-    x: (B, 1, D); k/v_cache: (B, S_max, KV, hd); cache_len: (B,) int32.
-    With an int8 cache, (B, S_max, KV) scales ride along and fold into
-    scores/probs exactly (hillclimb iter 6).
-    Returns (out (B,1,D), k_cache, v_cache[, k_scale, v_scale]).
+    q: (B, 1, H, hd); k/v: (B, 1, KV, hd); caches (B, S_max, KV, hd).
+    Returns (out (B, 1, H, hd) — pre-O-projection, k_cache, v_cache,
+    k_scale, v_scale).
     """
-    b = x.shape[0]
-    q, k, v = _qkv(cfg, p, x)
     pos = cache_len.astype(jnp.int32)
     if cfg.mrope and positions3 is not None:
         q, k = L.apply_mrope(q, k, positions3, cfg.rope_theta)
@@ -131,6 +133,23 @@ def attn_decode_apply(cfg: ModelConfig, p, x, k_cache, v_cache, cache_len,
         v_cache = jnp.where(at_pos, v.astype(v_cache.dtype), v_cache)
     out = L.attention_decode(q, k_cache, v_cache, pos + 1,
                              k_scale=k_scale, v_scale=v_scale)
+    return out, k_cache, v_cache, k_scale, v_scale
+
+
+def attn_decode_apply(cfg: ModelConfig, p, x, k_cache, v_cache, cache_len,
+                      positions3=None, k_scale=None, v_scale=None):
+    """One-token decode: update caches at ``cache_len``, attend over cache.
+
+    x: (B, 1, D); k/v_cache: (B, S_max, KV, hd); cache_len: (B,) int32.
+    With an int8 cache, (B, S_max, KV) scales ride along and fold into
+    scores/probs exactly (hillclimb iter 6).
+    Returns (out (B,1,D), k_cache, v_cache[, k_scale, v_scale]).
+    """
+    b = x.shape[0]
+    q, k, v = _qkv(cfg, p, x)
+    out, k_cache, v_cache, k_scale, v_scale = attn_decode_core(
+        cfg, q, k, v, k_cache, v_cache, cache_len, positions3=positions3,
+        k_scale=k_scale, v_scale=v_scale)
     out = L.dense(out.reshape(b, 1, cfg.n_heads * cfg.hd), p["wo"])
     return out, k_cache, v_cache, k_scale, v_scale
 
@@ -154,19 +173,16 @@ def splice_rows(cache, rows, start):
                      cache)
 
 
-def attn_prefill_apply(cfg: ModelConfig, p, x, k_cache, v_cache, start,
-                       positions3=None, k_scale=None, v_scale=None):
-    """Chunked prefill: C tokens at absolute positions start..start+C-1.
+def attn_prefill_core(cfg: ModelConfig, q, k, v, k_cache, v_cache, start,
+                      positions3=None, k_scale=None, v_scale=None):
+    """RoPE + cache splice + attention for a prefill chunk on precomputed
+    q/k/v heads — the prefill twin of ``attn_decode_core`` (same contract:
+    the caller owns the QKV and O projections).
 
-    x: (B, C, D); k/v_cache: (B, S_max, KV, hd); start: (B,) int32.  The
-    chunk's K/V are spliced into the caches and the chunk attends causally
-    over the whole cache (earlier chunks included).  Trailing pad tokens of
-    a partial final chunk write rows past the valid length — harmless: the
-    causal mask hides them from valid queries and the engine drops them at
-    page-splice time.  Returns (out (B, C, D), caches[, scales]).
+    q: (B, C, H, hd); k/v: (B, C, KV, hd); start: (B,) int32.  Returns
+    (out (B, C, H, hd) — pre-O-projection, caches, scales).
     """
-    b, c, _ = x.shape
-    q, k, v = _qkv(cfg, p, x)
+    c = q.shape[1]
     pos = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
     if cfg.mrope and positions3 is not None:
         q, k = L.apply_mrope(q, k, positions3, cfg.rope_theta)
@@ -184,6 +200,25 @@ def attn_prefill_apply(cfg: ModelConfig, p, x, k_cache, v_cache, start,
         v_cache = splice_rows(v_cache, v.astype(v_cache.dtype), start)
     out = L.attention_prefill(q, k_cache, v_cache, pos,
                               k_scale=k_scale, v_scale=v_scale)
+    return out, k_cache, v_cache, k_scale, v_scale
+
+
+def attn_prefill_apply(cfg: ModelConfig, p, x, k_cache, v_cache, start,
+                       positions3=None, k_scale=None, v_scale=None):
+    """Chunked prefill: C tokens at absolute positions start..start+C-1.
+
+    x: (B, C, D); k/v_cache: (B, S_max, KV, hd); start: (B,) int32.  The
+    chunk's K/V are spliced into the caches and the chunk attends causally
+    over the whole cache (earlier chunks included).  Trailing pad tokens of
+    a partial final chunk write rows past the valid length — harmless: the
+    causal mask hides them from valid queries and the engine drops them at
+    page-splice time.  Returns (out (B, C, D), caches[, scales]).
+    """
+    b, c, _ = x.shape
+    q, k, v = _qkv(cfg, p, x)
+    out, k_cache, v_cache, k_scale, v_scale = attn_prefill_core(
+        cfg, q, k, v, k_cache, v_cache, start, positions3=positions3,
+        k_scale=k_scale, v_scale=v_scale)
     out = L.dense(out.reshape(b, c, cfg.n_heads * cfg.hd), p["wo"])
     return out, k_cache, v_cache, k_scale, v_scale
 

@@ -10,10 +10,12 @@ sequences return their blocks to the pool; queued requests are admitted
 only once their worst-case block count is reservable, so the arena can
 never deadlock mid-flight.
 
-Pass ``sparse`` (from ``sparsify_mlps``) to serve from the ESPIM
-column-chunked format: decode ticks run the MLP projections through the
-fused batched SpMV across all active slots at once, and prefill chunks
-feed the same kernel with B*chunk columns — the batched kernel IS the
+Pass ``sparse`` (from ``sparsify_model`` — whole decoder layer: fused
+QKV + O + gate/up/down pack groups; or the ``sparsify_mlps`` MLP-only
+preset) to serve from the ESPIM column-chunked format: decode ticks run
+every covered projection through the fused batched SpMV across all
+active slots at once, and prefill chunks run the same pruned matrices as
+GEMMs (Section III-I per phase) — the batched kernel IS the
 continuous-batching hot path (the paper's deployment: decode from the
 compressed format).
 

@@ -10,9 +10,10 @@ would put it — see the per-family ``prefill_chunk`` docstrings).
 
 The ESPIM engine applies the paper's flexible dense/sparse datapath
 (Section III-I) per serving phase: the GEMM-shaped prefill chunk runs the
-pruned *dense* copies (identical matrices, compute-bound phase), while
-decode runs the packed MV kernels (memory-bound phase, the format's whole
-point) — see DESIGN.md section 8.
+pruned *dense* copies of every covered projection — attention included
+when the pack groups cover the whole layer (``sparsify_model``) —
+while decode runs the packed MV kernels (memory-bound phase, the
+format's whole point) — see DESIGN.md sections 8/10.
 
 Each slot prefills into a private (B=1) scratch cache; after every chunk
 the freshly written K/V rows are sliced out for the engine to splice into

@@ -59,13 +59,15 @@ def serve_step_fn(cfg: ModelConfig, params, cache: dict, batch: dict,
 def serve_step_sparse_fn(cfg: ModelConfig, params, sparse: dict,
                          cache: dict, batch: dict,
                          temperature: float = 0.0, impl: str = "ref"):
-    """ESPIM-format decode step: one scanned layer stack whose MLPs run
-    from the width-bucketed packs through the fused gate+up SpMV, the
-    packed-order product, and the perm-folded down projection (``sparse``
-    from ``sparsify_mlps`` — DESIGN.md section 8).  When the packs were
-    built with ``quant="int8"|"int4"`` the same scan consumes the
-    quantized value planes (codes + per-row-group scale leaves) through
-    the quantized kernels — section 9.
+    """ESPIM-format decode step: one scanned layer stack whose covered
+    projections run from the width-bucketed pack groups — the fused QKV
+    launch + static take, the packed O projection, the fused gate+up
+    SpMV with its packed-order product, and the perm-composed down
+    projection (``sparse`` from ``sparsify_model``; the
+    ``sparsify_mlps`` preset keeps attention dense — DESIGN.md sections
+    8/10).  When the packs were built with ``quant="int8"|"int4"`` the
+    same scan consumes the quantized value planes (codes + per-row-group
+    scale leaves) through the quantized kernels — section 9.
 
     Same contract as ``serve_step_fn``: (next_tokens, logits, new_cache).
     """

@@ -22,7 +22,8 @@ from repro.configs.base import ModelConfig, ShapeConfig
 
 __all__ = [
     "batch_axes", "mesh_axis_size", "param_pspecs", "batch_pspecs",
-    "cache_pspecs", "paged_cache_pspecs", "named", "logical_to_sharding",
+    "cache_pspecs", "paged_cache_pspecs", "sparse_pack_pspecs", "named",
+    "logical_to_sharding",
 ]
 
 
@@ -231,6 +232,40 @@ def paged_cache_pspecs(pages_tree, mesh: Mesh):
         return P(*axes)
 
     return jax.tree_util.tree_map(leaf_spec, pages_tree)
+
+
+def sparse_pack_pspecs(sparse: dict, mesh: Mesh):
+    """PartitionSpecs for the device arrays of a ``sparsify_model`` dict.
+
+    The packed-row dim is the paper's bank dim: each device holds a
+    contiguous packed row range of every bucket (values/codes, cols and
+    the per-row ``srow`` scales shard together on it, when divisible by
+    'model'), the dense activation stays replicated (the ICI broadcast),
+    and the per-bucket SpMV runs bank-local.  ``perm``/``inv_perm`` are
+    replicated — the static output ``take`` is a cross-bank gather the
+    compiler lays out.  Layer-stack and chunk dims are never split (the
+    scan slices the former; a chunk is one VMEM slab).
+
+    Returns ``{group: {"buckets": [...], "perm": P, "inv_perm": P}}``
+    matching the jnp leaves of ``sparse["groups"]``.
+    """
+    def bucket_spec(b):
+        out = {}
+        for key in ("values", "q", "cols", "srow"):
+            if key in b:
+                shape = b[key].shape
+                axes = (None, _fit(mesh, shape[1], "model"))
+                out[key] = P(*axes, *(None,) * (len(shape) - 2))
+        return out
+
+    return {
+        name: {
+            "buckets": [bucket_spec(b) for b in g["buckets"]],
+            "perm": P(None, None),
+            "inv_perm": P(None, None),
+        }
+        for name, g in sparse["groups"].items()
+    }
 
 
 def named(mesh: Mesh, spec_tree):

@@ -65,9 +65,9 @@ def test_scanned_prefill_matches_python_loop():
     cache_s = factory.init_cache(cfg, 1, 8)
     cache_u = factory.init_cache(cfg, 1, 8)
     lg_s, _ = prefill_chunk_sparse(cfg, params, sparse, cache_s, batch,
-                                   mlp_path="kernel")
+                                   proj_path="kernel")
     lg_u, _ = prefill_chunk_sparse(cfg, params, sparse, cache_u, batch,
-                                   mlp_path="kernel", unroll=True)
+                                   proj_path="kernel", unroll=True)
     np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_u),
                                rtol=1e-5, atol=1e-5)
 
@@ -244,9 +244,9 @@ def test_prefill_dense_path_matches_kernel_path():
     cache_d = factory.init_cache(cfg, 2, 6)
     cache_k = factory.init_cache(cfg, 2, 6)
     lg_d, _ = prefill_chunk_sparse(cfg, params, sparse, cache_d, batch,
-                                   mlp_path="dense")
+                                   proj_path="dense")
     lg_k, _ = prefill_chunk_sparse(cfg, params, sparse, cache_k, batch,
-                                   mlp_path="kernel")
+                                   proj_path="kernel")
     err = float(jnp.abs(lg_d - lg_k).max() / jnp.abs(lg_d).max())
     assert err < 5e-5, err
 

@@ -119,3 +119,39 @@ def test_pod_axis_composes():
     specs = partition.batch_pspecs(b, mesh3)
     assert tuple(specs["tokens"])[0] == ("pod", "data")
     assert partition.mesh_axis_size(mesh3, ("pod", "data")) == 4
+
+
+def test_sparse_pack_pspecs_shard_packed_rows():
+    """Pack-group device arrays: packed-row dim -> 'model' when divisible
+    (devices as banks), perms replicated, layer/chunk dims never split."""
+    from repro.core.sparse_model import sparsify_model
+    from repro.models import factory
+
+    cfg = get_config("llama7b-espim", reduced=True)
+    params = factory.init_params(cfg, jax.random.PRNGKey(0))
+    sparse = sparsify_model(cfg, params, 0.9, projections="all",
+                            row_tile=32)
+    specs = partition.sparse_pack_pspecs(sparse, MESH)
+    assert set(specs) == set(sparse["groups"])
+    for name, g in sparse["groups"].items():
+        gs = specs[name]
+        assert gs["perm"] == jax.sharding.PartitionSpec(None, None)
+        assert len(gs["buckets"]) == len(g["buckets"])
+        for b, bs in zip(g["buckets"], gs["buckets"]):
+            for key, spec in bs.items():
+                arr = b[key]
+                assert len(spec) == arr.ndim
+                assert spec[0] is None          # layer-stack dim: the scan
+                row_ax = spec[1]
+                assert row_ax in (None, "model")
+                if row_ax == "model":
+                    assert arr.shape[1] % partition.mesh_axis_size(
+                        MESH, "model") == 0
+                assert all(a is None for a in spec[2:])  # chunk/width dims
+    # quantized packs: srow scales shard with their rows
+    sq = sparsify_model(cfg, params, 0.9, projections="mlp", row_tile=32,
+                        quant="int8")
+    qspecs = partition.sparse_pack_pspecs(sq, MESH)
+    for name, g in sq["groups"].items():
+        for b, bs in zip(g["buckets"], qspecs[name]["buckets"]):
+            assert set(bs) == {"q", "cols", "srow"}

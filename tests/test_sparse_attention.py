@@ -1,0 +1,292 @@
+"""Whole-decoder-layer sparsification (PR 5): the projection-generic
+pack-group pipeline covering attention.
+
+The load-bearing property is RoPE/KV correctness under *permuted* QKV
+packs: the fused QKV group computes q/k/v in packed row order and a
+single static ``take`` must restore exactly the logical head rows the
+dense path produces — RoPE pairs head dims positionally and the KV cache
+stores logical rows — before the shared ``attn_decode_core`` /
+``attn_prefill_core`` run.  Everything here checks that contract end to
+end: per-step logits AND cache parity vs dense decode over the pruned
+copies, greedy-token parity of the fully-sparse serving engine (fp and
+int8) vs the dense engine, non-gated and GQA+bias configs through
+``sparsify_model``, the group-spec fold/compose validation, and the
+stats honesty rules (whole-model bytes/token includes dense attention
+when attention is NOT packed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.sdds import (PackGroupSpec, decoder_layer_groups,
+                             validate_group_specs)
+from repro.core.sparse_model import (decode_step_sparse,
+                                     prefill_chunk_sparse,
+                                     pruned_param_tree, sparse_stats,
+                                     sparsify_mlps, sparsify_model)
+from repro.models import factory
+from repro.serve.engine import Request, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch="llama7b-espim", sparsity=0.9, **kw):
+    cfg = get_config(arch, reduced=True)
+    params = factory.init_params(cfg, KEY)
+    sparse = sparsify_model(cfg, params, sparsity, **kw)
+    return cfg, params, sparse
+
+
+# --------------------------------------------------------------------------
+# 1) RoPE/KV correctness under permuted QKV packs: per-step logits AND
+#    cache parity vs dense decode over the pruned copies
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["llama7b-espim", "nemotron-4-15b",
+                                  "qwen2.5-14b"])
+def test_whole_layer_decode_matches_pruned_dense(arch):
+    """llama: gated MHA; nemotron: non-gated GQA (relu^2); qwen2.5: GQA
+    with QKV bias — the bias rides post-take, never packed."""
+    cfg, params, sparse = _setup(arch, row_tile=32)
+    assert sparse["attn_sparse"]
+    assert set(sparse["groups"]) == {"qkv", "attn_out", "gateup", "down"}
+    pruned = pruned_param_tree(params, sparse)
+
+    B, S = 2, 5
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    cache_d = factory.init_cache(cfg, B, S + 2)
+    cache_s = factory.init_cache(cfg, B, S + 2)
+    dec_d = jax.jit(lambda p, c, b: factory.decode_step(cfg, p, c, b))
+    dec_s = jax.jit(lambda p, c, b: decode_step_sparse(cfg, p, sparse,
+                                                       c, b))
+    for i in range(S):
+        batch = {"tokens": toks[:, i:i + 1]}
+        lg_d, cache_d = dec_d(pruned, cache_d, batch)
+        lg_s, cache_s = dec_s(params, cache_s, batch)
+        err = float(jnp.abs(lg_d - lg_s).max() / jnp.abs(lg_d).max())
+        assert err < 5e-4, (arch, i, err)
+    # the KV caches must agree ROW FOR ROW: a permuted-order k/v write
+    # (missing take, wrong RoPE pairing) corrupts them even when early
+    # logits look fine
+    for name in ("k", "v"):
+        np.testing.assert_allclose(np.asarray(cache_d[name]),
+                                   np.asarray(cache_s[name]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_attn_only_preset_decode_matches_pruned_dense():
+    """projections="attn": q/k/v/o packed, MLP dense from the layer
+    params — the uncovered side of the group set must fall back, not
+    assume packs exist."""
+    cfg, params, sparse = _setup(projections="attn", row_tile=32)
+    assert sparse["attn_sparse"] and not sparse["mlp_sparse"]
+    assert set(sparse["groups"]) == {"qkv", "attn_out"}
+    pruned = pruned_param_tree(params, sparse)     # only attn copies swap in
+    toks = jax.random.randint(KEY, (2, 1), 0, cfg.vocab_size)
+    cache_d = factory.init_cache(cfg, 2, 4)
+    cache_s = factory.init_cache(cfg, 2, 4)
+    lg_d, _ = factory.decode_step(cfg, pruned, cache_d, {"tokens": toks})
+    lg_s, _ = decode_step_sparse(cfg, params, sparse, cache_s,
+                                 {"tokens": toks})
+    err = float(jnp.abs(lg_d - lg_s).max() / jnp.abs(lg_d).max())
+    assert err < 5e-4, err
+    # prefill dense path: packed attention GEMMs from pruned copies, MLP
+    # from the layer params
+    batch = {"tokens": jax.random.randint(KEY, (1, 3), 0, cfg.vocab_size),
+             "n_valid": jnp.asarray([3], jnp.int32)}
+    c1 = factory.init_cache(cfg, 1, 4)
+    lg_p, _ = prefill_chunk_sparse(cfg, params, sparse, c1, batch,
+                                   proj_path="dense")
+    assert np.isfinite(np.asarray(lg_p)).all()
+    # the uncovered MLP bytes are charged as dense projection traffic
+    st = sparse_stats(sparse)
+    mlp = params["layers"]["mlp"]
+    mlp_bytes = sum(int(np.size(mlp[n])) * mlp[n].dtype.itemsize
+                    for n in mlp)
+    assert st["total"]["dense_proj_bytes_per_token"] == mlp_bytes
+
+
+def test_whole_layer_prefill_dense_matches_kernel_path():
+    """Section III-I per phase, now covering attention: the GEMM chunk
+    over the pruned copies == the packed-kernel chunk."""
+    cfg, params, sparse = _setup()
+    toks = jax.random.randint(KEY, (2, 4), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "n_valid": jnp.asarray([4, 4], jnp.int32)}
+    cache_d = factory.init_cache(cfg, 2, 6)
+    cache_k = factory.init_cache(cfg, 2, 6)
+    lg_d, cd = prefill_chunk_sparse(cfg, params, sparse, cache_d, batch,
+                                    proj_path="dense")
+    lg_k, ck = prefill_chunk_sparse(cfg, params, sparse, cache_k, batch,
+                                    proj_path="kernel")
+    err = float(jnp.abs(lg_d - lg_k).max() / jnp.abs(lg_d).max())
+    assert err < 5e-5, err
+    np.testing.assert_allclose(np.asarray(cd["k"]), np.asarray(ck["k"]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_scanned_whole_layer_matches_python_loop():
+    cfg, params, sparse = _setup()
+    toks = jax.random.randint(KEY, (2, 1), 0, cfg.vocab_size)
+    cache_s = factory.init_cache(cfg, 2, 3)
+    cache_u = factory.init_cache(cfg, 2, 3)
+    lg_s, _ = decode_step_sparse(cfg, params, sparse, cache_s,
+                                 {"tokens": toks})
+    lg_u, _ = decode_step_sparse(cfg, params, sparse, cache_u,
+                                 {"tokens": toks}, unroll=True)
+    np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_u),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# 2) acceptance: greedy-token parity of the fully-sparse engine vs the
+#    dense engine on the pruned copies (fp and int8)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("quant", [None, "int8"])
+def test_engine_greedy_parity_fully_sparse(quant):
+    cfg, params, sparse = _setup(quant=quant)
+    pruned = pruned_param_tree(params, sparse)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+               for n in (3, 17, 9, 30)]
+    outs = {}
+    for label, p, sp in (("dense", pruned, None), ("sparse", params,
+                                                   sparse)):
+        eng = ServeEngine(cfg, p, batch_slots=2, max_len=64, sparse=sp,
+                          paged=True, block_size=8, prefill_chunk=8)
+        reqs = [Request(rid=i, prompt=pr, max_new_tokens=8)
+                for i, pr in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        outs[label] = [r.output for r in reqs]
+    assert outs["dense"] == outs["sparse"], quant
+
+
+# --------------------------------------------------------------------------
+# 3) the group-spec contract (fold/compose validation)
+# --------------------------------------------------------------------------
+def test_group_spec_validation():
+    ok = decoder_layer_groups(gated=True, attn=True)
+    assert [s.name for s in ok] == ["qkv", "attn_out", "gateup", "down"]
+    validate_group_specs(ok)
+
+    with pytest.raises(ValueError, match="duplicate group name"):
+        validate_group_specs([PackGroupSpec("g", ("w_up",)),
+                              PackGroupSpec("g", ("w_down",))])
+    with pytest.raises(ValueError, match="two groups"):
+        validate_group_specs([PackGroupSpec("a", ("w_up",)),
+                              PackGroupSpec("b", ("w_up",))])
+    with pytest.raises(ValueError, match="unknown group"):
+        validate_group_specs([PackGroupSpec("a", ("w_up",),
+                                            compose_with="nope")])
+    # folded output with no composing consumer never returns to logical
+    # order — rejected
+    with pytest.raises(ValueError, match="folded"):
+        validate_group_specs([PackGroupSpec("a", ("w_up",),
+                                            output="folded")])
+    # a take output that a downstream group composes with would be
+    # double-unscattered — rejected
+    with pytest.raises(ValueError, match="take"):
+        validate_group_specs([
+            PackGroupSpec("a", ("w_up",), output="take"),
+            PackGroupSpec("b", ("w_down",), compose_with="a")])
+    with pytest.raises(ValueError, match="compiled earlier"):
+        validate_group_specs([
+            PackGroupSpec("b", ("w_down",), compose_with="a"),
+            PackGroupSpec("a", ("w_up",), output="folded",
+                          compose_with="b")])
+
+
+def test_sparsify_model_rejects_missing_projection():
+    cfg, params, _ = _setup(projections="mlp")
+    bad = (PackGroupSpec("g", ("w_nope",), module="mlp", fuse="halves",
+                         output="take"),)
+    with pytest.raises(ValueError, match="w_nope"):
+        sparsify_model(cfg, params, 0.9, projections=bad)
+
+
+def test_sparsify_model_rejects_non_canonical_runtime_groups():
+    """The fused decode runtime drives each module through canonical
+    group names/projection sets; a custom spec set the runtime cannot
+    serve (or would silently bypass, running attention unpruned while the
+    stats claim it is packed) must fail at BUILD time, not at trace."""
+    cfg, params, _ = _setup(projections="mlp")
+    # attention covered, but under a non-canonical name: would have set
+    # attn_sparse=False and silently served unpruned attention
+    bad_name = (PackGroupSpec("fused_qkv", ("wq", "wk", "wv"),
+                              module="attn"),
+                PackGroupSpec("attn_out", ("wo",), module="attn"))
+    with pytest.raises(ValueError, match="fused decode runtime"):
+        sparsify_model(cfg, params, 0.9, projections=bad_name)
+    # qkv without its attn_out partner: would have crashed at trace time
+    half_attn = (PackGroupSpec("qkv", ("wq", "wk", "wv"), module="attn"),)
+    with pytest.raises(ValueError, match="fused decode runtime"):
+        sparsify_model(cfg, params, 0.9, projections=half_attn)
+    # the canonical explicit list is equivalent to the preset
+    ok = decoder_layer_groups(cfg.gated_mlp, attn=True)
+    sp = sparsify_model(cfg, params, 0.9, projections=ok, row_tile=32)
+    assert sp["attn_sparse"] and sp["mlp_sparse"]
+
+
+# --------------------------------------------------------------------------
+# 4) stats honesty: attention groups covered, per-projection figures,
+#    whole-model bytes/token
+# --------------------------------------------------------------------------
+def test_sparse_stats_cover_attention_groups():
+    cfg, params, sparse = _setup(row_tile=32)
+    st = sparse_stats(sparse)
+    assert st["attn_sparse"] is True
+    for name in ("qkv", "attn_out", "gateup", "down"):
+        assert st[name]["pad_frac"] < 1.0
+        assert len(st[name]["pad_frac_per_layer"]) == cfg.n_layers
+    # per-projection entries under the original names, exact nnz split
+    for proj in ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"):
+        assert st[proj]["nnz"] > 0
+        assert 0.0 <= st[proj]["pad_frac"] < 1.0
+        assert len(st[proj]["pad_frac_per_layer"]) == cfg.n_layers
+    assert (st["wq"]["nnz"] + st["wk"]["nnz"] + st["wv"]["nnz"]
+            == st["qkv"]["nnz"])
+    assert (st["wq"]["padded_slots"] + st["wk"]["padded_slots"]
+            + st["wv"]["padded_slots"] == st["qkv"]["padded_slots"])
+    # everything packed: no dense projection bytes left
+    assert st["total"]["dense_proj_bytes_per_token"] == 0
+    assert (st["total"]["bytes_per_token"]
+            == st["total"]["packed_bytes_per_token"])
+
+
+def test_mlp_only_bytes_per_token_includes_dense_attention():
+    """The pre-PR5 bug: an MLP-only deployment reported its packed bytes
+    as the whole model.  Now the dense q/k/v/o bytes are charged, and the
+    whole-layer deployment's bytes/token sits strictly below."""
+    cfg, params, _ = _setup(projections="mlp")
+    sp_mlp = sparsify_mlps(cfg, params, 0.9, row_tile=32)
+    sp_all = sparsify_model(cfg, params, 0.9, row_tile=32)
+    st_mlp, st_all = sparse_stats(sp_mlp), sparse_stats(sp_all)
+    attn = params["layers"]["attn"]
+    attn_bytes = sum(int(np.size(attn[n])) * attn[n].dtype.itemsize
+                     for n in ("wq", "wk", "wv", "wo"))
+    assert st_mlp["attn_sparse"] is False
+    assert st_mlp["total"]["dense_proj_bytes_per_token"] == attn_bytes
+    assert (st_mlp["total"]["bytes_per_token"]
+            == st_mlp["total"]["packed_bytes_per_token"] + attn_bytes)
+    # packing q/k/v/o at 90% sparsity must strictly shrink the whole-model
+    # per-token traffic (the PR acceptance criterion)
+    assert (st_all["total"]["bytes_per_token"]
+            < st_mlp["total"]["bytes_per_token"])
+
+
+def test_fused_group_linear_matches_per_projection():
+    from repro.core.espim_linear import ESPIMGroupLinear
+    from repro.core.pruning import magnitude_prune
+    rng = np.random.default_rng(7)
+    named = {"wq": rng.standard_normal((96, 120)).astype(np.float32),
+             "wk": rng.standard_normal((48, 120)).astype(np.float32),
+             "wv": rng.standard_normal((48, 120)).astype(np.float32)}
+    group = ESPIMGroupLinear.from_dense(named, prune_sparsity=0.85,
+                                        row_tile=32)
+    x = jnp.asarray(rng.standard_normal((4, 120)), jnp.float32)
+    ys = group(x, impl="ref")
+    for name, w in named.items():
+        want = np.asarray(x) @ magnitude_prune(w, 0.85).T
+        np.testing.assert_allclose(np.asarray(ys[name]), want,
+                                   rtol=1e-4, atol=1e-4)

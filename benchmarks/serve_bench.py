@@ -36,7 +36,16 @@ dense single-stream, when a quantized mode loses to the fp sparse path
 it exists to beat, or when whole-layer sparse loses to MLP-only sparse
 (covering more projections should never cost throughput).
 
+``--fault-drill`` runs the ``serve/faults`` drill instead (one engine
+per fault class vs a no-fault baseline — bit flips rejected at load,
+quarantine -> dense degradation, cancel/OOM/latency/transient recovery)
+and emits its per-class goodput / recovery / leak report; full
+(non-smoke) serving runs also attach the drill under ``fault_drill`` in
+BENCH_serve.json.  Either path asserts ``check_drill`` — the bench fails
+loudly if any fault class could have produced a silent wrong token.
+
 Run:   PYTHONPATH=src:. python benchmarks/serve_bench.py [--smoke]
+Drill: PYTHONPATH=src:. python benchmarks/serve_bench.py --fault-drill [--smoke]
 Smoke: tiny traces + schema assertion (wired into scripts/ci.sh).
 """
 from __future__ import annotations
@@ -54,6 +63,7 @@ from repro.core.sparse_model import sparse_stats, sparsify_model
 from repro.kernels import ops
 from repro.models import factory
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.faults import check_drill, run_fault_drill
 
 ARCH = "llama7b-espim"
 SPARSITY = 0.9
@@ -186,6 +196,26 @@ def bench_ttft(cfg, params, prompt_len, chunk, max_len):
     return out
 
 
+def bench_fault_drill(cfg, params, *, smoke: bool, seed: int) -> dict:
+    """The serve/faults drill at bench scale: fp whole-layer packs carry
+    the runtime faults, an int8 copy aims the value-plane bit flip at the
+    quantized codes.  Returns the drill report plus the pack fingerprints
+    it ran against (the provenance that binds a drill result to the exact
+    planes it exercised)."""
+    sparse = sparsify_model(cfg, params, SPARSITY, projections="all")
+    sparse_q = sparsify_model(cfg, params, SPARSITY, projections="all",
+                              quant="int8")
+    scale = (dict(n_requests=4, max_new_tokens=8) if smoke
+             else dict(n_requests=8, max_new_tokens=16))
+    drill = run_fault_drill(cfg, params, sparse, sparse_alt=sparse_q,
+                            seed=seed, batch_slots=2, max_len=64,
+                            block_size=8, prefill_chunk=8, **scale)
+    drill["packs"] = {"fp": sparse["fingerprint"],
+                      "int8": sparse_q["fingerprint"]}
+    check_drill(drill)
+    return drill
+
+
 def check_schema(doc: dict) -> None:
     assert doc["paged_parity"] is True, "paged/contiguous tokens diverged"
     for scen_name in ("single_stream", "batched"):
@@ -218,6 +248,9 @@ def check_schema(doc: dict) -> None:
     assert doc["modes"] is doc["scenarios"]["single_stream"]["modes"]
     assert "provenance" in doc and "quant" in doc["provenance"]
     assert doc["provenance"]["attn"] == "sweep"
+    assert doc["provenance"]["packs"], "pack fingerprints missing"
+    if "fault_drill" in doc:
+        assert set(doc["fault_drill"]["faults"]), "empty fault drill"
     assert doc["sparse_dense_ratio"] > 0
     t = doc["ttft_improvement"]
     for k in ("prompt_len", "chunk", "speedup", "call_reduction",
@@ -229,6 +262,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace + JSON schema assertion (CI)")
+    ap.add_argument("--fault-drill", action="store_true",
+                    help="run only the fault-injection drill and emit its "
+                    "per-fault-class report (goodput, recovery, leaks)")
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -236,6 +272,36 @@ def main():
     rng = np.random.default_rng(args.seed)
     cfg = get_config(ARCH, reduced=True)
     params = factory.init_params(cfg, jax.random.PRNGKey(0))
+
+    if args.fault_drill:
+        drill = bench_fault_drill(cfg, params, smoke=args.smoke,
+                                  seed=args.seed)
+        doc = {
+            "bench": "serve_fault_drill",
+            "arch": ARCH,
+            "reduced": True,
+            "smoke": args.smoke,
+            "sparsity": SPARSITY,
+            "provenance": ops.provenance(impl="ref", quant="sweep",
+                                         attn="sparse",
+                                         packs=drill["packs"]),
+            "fault_drill": drill,
+        }
+        out = (args.out if args.out != "BENCH_serve.json"
+               else "BENCH_fault_drill.json")
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=2)
+        f_ = drill["faults"]
+        print(f"wrote {out}: all {len(f_)} fault classes within contract "
+              f"(load faults rejected: "
+              f"{sum(r.get('rejected_at_load', False) for r in f_.values())}"
+              f"; nonfinite quarantines "
+              f"{f_['nonfinite_logits']['quarantines']}, degraded-token "
+              f"fraction {f_['nonfinite_logits']['degraded_token_fraction']:.2f}"
+              f"; retries {f_['transient_step_error']['retries']}; watchdog "
+              f"flags {f_['latency_spike']['watchdog_flags']}; leaked blocks "
+              f"{max(r.get('leaked_blocks', 0) for r in f_.values())})")
+        return
 
     if args.smoke:
         slots, max_len, block_size, chunk = 2, 64, 8, 8
@@ -328,8 +394,10 @@ def main():
         "prefill_chunk": chunk,
         "n_requests": len(trace),
         "sparsity": SPARSITY,
-        "provenance": ops.provenance(impl="ref", quant=cfg.espim_quant,
-                                     attn="sweep"),
+        "provenance": ops.provenance(
+            impl="ref", quant=cfg.espim_quant, attn="sweep",
+            packs={label: sp["fingerprint"]
+                   for label, sp in sparses.items() if sp is not None}),
         "scenarios": {"single_stream": single, "batched": batched},
         # headline fields = the single_stream (paper B=1 MV) scenario;
         # "modes" kept as its alias for cross-PR continuity
@@ -348,6 +416,12 @@ def main():
                                        max_len),
         "paged_parity": parity,
     }
+    if not args.smoke:
+        # full runs carry the fault drill inline; CI smoke runs it as its
+        # own --fault-drill pass instead (kept out of the smoke schema run
+        # so each gate fails independently)
+        doc["fault_drill"] = bench_fault_drill(cfg, params, smoke=True,
+                                               seed=args.seed)
     check_schema(doc)
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)

@@ -4,8 +4,10 @@
 # fp AND from the quantized int8/int4 value planes, AND a whole-layer
 # attention-sparse decode step — fused QKV + O pack groups vs dense over
 # the pruned copies — so a kernel-, quant- or pack-group regression
-# fails here in seconds, long before the full serve bench), then tier-1
-# tests, then the serving benchmark smoke.
+# fails here in seconds, long before the full serve bench), then the
+# serving fault-drill smoke (every fault class rejected at load or
+# recovered with zero leaks — the robustness gate), then tier-1 tests,
+# then the serving benchmark smoke.
 #
 #   scripts/ci.sh                  # smoke benches + tests
 #   FULL_BENCH=1 scripts/ci.sh     # also regenerate the full BENCH_kernels.json
@@ -24,6 +26,12 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== decode-path smoke microbench: fp + quant int8/int4 + attention-sparse fused layer (fail fast) =="
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" ESPIM_IMPL=ref \
     python benchmarks/kernels_bench.py --smoke
+
+echo "== serving fault-drill smoke: bit flips rejected at load, quarantine->dense, cancel/OOM/retry recovery =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" ESPIM_IMPL=ref \
+    python benchmarks/serve_bench.py --fault-drill --smoke \
+    --out BENCH_fault_drill_smoke.json
+test -f BENCH_fault_drill_smoke.json && echo "BENCH_fault_drill_smoke.json written"
 
 echo "== tier-1 tests =="
 python -m pytest -x -q

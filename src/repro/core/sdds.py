@@ -42,6 +42,7 @@ from collections import deque
 
 import numpy as np
 
+from repro.core.integrity import plan_fingerprint
 from repro.core.pruning import sparten_balance
 
 __all__ = [
@@ -140,6 +141,11 @@ class Schedule:
     def merge(self, other: "Schedule") -> None:
         for f in dataclasses.fields(self):
             setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+
+    def fingerprint(self) -> str:
+        """Digest of the derived command stream — lets a replayed schedule
+        be bound to the pack it was compiled against."""
+        return plan_fingerprint(self)
 
 
 # --------------------------------------------------------------------------
@@ -260,6 +266,12 @@ class ChunkPlan:
     def block_occupancy(self) -> float:
         return self.active_blocks / max(1, self.total_blocks)
 
+    def fingerprint(self) -> str:
+        """Digest of this plan — part of the pack's bound fingerprint
+        (``core.integrity``), so pairing a pack with a foreign chunk plan
+        fails verification."""
+        return plan_fingerprint(self)
+
 
 def plan_chunks(counts: np.ndarray, *, chunk_cols: int, row_tile: int,
                 n_cols: int, width_multiple: int = 8,
@@ -328,6 +340,10 @@ class WidthBucketPlan:
         if not self.single_bucket_slots:
             return 0.0
         return 1.0 - self.padded_slots / self.single_bucket_slots
+
+    def fingerprint(self) -> str:
+        """Digest of this plan (see ``ChunkPlan.fingerprint``)."""
+        return plan_fingerprint(self)
 
 
 def _bucket_width(w: int, width_multiple: int) -> int:
@@ -466,6 +482,10 @@ class PackGroupSpec:
         if self.output not in ("take", "folded"):
             raise ValueError(f"group {self.name!r}: unknown output "
                              f"{self.output!r}")
+
+    def fingerprint(self) -> str:
+        """Digest of this spec (see ``ChunkPlan.fingerprint``)."""
+        return plan_fingerprint(self)
 
 
 def validate_group_specs(specs) -> dict:

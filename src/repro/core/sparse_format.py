@@ -40,6 +40,7 @@ import math
 
 import numpy as np
 
+from repro.core import integrity
 from repro.core.pruning import row_tile_balance
 from repro.core.sdds import (ChunkPlan, WidthBucketPlan, chunk_cells,
                              plan_chunks, plan_width_buckets)
@@ -125,6 +126,9 @@ class ELLPack:
     row_tile: int
     stats: PackStats
     qplane: object = None   # QuantizedValuePlane (repro.quant.qpack)
+    # build-time per-plane digests + bound pack digest (core.integrity);
+    # None only for hand-assembled packs that bypass the builders
+    fingerprint: dict | None = None
 
     @property
     def r_pad(self) -> int:
@@ -219,7 +223,7 @@ def pack_ell(
         density=nnz / max(1, n_rows * n_cols),
         tile_widths=tuple(tile_widths),
     )
-    return ELLPack(
+    pack = ELLPack(
         values=values,
         cols=cols,
         valid=valid,
@@ -229,6 +233,8 @@ def pack_ell(
         row_tile=row_tile,
         stats=stats,
     )
+    pack.fingerprint = integrity.fingerprint_pack(pack)
+    return pack
 
 
 @dataclasses.dataclass
@@ -254,6 +260,7 @@ class ELLChunkedPack:
     stats: PackStats
     plan: ChunkPlan
     qplane: object = None   # QuantizedValuePlane (repro.quant.qpack)
+    fingerprint: dict | None = None     # see ELLPack.fingerprint
 
     @property
     def r_pad(self) -> int:
@@ -324,7 +331,7 @@ def chunk_pack(pack: ELLPack, chunk_cols: int,
         padded_slots=r_pad * n_chunks * lc,
         padding_frac=plan.chunk_pad_frac,
     )
-    return ELLChunkedPack(
+    out = ELLChunkedPack(
         values=values,
         cols=cols,
         valid=valid,
@@ -336,6 +343,8 @@ def chunk_pack(pack: ELLPack, chunk_cols: int,
         stats=stats,
         plan=plan,
     )
+    out.fingerprint = integrity.fingerprint_pack(out)
+    return out
 
 
 def pack_ell_chunked(
@@ -396,6 +405,7 @@ class BucketedStackedPack:
     nnz_per_layer: np.ndarray       # (L,) over all halves
     nnz_per_half: np.ndarray        # (halves, L)
     qplanes: list | None = None     # per-bucket QuantizedValuePlane
+    fingerprint: dict | None = None  # see ELLPack.fingerprint
 
     @property
     def n_layers(self) -> int:
@@ -518,7 +528,7 @@ def pack_bucketed_stack(
                             off += n
         buckets.append({"values": values, "cols": cols, "valid": valid})
 
-    return BucketedStackedPack(
+    pack = BucketedStackedPack(
         buckets=buckets,
         bucket_rows=tuple(b1 - b0 for b0, b1, _ in plan.boundaries),
         halves=halves,
@@ -532,6 +542,8 @@ def pack_bucketed_stack(
         nnz_per_layer=nnz_per_half.sum(axis=0),
         nnz_per_half=nnz_per_half,
     )
+    pack.fingerprint = integrity.fingerprint_pack(pack)
+    return pack
 
 
 # --------------------------------------------------------------------------

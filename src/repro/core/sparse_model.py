@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import integrity
 from repro.core.pruning import magnitude_prune
 from repro.core.sdds import (PackGroupSpec, decoder_layer_groups,
                              validate_group_specs)
@@ -59,7 +60,8 @@ from repro.kernels import ops
 from repro.models import transformer as T
 
 __all__ = ["sparsify_model", "sparsify_mlps", "pruned_param_tree",
-           "decode_step_sparse", "prefill_chunk_sparse", "sparse_stats"]
+           "decode_step_sparse", "prefill_chunk_sparse", "sparse_stats",
+           "verify_sparse"]
 
 # the standard decoder-layer projections NOT covered by a group still
 # stream their dense bytes every decode token — sparse_stats charges them
@@ -99,7 +101,7 @@ def _to_device(pack: BucketedStackedPack) -> dict:
         quant_meta = tuple(
             {"bits": p.bits, "group_rows": p.group_rows, "storage": p.storage}
             for p in pack.qplanes)
-    return {
+    g = {
         "halves": pack.halves,
         "n_rows": pack.n_rows,
         "n_cols": pack.n_cols,
@@ -118,6 +120,99 @@ def _to_device(pack: BucketedStackedPack) -> dict:
         "quant": quant_meta,
         "qplanes": pack.qplanes,
     }
+    # fingerprint the *device* form — nibble-packed quant codes, expanded
+    # srow scales and int32 perms differ byte-wise from the host pack, so
+    # the build-time pack fingerprint cannot stand in for the upload check
+    g["plane_fingerprints"], g["fingerprint"] = _group_fingerprint(g)
+    return g
+
+
+def _group_fingerprint(g: dict) -> tuple[dict, str]:
+    """Per-plane digests + bound digest over exactly the arrays the jitted
+    decode gathers (plus the host valid masks and the SDDS plan meta)."""
+    planes = {}
+    for gi, b in enumerate(g["buckets"]):
+        for nm in ("values", "q", "cols", "srow", "valid"):
+            if nm in b:
+                planes[f"b{gi}.{nm}"] = np.asarray(b[nm])
+    planes["perm"] = np.asarray(g["perm"])
+    planes["inv_perm"] = np.asarray(g["inv_perm"])
+    meta = {
+        "halves": g["halves"], "n_rows": g["n_rows"], "n_cols": g["n_cols"],
+        "r_pad": g["r_pad"], "chunk_cols": g["chunk_cols"],
+        "bucket_rows": list(g["bucket_rows"]), "widths": list(g["widths"]),
+        "quant": ([dict(q) for q in g["quant"]] if g["quant"] else None),
+        "plan": integrity.plan_fingerprint(g["plan"]),
+    }
+    fps = integrity.fingerprint_planes(planes)
+    return fps, integrity.bind_fingerprint(fps, meta)
+
+
+def _validate_group(name: str, g: dict) -> None:
+    """Bounds-validate one serving group's device planes: chunk-local
+    column ids against the gather domain, perm/inv_perm consistency, and
+    quantized planes against their scale-group layout."""
+    err = integrity.PackIntegrityError
+    cc, n_cols = g["chunk_cols"], g["n_cols"]
+    for gi, b in enumerate(g["buckets"]):
+        cols = np.asarray(b["cols"])
+        valid = np.asarray(b["valid"], bool)
+        what = f"group {name!r} bucket {gi}"
+        if cols.shape != valid.shape:
+            raise err(f"{what}: cols/valid shape mismatch")
+        k = cols.shape[-2]
+        lim = np.minimum(cc, n_cols - np.arange(k) * cc)
+        lim = lim.reshape((1,) * (cols.ndim - 2) + (k, 1))
+        if (valid & ((cols < 0) | (cols >= lim))).any():
+            raise err(f"{what}: index plane out of bounds for input dim "
+                      f"{n_cols} (chunk_cols={cc})")
+        if "values" in b:
+            if not bool(np.isfinite(np.asarray(b["values"])).all()):
+                raise err(f"{what}: non-finite entries in the value plane")
+        if "srow" in b:
+            srow = np.asarray(b["srow"])
+            if not bool(np.isfinite(srow).all()):
+                raise err(f"{what}: non-finite quant scales")
+            if srow.shape != cols.shape[:2]:
+                raise err(f"{what}: srow scale layout {srow.shape} does not "
+                          f"cover the packed rows {cols.shape[:2]}")
+            qm = g["quant"][gi]
+            if cols.shape[1] % max(1, qm["group_rows"]):
+                raise err(f"{what}: rows not divisible by scale "
+                          f"group_rows={qm['group_rows']}")
+            q = np.asarray(b["q"])
+            if qm["storage"] == "nib4":
+                want = cols.shape[:-1] + ((cols.shape[-1] + 1) // 2,)
+                if q.dtype != np.uint8 or q.shape != want:
+                    raise err(f"{what}: nibble-packed codes layout "
+                              f"{q.dtype}{q.shape} != uint8{want}")
+            elif q.dtype != np.int8 or q.shape != cols.shape:
+                raise err(f"{what}: int8 codes layout {q.dtype}{q.shape} "
+                          f"diverges from the index plane {cols.shape}")
+    integrity.validate_perm_layers(f"group {name!r}", g["perm"],
+                                   g["inv_perm"], g["n_rows"])
+
+
+def verify_sparse(sparse: dict) -> dict:
+    """The serving-side upload check (engine init, benches): every group's
+    device planes are bounds-validated and re-fingerprinted against the
+    digests ``sparsify_model`` recorded.  Raises ``PackIntegrityError``
+    naming the group and diverging planes; returns ``{group: digest}``."""
+    out = {}
+    for name, g in sparse.get("groups", {}).items():
+        _validate_group(name, g)
+        fps, bound = _group_fingerprint(g)
+        recorded = g.get("fingerprint")
+        if recorded is not None and recorded != bound:
+            diverged = integrity.diverging_planes(
+                {"planes": g.get("plane_fingerprints", {})}, {"planes": fps})
+            raise integrity.PackIntegrityError(
+                f"group {name!r}: device plane fingerprint mismatch "
+                f"(diverged: {diverged or ['<meta/schedule>']}) — the pack "
+                "was corrupted after build or paired with the wrong "
+                "schedule")
+        out[name] = bound
+    return out
 
 
 def _dequantized_projs(pack: BucketedStackedPack, offsets: dict,
@@ -301,6 +396,12 @@ def sparsify_model(cfg: ModelConfig, params: dict, sparsity: float, *,
     }
     if qspec is not None:
         out["quant_spec"] = qspec
+    # one model-level digest binding every group's device fingerprint —
+    # what provenance records and what a restored sparse dict verifies
+    out["fingerprint"] = integrity.bind_fingerprint(
+        {n: g["fingerprint"] for n, g in groups.items()},
+        meta={"format": out["format"], "sparsity": sparsity,
+              "quant": out["quant"]})
     for name, g in groups.items():             # legacy top-level aliases
         out[name] = g
     for name, w in out["pruned"].items():

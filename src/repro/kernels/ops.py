@@ -81,18 +81,21 @@ def _interpret() -> bool:
 
 
 def provenance(impl: str | None = None, quant: str | None = None,
-               attn: str | None = None) -> dict:
+               attn: str | None = None, packs: dict | None = None) -> dict:
     """Where a kernel call would run right now — recorded by the benches
     so BENCH_*.json results carry their backend/impl context.  ``quant``
     names the value-plane encoding the caller is timing (none/int8/int4);
     ``attn`` names the attention projection datapath (dense = MLP-only
-    packs, sparse = whole-layer fused QKV + O packs, sweep = both)."""
+    packs, sparse = whole-layer fused QKV + O packs, sweep = both);
+    ``packs`` maps a label to the bound pack fingerprint the run served
+    (``core.integrity``), so a result is tied to the exact plane bytes."""
     return {
         "backend": jax.default_backend(),
         "impl": _resolve(impl),
         "quant": quant or "none",
         "attn": attn or "dense",
         "pallas_interpret": _interpret(),
+        "packs": dict(packs) if packs else None,
         "env": {ENV_IMPL: os.environ.get(ENV_IMPL) or None,
                 ENV_INTERPRET: os.environ.get(ENV_INTERPRET) or None},
     }
@@ -271,7 +274,8 @@ jax.tree_util.register_pytree_node(
 
 def pack_to_device(pack: ELLPack | ELLChunkedPack, dtype=jnp.float32,
                    chunk_cols: int = DEFAULT_CHUNK_COLS,
-                   quant=None) -> EspimWeights | QuantEspimWeights:
+                   quant=None, verify: bool = True
+                   ) -> EspimWeights | QuantEspimWeights:
     """Move an offline pack onto the device arrays the kernels consume.
 
     A plain ELLPack is run through the SDDS chunk pass first (with
@@ -279,7 +283,16 @@ def pack_to_device(pack: ELLPack | ELLChunkedPack, dtype=jnp.float32,
     ("int8" | "int4" | a ``repro.quant.QuantSpec``) quantizes the value
     plane on the way up (or reuses an already-attached ``pack.qplane``)
     and returns ``QuantEspimWeights``.
+
+    ``verify=True`` (default) runs ``core.integrity.verify_pack`` on the
+    host pack before upload: bounds validation always, plus a fingerprint
+    recompute when the builders recorded one — corruption between build
+    and upload raises ``PackIntegrityError`` here instead of gathering
+    garbage at decode.
     """
+    if verify:
+        from repro.core.integrity import verify_pack
+        verify_pack(pack)
     if isinstance(pack, ELLPack):
         pack = chunk_pack(pack, chunk_cols)
     if quant is None:

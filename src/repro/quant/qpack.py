@@ -279,6 +279,7 @@ def quantize_pack(pack, spec: QuantSpec, attach: bool = True
         pack.qplane = plane
         pack.stats = dataclasses.replace(pack.stats,
                                          value_bytes=plane.value_bytes)
+        _refresh_fingerprint(pack)
     return plane
 
 
@@ -292,4 +293,14 @@ def quantize_bucketed_stack(pack, spec: QuantSpec, attach: bool = True
               for b in pack.buckets]
     if attach:
         pack.qplanes = planes
+        _refresh_fingerprint(pack)
     return planes
+
+
+def _refresh_fingerprint(pack) -> None:
+    """Attaching quant planes changes the pack's plane set, so the bound
+    fingerprint recorded at build must be recomputed (only for packs the
+    builders fingerprinted — hand-assembled packs stay unfingerprinted)."""
+    if getattr(pack, "fingerprint", None) is not None:
+        from repro.core.integrity import fingerprint_pack
+        pack.fingerprint = fingerprint_pack(pack)

@@ -5,12 +5,19 @@ On real hardware these hooks sit in the launcher (GKE/Borg restarts, the
 JAX coordination service surfaces missing hosts); the *policy* layer is
 hardware-independent and fully implemented + tested here:
 
+  * ``StrikePolicy`` — the shared k-consecutive-strikes escalation rule:
+    a key trips only after ``patience`` uninterrupted strikes (one clean
+    observation resets it).  Both the training-cluster straggler detector
+    and the serving engine's stuck-decode watchdog run on this one policy.
   * ``HeartbeatMonitor`` — per-worker liveness with a configurable timeout;
     failed workers are reported to the elastic planner.
   * ``StragglerDetector`` — per-step worker timings vs. rolling median;
     persistent stragglers (> threshold x median for k consecutive steps)
     are treated as soft failures (the cure at scale: drop the node and
     re-mesh, not wait).
+  * ``LatencyWatchdog`` — the single-stream form for the serving engine:
+    one step-time series vs its own rolling median; a spike streak flags
+    a stuck decode loop without any cross-worker comparison.
   * ``plan_elastic_mesh`` — given surviving device count, picks the largest
     valid (pod, data, model) mesh that preserves the model axis (TP degree
     is fixed by the weight shapes) and shrinks data parallelism; the
@@ -20,9 +27,33 @@ from __future__ import annotations
 
 import dataclasses
 import statistics
+from collections import deque
 
-__all__ = ["HeartbeatMonitor", "StragglerDetector", "plan_elastic_mesh",
-           "ElasticPlan"]
+__all__ = ["StrikePolicy", "HeartbeatMonitor", "StragglerDetector",
+           "LatencyWatchdog", "plan_elastic_mesh", "ElasticPlan"]
+
+
+class StrikePolicy:
+    """k-consecutive-strikes escalation, keyed by an arbitrary id.
+
+    ``strike(key)`` records one violation and returns True when the key
+    has accumulated ``patience`` consecutive strikes; ``clear(key)``
+    resets it (one clean observation forgives the streak — transient
+    blips never escalate, only persistent misbehavior does)."""
+
+    def __init__(self, patience: int = 3):
+        self.patience = max(1, patience)
+        self._strikes: dict = {}
+
+    def strike(self, key) -> bool:
+        self._strikes[key] = self._strikes.get(key, 0) + 1
+        return self._strikes[key] >= self.patience
+
+    def clear(self, key) -> None:
+        self._strikes[key] = 0
+
+    def strikes(self, key) -> int:
+        return self._strikes.get(key, 0)
 
 
 class HeartbeatMonitor:
@@ -50,8 +81,11 @@ class HeartbeatMonitor:
 class StragglerDetector:
     def __init__(self, threshold: float = 2.0, patience: int = 3):
         self.threshold = threshold
-        self.patience = patience
-        self._strikes: dict = {}
+        self.policy = StrikePolicy(patience)
+
+    @property
+    def patience(self) -> int:
+        return self.policy.patience
 
     def observe_step(self, timings: dict) -> list:
         """timings: worker -> step seconds.  Returns persistent stragglers."""
@@ -61,12 +95,45 @@ class StragglerDetector:
         out = []
         for w, t in timings.items():
             if t > self.threshold * max(med, 1e-9):
-                self._strikes[w] = self._strikes.get(w, 0) + 1
-                if self._strikes[w] >= self.patience:
+                if self.policy.strike(w):
                     out.append(w)
             else:
-                self._strikes[w] = 0
+                self.policy.clear(w)
         return sorted(out)
+
+
+class LatencyWatchdog:
+    """Stuck-decode watchdog for a single step-time stream (the serving
+    engine's decode loop): each observation is compared against the
+    rolling median of the last ``window`` steps; ``patience`` consecutive
+    spikes (> ``threshold`` x median) trip the same ``StrikePolicy`` the
+    cluster straggler detector escalates through.
+
+    ``observe(dt)`` returns True exactly when the streak trips — callers
+    count flags / surface them in stats; the watchdog itself never kills
+    anything (the engine owns the response ladder)."""
+
+    def __init__(self, threshold: float = 3.0, patience: int = 3,
+                 window: int = 32, min_samples: int = 4):
+        self.threshold = threshold
+        self.policy = StrikePolicy(patience)
+        self.min_samples = max(1, min_samples)
+        self._times: deque = deque(maxlen=max(self.min_samples, window))
+
+    def observe(self, dt: float) -> bool:
+        baseline = (statistics.median(self._times)
+                    if len(self._times) >= self.min_samples else None)
+        spiked = (baseline is not None
+                  and dt > self.threshold * max(baseline, 1e-9))
+        if spiked:
+            tripped = self.policy.strike("decode")
+        else:
+            self.policy.clear("decode")
+            tripped = False
+            # only clean steps feed the baseline — a spike streak must not
+            # drag the median up and grant itself amnesty
+            self._times.append(dt)
+        return tripped
 
 
 @dataclasses.dataclass(frozen=True)

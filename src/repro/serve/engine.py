@@ -22,6 +22,19 @@ compressed format).
 Families without a chunked ``prefill_chunk`` (moe / vlm / audio) fall back
 to the seed behavior: token-by-token prompt replay through the decode
 path (``prefill_mode="replay"``).
+
+Fault tolerance (DESIGN.md §11): sparse packs are fingerprint-verified
+at engine construction (``verify_packs`` — a corrupted or mismatched
+pack fails loudly at load, or degrades the whole engine to the pruned
+dense copy with ``on_verify_failure="degrade"``); every decode tick
+returns a per-slot ``isfinite`` flag so a poisoned slot is quarantined
+alone (its KV write is dropped, its next tick runs the dense fallback)
+while healthy slots continue bit-identically; per-request TTFT and
+wall-clock deadlines, an explicit ``cancel()``, capped-backoff retry for
+transient step failures, and a ``LatencyWatchdog`` on the decode loop
+round out the ladder.  Every exit — finish, cancel, deadline, failure —
+funnels through one ``_teardown`` so no path can leak paged blocks;
+``check_arena()`` (optionally per-step via ``validate_arena``) proves it.
 """
 from __future__ import annotations
 
@@ -33,6 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import sparse_model
+from repro.core.integrity import PackIntegrityError
 from repro.models import factory
 from repro.serve.paged_cache import make_kv_cache
 from repro.serve.prefill import ChunkedPrefiller
@@ -40,7 +55,26 @@ from repro.serve.scheduler import Scheduler
 from repro.serve.serve_step import (sample_tokens, serve_step_fn,
                                     serve_step_sparse_fn)
 
-__all__ = ["Request", "EngineStats", "ServeEngine"]
+__all__ = ["Request", "EngineStats", "ServeEngine", "TransientStepError"]
+
+
+class TransientStepError(RuntimeError):
+    """A decode step failed for a reason worth retrying (device hiccup,
+    injected fault).  The engine retries with capped exponential backoff;
+    exhaustion tears the stepping slots down as ``failed`` instead of
+    crashing the engine."""
+
+
+def _finite_step(step):
+    """Wrap a serve-step fn so the jitted closure returns per-slot finite
+    flags instead of raw logits: the poison guard reads one (B,) bool
+    vector per tick on the host — the logits themselves never leave the
+    device, so the guard is free on the hot path."""
+    def fn(p, c, b):
+        nxt, logits, cache = step(p, c, b)
+        ok = jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=(1, 2))
+        return nxt, ok, cache
+    return fn
 
 
 @dataclasses.dataclass
@@ -49,6 +83,8 @@ class Request:
     prompt: list
     max_new_tokens: int = 16
     eos_id: int = -1  # -1: never stops early
+    deadline_s: float | None = None       # total wall clock from submit
+    ttft_deadline_s: float | None = None  # first token from submit
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -66,8 +102,17 @@ class EngineStats:
     decode_steps: int = 0
     prefill_chunks: int = 0
     tokens_generated: int = 0
-    requests_completed: int = 0
+    requests_completed: int = 0    # full output: completed + degraded
     slot_occupancy: float = 0.0    # mean fraction of slots active per tick
+    quarantines: int = 0           # per-slot non-finite guard trips
+    retries: int = 0               # transient step failures retried
+    watchdog_flags: int = 0        # LatencyWatchdog trips (stuck decode)
+    degraded_tokens: int = 0       # tokens emitted by the dense fallback
+    requests_degraded: int = 0     # completed, but via the dense fallback
+    requests_cancelled: int = 0
+    requests_deadline_expired: int = 0
+    requests_failed: int = 0       # no datapath produced finite logits
+    degraded_to_dense: bool = False  # whole engine fell back at load
     requests: list = dataclasses.field(default_factory=list)
 
     def latency_summary(self) -> dict:
@@ -78,7 +123,7 @@ class EngineStats:
 class _Slot:
     """Per-slot serving state (the request plus its progress)."""
     __slots__ = ("req", "metrics", "phase", "pos", "cursor", "cur_token",
-                 "pf_cache")
+                 "pf_cache", "degraded", "emitted_degraded")
 
     def __init__(self, req, metrics):
         self.req = req
@@ -88,6 +133,8 @@ class _Slot:
         self.cursor = None         # replay cursor (replay mode)
         self.cur_token = 0
         self.pf_cache = None
+        self.degraded = False          # decoding via the dense fallback
+        self.emitted_degraded = False  # at least one fallback token out
 
 
 class ServeEngine:
@@ -97,13 +144,38 @@ class ServeEngine:
                  paged: bool = True, block_size: int = 16,
                  num_blocks: int | None = None, prefill_chunk: int = 16,
                  prefill_mode: str = "auto", policy: str = "fcfs",
-                 max_prefill_streak: int = 2, seed: int = 0):
+                 max_prefill_streak: int = 2, seed: int = 0,
+                 verify_packs: bool = True, on_verify_failure: str = "raise",
+                 max_retries: int = 2, retry_backoff: float = 0.05,
+                 retry_backoff_cap: float = 1.0, watchdog=None,
+                 validate_arena: bool = False):
+        if on_verify_failure not in ("raise", "degrade"):
+            raise ValueError(
+                f"unknown on_verify_failure {on_verify_failure!r}; "
+                f"use 'raise' or 'degrade'")
+        # pack integrity gate FIRST: a bit-flipped plane or a pack whose
+        # SDDS schedule no longer matches its fingerprint must never reach
+        # a decode closure (DESIGN.md §11) — either fail the load or serve
+        # the pruned dense copy instead
+        self.verified_packs: dict | None = None
+        degraded_to_dense = False
+        if sparse is not None and verify_packs:
+            try:
+                self.verified_packs = sparse_model.verify_sparse(sparse)
+            except PackIntegrityError:
+                if on_verify_failure != "degrade":
+                    raise
+                params = sparse_model.pruned_param_tree(params, sparse)
+                sparse = None
+                degraded_to_dense = True
+
         self.cfg = cfg
         self.params = params
         self.b = batch_slots
         self.max_len = max_len
         self.temperature = temperature
         self.sparse = sparse
+        self.impl = impl
         self.cache = make_kv_cache(cfg, batch_slots, max_len, paged=paged,
                                    block_size=block_size,
                                    num_blocks=num_blocks)
@@ -112,9 +184,15 @@ class ServeEngine:
         self.seq_len = np.zeros(batch_slots, np.int32)
         self.scheduler = Scheduler(policy=policy,
                                    max_prefill_streak=max_prefill_streak)
-        self.stats = EngineStats(requests=self.scheduler.completed)
+        self.stats = EngineStats(requests=self.scheduler.completed,
+                                 degraded_to_dense=degraded_to_dense)
         self._key = jax.random.PRNGKey(seed)
         self._occ_accum = 0.0
+        self.max_retries = max(0, max_retries)
+        self.retry_backoff = retry_backoff
+        self.retry_backoff_cap = retry_backoff_cap
+        self.validate_arena = validate_arena
+        self._watchdog = watchdog
 
         if prefill_mode == "auto":
             chunked = (factory.supports_chunked_prefill(cfg)
@@ -133,16 +211,22 @@ class ServeEngine:
                 self.cache.state_names, sparse=sparse, impl=impl)
 
         if sparse is None:
-            self._decode = jax.jit(
+            self._decode = jax.jit(_finite_step(
                 lambda p, c, b: serve_step_fn(cfg, p, c, b,
-                                              temperature=temperature))
+                                              temperature=temperature)))
         else:
             # ESPIM-format decode: the packs are closure constants so the
             # fused kernel sees static chunk geometry
-            self._decode = jax.jit(
+            self._decode = jax.jit(_finite_step(
                 lambda p, c, b: serve_step_sparse_fn(
                     cfg, p, sparse, c, b, temperature=temperature,
-                    impl=impl))
+                    impl=impl)))
+        # lazily-built dense fallback for quarantined slots: jitted over
+        # the pruned dense copy of the same weights, so its greedy tokens
+        # match the sparse path's (PR3-5 parity) — degraded is slower,
+        # never different
+        self._dense_decode = None
+        self._dense_params = None
 
     # ------------------------------------------------------------ lifecycle
     def reset_stats(self) -> None:
@@ -150,7 +234,9 @@ class ServeEngine:
         jit-warmup request, so a benchmark measures steady state only."""
         self.scheduler.completed.clear()
         self._occ_accum = 0.0
-        self.stats = EngineStats(requests=self.scheduler.completed)
+        self.stats = EngineStats(
+            requests=self.scheduler.completed,
+            degraded_to_dense=self.stats.degraded_to_dense)
 
     def submit(self, req: Request) -> None:
         worst = req.worst_case_tokens(self.max_len)
@@ -163,6 +249,20 @@ class ServeEngine:
                 f"request {req.rid} prompt ({len(req.prompt)}) exceeds "
                 f"max_len ({self.max_len})")
         self.scheduler.add(req)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it lives: an in-flight slot is torn
+        down through the one teardown path (blocks back to the pool,
+        scheduler state finalized as ``cancelled``), a queued request is
+        retired by the scheduler.  Returns False for unknown/finished."""
+        for i, st in enumerate(self.slots):
+            if st is not None and st.req.rid == rid:
+                self._teardown(i, "cancelled")
+                return True
+        if self.scheduler.cancel_pending(rid):
+            self.stats.requests_cancelled += 1
+            return True
+        return False
 
     def _admit(self) -> None:
         for i in range(self.b):
@@ -190,14 +290,48 @@ class ServeEngine:
                 st.cur_token = req.prompt[0]
             self.slots[i] = st
 
-    def _finish(self, i: int) -> None:
+    def _teardown(self, i: int, state: str = "completed") -> None:
+        """The single exit path for every slot, whatever the reason —
+        finish, cancel, deadline, failure.  One path means one place that
+        must release the paged blocks and finalize scheduler state, so no
+        exit class can leak (``check_arena`` proves it)."""
         st = self.slots[i]
+        if state == "completed" and st.emitted_degraded:
+            state = "degraded"      # full output, but not all-sparse-path
         st.req.done = True
-        self.scheduler.finish(st.metrics)
-        self.stats.requests_completed += 1
+        self.scheduler.finish(st.metrics, state)
+        if state in ("completed", "degraded"):
+            self.stats.requests_completed += 1
+            if state == "degraded":
+                self.stats.requests_degraded += 1
+        elif state == "cancelled":
+            self.stats.requests_cancelled += 1
+        elif state == "deadline_expired":
+            self.stats.requests_deadline_expired += 1
+        else:
+            self.stats.requests_failed += 1
         self.cache.free_slot(i)
         self.slots[i] = None
         self.seq_len[i] = 0
+
+    def _expire(self) -> None:
+        """Deadline sweep: queued requests past their limit are retired by
+        the scheduler; in-flight slots past total wall clock (or past the
+        TTFT deadline with no first token yet) are torn down."""
+        now = time.monotonic()
+        self.stats.requests_deadline_expired += len(
+            self.scheduler.expire_pending(now))
+        for i, st in enumerate(self.slots):
+            if st is None:
+                continue
+            dl = st.req.deadline_s
+            if dl is not None and now - st.metrics.t_submit > dl:
+                self._teardown(i, "deadline_expired")
+                continue
+            tdl = st.req.ttft_deadline_s
+            if (tdl is not None and st.metrics.t_first is None
+                    and now - st.metrics.t_submit > tdl):
+                self._teardown(i, "deadline_expired")
 
     def _emit_token(self, i: int, tok: int) -> None:
         st = self.slots[i]
@@ -211,7 +345,7 @@ class ServeEngine:
         if (tok == st.req.eos_id
                 or len(st.req.output) >= st.req.max_new_tokens
                 or seq_len >= self.max_len - 1):
-            self._finish(i)
+            self._teardown(i)
 
     def _next_key(self):
         if self.temperature <= 0.0:
@@ -219,6 +353,47 @@ class ServeEngine:
             # per-tick jax.random.split dispatch on the hot path
         self._key, sub = jax.random.split(self._key)
         return sub
+
+    # ---------------------------------------------------------- degradation
+    def _dense_fallback(self):
+        """Jitted dense decode over the pruned dense copy of the sparse
+        weights — built on first quarantine, shared by every degraded
+        slot after."""
+        if self._dense_decode is None:
+            self._dense_params = sparse_model.pruned_param_tree(
+                self.params, self.sparse)
+            cfg, temperature = self.cfg, self.temperature
+            self._dense_decode = jax.jit(_finite_step(
+                lambda p, c, b: serve_step_fn(cfg, p, c, b,
+                                              temperature=temperature)))
+        return self._dense_decode, self._dense_params
+
+    def _retry(self, fn, *args):
+        """Run one jitted step, retrying transient failures with capped
+        exponential backoff; re-raises after ``max_retries`` retries."""
+        delay = self.retry_backoff
+        for attempt in range(self.max_retries + 1):
+            try:
+                return fn(*args)
+            except TransientStepError:
+                if attempt >= self.max_retries:
+                    raise
+                self.stats.retries += 1
+                time.sleep(delay)
+                delay = min(delay * 2.0, self.retry_backoff_cap)
+
+    def check_arena(self) -> dict:
+        """Arena invariant after any step: every physical block in exactly
+        one owner, and empty slots own nothing.  Raises on violation."""
+        acct = self.cache.arena_check()
+        n_blocks = getattr(self.cache, "n_blocks", None)
+        if n_blocks is not None:
+            for i, st in enumerate(self.slots):
+                if st is None and int(n_blocks[i]) != 0:
+                    raise RuntimeError(
+                        f"empty slot {i} still owns {int(n_blocks[i])} "
+                        f"paged blocks — teardown leak")
+        return acct
 
     # ----------------------------------------------------------- tick kinds
     def _prefill_tick(self, i: int) -> None:
@@ -236,11 +411,18 @@ class ServeEngine:
         if st.pos >= plen:
             # prompt fully prefilled: install recurrent states and sample
             # the first token straight from the final chunk's logits
+            last = logits[:, n_valid - 1]
+            if not bool(np.isfinite(np.asarray(last, np.float32)).all()):
+                # a poisoned prefill has already contaminated this slot's
+                # KV history — no fallback can recompute it, so the slot
+                # ends here rather than ever emit a wrong token
+                self.stats.quarantines += 1
+                self._teardown(i, "failed")
+                return
             self.cache.set_slot_state(
                 i, self._prefiller.state_rows(st.pf_cache))
             st.pf_cache = None
             self.seq_len[i] = plen
-            last = logits[:, n_valid - 1]
             tok = int(sample_tokens(self.cfg, last, self.temperature,
                                     self._next_key())[0])
             st.phase = "decode"
@@ -249,7 +431,6 @@ class ServeEngine:
     def _decode_tick(self, decoding: list[int]) -> None:
         cur = np.zeros((self.b, 1), np.int32)
         lens = np.zeros(self.b, np.int32)
-        active = np.zeros(self.b, bool)
         for i in decoding:
             st = self.slots[i]
             if st.cursor is not None and st.cursor < len(st.req.prompt):
@@ -257,43 +438,119 @@ class ServeEngine:
             else:
                 cur[i, 0] = st.cur_token
             lens[i] = self.seq_len[i]
-            active[i] = True
             self.cache.ensure(i, int(self.seq_len[i]) + 1)
+        healthy = [i for i in decoding if not self.slots[i].degraded]
+        degraded = [i for i in decoding if self.slots[i].degraded]
+
         view = self.cache.gather_view(lens)
         batch = {"tokens": jnp.asarray(cur), "rng": self._next_key()}
-        nxt, _, new_cache = self._decode(self.params, view, batch)
-        self.cache.apply_decode(new_cache, lens, active)
-        nxt = np.asarray(nxt)
+        t0 = time.monotonic()
+        results: dict[int, int] = {}   # slot -> sampled token this tick
+        n_applies = 0
+        any_drop = False
+
+        def _commit(ok, new_cache, group):
+            # commit only the finite slots' KV writes: a poisoned row is
+            # dropped at the arena (OOB scatter) so it never needs
+            # scrubbing — the slot's position is simply re-decoded by the
+            # dense fallback next tick
+            nonlocal n_applies
+            commit = np.zeros(self.b, bool)
+            for i in group:
+                commit[i] = bool(ok[i])
+            self.cache.apply_decode(new_cache, lens, commit)
+            n_applies += 1
+
+        if healthy:
+            try:
+                nxt, ok, new_cache = self._retry(
+                    self._decode, self.params, view, batch)
+            except TransientStepError:
+                for i in list(healthy):
+                    self._teardown(i, "failed")
+            else:
+                nxt, ok = np.asarray(nxt), np.asarray(ok)
+                _commit(ok, new_cache, healthy)
+                for i in healthy:
+                    if ok[i]:
+                        results[i] = int(nxt[i, 0])
+                        continue
+                    any_drop = True
+                    self.stats.quarantines += 1
+                    if self.sparse is None:
+                        # dense engine: no lower rung on the ladder
+                        self._teardown(i, "failed")
+                    else:
+                        # quarantine: no emit, no advance — next tick this
+                        # slot decodes the same position densely
+                        self.slots[i].degraded = True
+
+        degraded = [i for i in degraded if self.slots[i] is not None]
+        if degraded:
+            fn, dparams = self._dense_fallback()
+            try:
+                nxt, ok, new_cache = self._retry(fn, dparams, view, batch)
+            except TransientStepError:
+                for i in list(degraded):
+                    self._teardown(i, "failed")
+            else:
+                nxt, ok = np.asarray(nxt), np.asarray(ok)
+                _commit(ok, new_cache, degraded)
+                for i in degraded:
+                    if ok[i]:
+                        results[i] = int(nxt[i, 0])
+                    else:
+                        # dense couldn't produce finite logits either: the
+                        # poison is in this slot's history, not the sparse
+                        # weights — no rung left
+                        any_drop = True
+                        self._teardown(i, "failed")
+
+        if n_applies != 1 or any_drop:
+            # two closures (or a dropped write) each left a partial cached
+            # view behind — force the next gather to rebuild from pages
+            self.cache.invalidate_view()
+
         self.stats.steps += 1
         self.stats.decode_steps += 1
         self._occ_accum += len(decoding) / self.b
         self.stats.slot_occupancy = self._occ_accum / self.stats.decode_steps
+        if (self._watchdog is not None
+                and self._watchdog.observe(time.monotonic() - t0)):
+            self.stats.watchdog_flags += 1
+
         for i in decoding:
             st = self.slots[i]
+            if st is None or i not in results:
+                continue    # torn down or quarantined: no emit, no advance
             self.seq_len[i] += 1
             if st.cursor is not None and st.cursor < len(st.req.prompt):
                 st.cursor += 1
                 if st.cursor < len(st.req.prompt):
                     continue        # still replaying: output ignored
-            self._emit_token(i, int(nxt[i, 0]))
+            if st.degraded:
+                st.emitted_degraded = True
+                self.stats.degraded_tokens += 1
+            self._emit_token(i, results[i])
 
     # ------------------------------------------------------------- stepping
     def step(self) -> None:
         """One engine tick: a prefill chunk for one slot, or one decode
         step across all decode-ready slots.  A fully idle engine (queue
         drained, every slot empty) is a no-op — no wasted jitted call."""
+        self._expire()
         self._admit()
         prefilling = [i for i, s in enumerate(self.slots)
                       if s is not None and s.phase == "prefill"]
         decoding = [i for i, s in enumerate(self.slots)
                     if s is not None and s.phase == "decode"]
         action, target = self.scheduler.next_action(prefilling, decoding)
-        if action == "idle":
-            return
         if action == "prefill":
             self._prefill_tick(target)
-        else:
+        elif action == "decode":
             self._decode_tick(decoding)
+        if self.validate_arena:
+            self.check_arena()
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         for _ in range(max_steps):

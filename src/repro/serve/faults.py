@@ -1,0 +1,387 @@
+"""Deterministic fault injection for the serving engine (DESIGN.md §11).
+
+Every injector is seeded and pure-functional over the sparse serving
+dict (the original is never mutated — corrupted copies share unaffected
+planes), so a fault drill is reproducible bit-for-bit.  Two fault
+families:
+
+* **load faults** — corruption that must be *rejected at engine
+  construction* by the pack-integrity layer: a single bit flip anywhere
+  in an index or value plane (fp, int8 or nibble-packed int4), or a
+  schedule/pack mismatch (the perm planes rolled one layer — internally
+  consistent, so only the bound fingerprint can catch it).
+* **runtime faults** — degradation the engine must survive *without ever
+  emitting a silent wrong token*: a NaN-poisoned decode closure
+  (quarantine -> dense fallback), a mid-decode abort (``cancel``), arena
+  OOM pressure (admission pushback via quarantined blocks), latency
+  spikes (watchdog flags) and transient step errors (capped-backoff
+  retry).
+
+``run_fault_drill`` runs one engine per fault class against a no-fault
+baseline and reports goodput, recovery time, degraded-token fraction and
+leak counts per class; ``check_drill`` asserts the contract (reject at
+load, or complete with unaffected slots bit-identical to the baseline
+and zero leaked blocks).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.integrity import PackIntegrityError
+from repro.runtime.fault_tolerance import LatencyWatchdog
+from repro.serve.engine import (Request, ServeEngine, TransientStepError,
+                                _finite_step)
+from repro.serve.serve_step import serve_step_sparse_fn
+
+__all__ = ["FAULT_KINDS", "LOAD_FAULTS", "flip_bit", "corrupt_group_plane",
+           "mismatch_schedule", "poison_values", "inject_poisoned_decode",
+           "force_nonfinite_flag", "arm_latency_spike",
+           "arm_transient_errors", "run_fault_drill", "check_drill"]
+
+FAULT_KINDS = ("index_bitflip", "value_bitflip", "schedule_mismatch",
+               "nonfinite_logits", "abort_mid_decode", "arena_oom",
+               "latency_spike", "transient_step_error")
+# corruption the integrity layer must reject at engine construction
+LOAD_FAULTS = ("index_bitflip", "value_bitflip", "schedule_mismatch")
+
+
+# --------------------------------------------------------------- injectors
+def flip_bit(arr, rng) -> np.ndarray:
+    """Flip one uniformly-random bit of an array's byte buffer."""
+    a = np.array(np.asarray(arr), copy=True)
+    flat = a.view(np.uint8).reshape(-1)
+    bit = int(rng.integers(flat.size * 8))
+    flat[bit // 8] ^= np.uint8(1 << (bit % 8))
+    return a
+
+
+def _clone_sparse(sparse: dict) -> dict:
+    """Shallow structural copy (dicts/lists new, arrays shared) so an
+    injector can swap one plane without touching the caller's dict; the
+    legacy top-level group aliases are re-pointed at the clones."""
+    out = dict(sparse)
+    out["groups"] = {}
+    for name, g in sparse["groups"].items():
+        g2 = dict(g)
+        g2["buckets"] = [dict(b) for b in g["buckets"]]
+        out["groups"][name] = g2
+        out[name] = g2
+    return out
+
+
+def corrupt_group_plane(sparse: dict, plane: str, rng,
+                        group: str | None = None) -> dict:
+    """One bit flip in a group's index plane (``plane="index"``) or value
+    plane (``plane="value"`` — the fp values, or the quantized codes when
+    the pack is int8/int4)."""
+    out = _clone_sparse(sparse)
+    name = group or next(iter(out["groups"]))
+    b = out["groups"][name]["buckets"][0]
+    if plane == "index":
+        key = "cols"
+    elif plane == "value":
+        key = "values" if "values" in b else "q"
+    else:
+        raise ValueError(f"unknown plane {plane!r}; use 'index' or 'value'")
+    b[key] = jnp.asarray(flip_bit(b[key], rng))
+    return out
+
+
+def mismatch_schedule(sparse: dict, group: str | None = None) -> dict:
+    """Pair a group's packs with the *wrong layer's* balance permutation:
+    perm and inv_perm are rolled one layer together, so each layer's pair
+    stays internally consistent (bounds/involution validation passes) —
+    only the bound fingerprint, which ties the planes to the SDDS
+    schedule they were built under, can catch it."""
+    out = _clone_sparse(sparse)
+    name = group or next(iter(out["groups"]))
+    g = out["groups"][name]
+    perm = np.asarray(g["perm"])
+    if perm.shape[0] < 2:
+        raise ValueError("schedule mismatch needs >= 2 layers to roll")
+    g["perm"] = jnp.asarray(np.roll(perm, 1, axis=0))
+    g["inv_perm"] = jnp.asarray(np.roll(np.asarray(g["inv_perm"]), 1,
+                                        axis=0))
+    return out
+
+
+def poison_values(sparse: dict, rng, group: str | None = None) -> dict:
+    """NaN one *retained* cell of a group's value plane (or one quant
+    scale) — the runtime poison that must trip the per-slot finite guard,
+    never reach an emitted token."""
+    out = _clone_sparse(sparse)
+    name = group or next(iter(out["groups"]))
+    b = out["groups"][name]["buckets"][0]
+    key = "values" if "values" in b else "srow"
+    arr = np.array(np.asarray(b[key], np.float32), copy=True)
+    if key == "values":
+        idxs = np.argwhere(np.asarray(b["valid"], bool))
+        pick = idxs[int(rng.integers(len(idxs)))]
+        arr[tuple(pick)] = np.nan
+    else:
+        arr.reshape(-1)[int(rng.integers(arr.size))] = np.nan
+    b[key] = jnp.asarray(arr)
+    return out
+
+
+def inject_poisoned_decode(eng: ServeEngine, sparse_bad: dict) -> None:
+    """Swap the engine's decode closure for one built over a corrupted
+    sparse dict — runtime corruption *after* the load-time verification
+    passed (the engine's own ``sparse`` stays clean, so its dense
+    fallback reconstructs uncontaminated weights)."""
+    cfg, temperature, impl = eng.cfg, eng.temperature, eng.impl
+    eng._decode = jax.jit(_finite_step(
+        lambda p, c, b: serve_step_sparse_fn(cfg, p, sparse_bad, c, b,
+                                             temperature=temperature,
+                                             impl=impl)))
+
+
+def force_nonfinite_flag(eng: ServeEngine, slots, n_calls: int = 1):
+    """Mark the given slots non-finite for the next ``n_calls`` decode
+    calls (the guard-path injector for dense engines, where there is no
+    sparse plane to poison)."""
+    inner = eng._decode
+    state = {"left": n_calls}
+
+    def wrapped(p, c, b):
+        nxt, ok, cache = inner(p, c, b)
+        if state["left"] > 0:
+            state["left"] -= 1
+            ok = np.asarray(ok).copy()
+            for s in slots:
+                ok[s] = False
+        return nxt, ok, cache
+
+    eng._decode = wrapped
+    return state
+
+
+def arm_latency_spike(eng: ServeEngine, at_call: int, n_calls: int,
+                      sleep_s: float):
+    """Stall decode calls ``at_call .. at_call+n_calls-1`` by ``sleep_s``
+    — the watchdog-visible stuck-decode simulation."""
+    inner = eng._decode
+    state = {"calls": 0}
+
+    def wrapped(p, c, b):
+        state["calls"] += 1
+        if at_call <= state["calls"] < at_call + n_calls:
+            time.sleep(sleep_s)
+        return inner(p, c, b)
+
+    eng._decode = wrapped
+    return state
+
+
+def arm_transient_errors(eng: ServeEngine, at_call: int, n_failures: int):
+    """From decode call ``at_call`` on, raise ``TransientStepError`` for
+    the next ``n_failures`` calls, then heal — exercises the engine's
+    capped-backoff retry (each retry re-enters the wrapper and counts)."""
+    inner = eng._decode
+    state = {"calls": 0, "fails": 0}
+
+    def wrapped(p, c, b):
+        state["calls"] += 1
+        if state["calls"] >= at_call and state["fails"] < n_failures:
+            state["fails"] += 1
+            raise TransientStepError(
+                f"injected transient failure #{state['fails']}")
+        return inner(p, c, b)
+
+    eng._decode = wrapped
+    return state
+
+
+# ------------------------------------------------------------------- drill
+def _drill_requests(cfg, rng, n_requests: int, max_new_tokens: int):
+    return [Request(rid=r,
+                    prompt=[int(t) for t in rng.integers(
+                        1, cfg.vocab_size, 5 + int(rng.integers(4)))],
+                    max_new_tokens=max_new_tokens)
+            for r in range(n_requests)]
+
+
+def _drain(eng: ServeEngine, reqs, on_step=None, max_steps: int = 4000):
+    for r in reqs:
+        eng.submit(r)
+    steps = 0
+    while steps < max_steps and (eng.scheduler.has_pending
+                                 or any(s is not None for s in eng.slots)):
+        eng.step()
+        steps += 1
+        if on_step is not None:
+            on_step(eng, steps)
+    return steps
+
+
+def run_fault_drill(cfg, params, sparse: dict, sparse_alt: dict | None = None,
+                    seed: int = 0, kinds=None, *, impl: str = "ref",
+                    batch_slots: int = 2, max_len: int = 64,
+                    block_size: int = 8, prefill_chunk: int = 8,
+                    n_requests: int = 4, max_new_tokens: int = 8) -> dict:
+    """One engine per fault class against a shared no-fault baseline.
+
+    ``sparse`` must be an fp pack dict (``sparsify_model``); pass a
+    quantized dict as ``sparse_alt`` to aim the value-plane bit flip at
+    the narrow codes instead of fp values.  Greedy decode is
+    batching-independent, so per-request outputs are comparable
+    bit-for-bit across engines — "unaffected slots identical to the
+    no-fault run" is an exact assertion, not a tolerance.
+    """
+    kinds = tuple(kinds) if kinds is not None else FAULT_KINDS
+    rng = np.random.default_rng(seed)
+    reqs = _drill_requests(cfg, rng, n_requests, max_new_tokens)
+    prompts = {r.rid: list(r.prompt) for r in reqs}
+
+    def _fresh_reqs():
+        return [Request(rid=rid, prompt=list(p),
+                        max_new_tokens=max_new_tokens)
+                for rid, p in prompts.items()]
+
+    def _mk_engine(sparse_arg, **kw):
+        return ServeEngine(
+            cfg, params, batch_slots, max_len, sparse=sparse_arg, impl=impl,
+            block_size=block_size, prefill_chunk=prefill_chunk,
+            validate_arena=True,
+            watchdog=LatencyWatchdog(threshold=3.0, patience=2,
+                                     min_samples=4), **kw)
+
+    # ---- no-fault baseline ---------------------------------------------
+    base_reqs = _fresh_reqs()
+    eng = _mk_engine(sparse)
+    t0 = time.monotonic()
+    _drain(eng, base_reqs)
+    base_wall = time.monotonic() - t0
+    baseline = {r.rid: list(r.output) for r in base_reqs}
+    out = {"seed": seed,
+           "scale": {"batch_slots": batch_slots, "max_len": max_len,
+                     "block_size": block_size, "n_requests": n_requests,
+                     "max_new_tokens": max_new_tokens},
+           "baseline": {
+               "goodput_tok_s": eng.stats.tokens_generated / max(base_wall,
+                                                                 1e-9),
+               "tokens": eng.stats.tokens_generated,
+               "wall_s": base_wall},
+           "faults": {}}
+
+    for kind in kinds:
+        out["faults"][kind] = _drill_one(
+            kind, _mk_engine, _fresh_reqs, baseline, sparse, sparse_alt,
+            np.random.default_rng(seed + 1))
+    return out
+
+
+def _drill_one(kind, _mk_engine, _fresh_reqs, baseline, sparse, sparse_alt,
+               rng) -> dict:
+    res = {"rejected_at_load": False}
+
+    if kind in LOAD_FAULTS:
+        if kind == "index_bitflip":
+            bad = corrupt_group_plane(sparse, "index", rng)
+        elif kind == "value_bitflip":
+            bad = corrupt_group_plane(sparse_alt or sparse, "value", rng)
+        else:
+            bad = mismatch_schedule(sparse)
+        try:
+            _mk_engine(bad)
+        except PackIntegrityError as e:
+            res["rejected_at_load"] = True
+            res["error"] = str(e)[:200]
+        return res
+
+    reqs = _fresh_reqs()
+    kw = {"max_retries": 3} if kind == "transient_step_error" else {}
+    eng = _mk_engine(sparse, **kw)
+    affected: set = set()
+    t_fault = [None]
+
+    def _mark(now=None):
+        if t_fault[0] is None:
+            t_fault[0] = time.monotonic()
+
+    if kind == "latency_spike":
+        arm_latency_spike(eng, at_call=10, n_calls=4, sleep_s=0.25)
+    elif kind == "transient_step_error":
+        arm_transient_errors(eng, at_call=6, n_failures=2)
+
+    def on_step(e, step):
+        if kind == "nonfinite_logits" and step == 6 and t_fault[0] is None:
+            _mark()
+            inject_poisoned_decode(e, poison_values(sparse, rng))
+        elif kind == "abort_mid_decode" and step == 4 and t_fault[0] is None:
+            occupied = [s for s in e.slots if s is not None]
+            if occupied:
+                _mark()
+                affected.add(occupied[0].req.rid)
+                e.cancel(occupied[0].req.rid)
+        elif kind == "arena_oom":
+            if step == 2 and t_fault[0] is None:
+                _mark()
+                e.cache.quarantine_blocks(e.cache.free_blocks // 2)
+            elif step == 12:
+                e.cache.release_quarantined()
+
+    t0 = time.monotonic()
+    _drain(eng, reqs, on_step=on_step)
+    wall = time.monotonic() - t0
+    eng.cache.release_quarantined()   # idempotent; guards early drains
+    eng.check_arena()
+
+    st = eng.stats
+    parity = all(
+        (r.output == baseline[r.rid])
+        for r in reqs if r.rid not in affected)
+    states = st.latency_summary()["states"]
+    res.update({
+        "affected_rids": sorted(affected),
+        "states": states,
+        "tokens": st.tokens_generated,
+        "degraded_tokens": st.degraded_tokens,
+        "degraded_token_fraction":
+            st.degraded_tokens / max(1, st.tokens_generated),
+        "quarantines": st.quarantines,
+        "retries": st.retries,
+        "watchdog_flags": st.watchdog_flags,
+        "leaked_blocks": eng.cache.num_blocks - eng.cache.free_blocks,
+        "unaffected_parity": bool(parity),
+        "goodput_tok_s": st.tokens_generated / max(wall, 1e-9),
+        "recovery_s": (None if t_fault[0] is None
+                       else time.monotonic() - t_fault[0]),
+        "wall_s": wall,
+    })
+    return res
+
+
+def check_drill(drill: dict) -> None:
+    """Assert the fault-drill contract: every load fault rejected at
+    construction; every runtime fault drains with zero leaked blocks,
+    bit-identical unaffected slots and the expected counters — a failed
+    assertion here means a fault class could have produced a silent
+    wrong token or a resource leak."""
+    for kind, r in drill["faults"].items():
+        ctx = f"fault drill {kind!r}: {r}"
+        if kind in LOAD_FAULTS:
+            assert r["rejected_at_load"], f"{ctx} — corruption not rejected"
+            continue
+        assert r["leaked_blocks"] == 0, f"{ctx} — leaked paged blocks"
+        assert r["unaffected_parity"], \
+            f"{ctx} — unaffected slot diverged from the no-fault run"
+        states = r["states"]
+        if kind == "nonfinite_logits":
+            assert r["quarantines"] >= 1, f"{ctx} — guard never tripped"
+            assert r["degraded_tokens"] >= 1, \
+                f"{ctx} — no dense-fallback tokens"
+            assert states.get("failed", 0) == 0, f"{ctx} — slots failed"
+        elif kind == "abort_mid_decode":
+            assert states.get("cancelled", 0) >= 1, f"{ctx} — no cancel"
+        elif kind == "arena_oom":
+            assert states.get("failed", 0) == 0, f"{ctx} — slots failed"
+        elif kind == "latency_spike":
+            assert r["watchdog_flags"] >= 1, f"{ctx} — watchdog silent"
+        elif kind == "transient_step_error":
+            assert r["retries"] >= 1, f"{ctx} — retry path never ran"
+            assert states.get("failed", 0) == 0, f"{ctx} — retry exhausted"

@@ -116,6 +116,7 @@ class PagedKVCache(_KVCacheBase):
         self.n_blocks = np.zeros(batch_slots, np.int32)
         self._resv = np.zeros(batch_slots, np.int64)
         self._free = list(range(num_blocks - 1, -1, -1))
+        self._quarantined: list = []    # fault-drill OOM pressure pool
         self._view = None
         self._view_dirty = True
         self._build_jits()
@@ -158,10 +159,17 @@ class PagedKVCache(_KVCacheBase):
                 return jnp.where(m, nw.astype(o.dtype), o)
             return jax.tree.map(leaf, old, new)
 
+        @jax.jit
+        def scrub(pages, idx):
+            # idx: (2,) int32 = (phys, off) — zero one row of every arena
+            return {n: arena.at[:, idx[0], idx[1]].set(0)
+                    for n, arena in pages.items()}
+
         self._gather = gather
         self._scatter_decode = scatter_decode
         self._scatter_chunk = scatter_chunk
         self._mask_state = mask_state
+        self._scrub = scrub
 
     # ----------------------------------------------------------- allocator
     def blocks_needed(self, n_tokens: int) -> int:
@@ -208,6 +216,73 @@ class PagedKVCache(_KVCacheBase):
         self._resv[slot] = 0
         self.block_tables[slot] = 0
         self.zero_slot_state(slot)
+        self._view_dirty = True
+
+    def quarantine_blocks(self, n: int) -> int:
+        """Fault drill: withhold up to ``n`` free blocks to simulate arena
+        pressure.  Only blocks beyond the outstanding reservations are
+        taken — admitted requests keep their "ensure cannot fail"
+        guarantee; the pressure lands on *admission* (reserve), which is
+        the contract's pushback point.  Returns how many were taken."""
+        take = max(0, min(n, len(self._free) - int(self._resv.sum())))
+        for _ in range(take):
+            self._quarantined.append(self._free.pop())
+        return take
+
+    def release_quarantined(self) -> int:
+        n = len(self._quarantined)
+        self._free.extend(self._quarantined)
+        self._quarantined = []
+        return n
+
+    def arena_check(self) -> dict:
+        """Allocator invariant: every physical block is in exactly one of
+        {free, quarantined, some slot's table}, reservations never exceed
+        the free pool.  Raises RuntimeError on violation (the leak-class
+        tripwire the engine can run after every step); returns the
+        accounting."""
+        allocated = []
+        for slot in range(self.b):
+            allocated.extend(int(x) for x in
+                             self.block_tables[slot, :int(self.n_blocks[slot])])
+        every = allocated + [int(x) for x in self._free] + \
+            [int(x) for x in self._quarantined]
+        acct = {"allocated": len(allocated), "free": len(self._free),
+                "quarantined": len(self._quarantined),
+                "reserved": int(self._resv.sum()),
+                "num_blocks": self.num_blocks}
+        if len(every) != self.num_blocks or len(set(every)) != len(every) \
+                or any(x < 0 or x >= self.num_blocks for x in every):
+            raise RuntimeError(
+                f"paged arena accounting violated (leaked or double-owned "
+                f"blocks): {acct}")
+        if acct["reserved"] > acct["free"]:
+            raise RuntimeError(
+                f"outstanding reservations exceed the free pool: {acct}")
+        return acct
+
+    def scrub_row(self, slot: int, pos: int) -> None:
+        """Zero one committed KV row (every layer/leaf) of a slot — the
+        quarantine path's cleanup for a row written by a poisoned decode.
+        Attention masks scores beyond ``len``, but a NaN row still poisons
+        ``sum(p * v)`` through ``0 * NaN``, so the row must be physically
+        zeroed, not just masked."""
+        if not self.pages or pos >= self.view_len:
+            return
+        logical = min(pos // self.block_size, self.blocks_per_slot - 1)
+        if logical >= int(self.n_blocks[slot]):
+            return
+        phys = int(self.block_tables[slot, logical])
+        off = pos % self.block_size
+        self.pages = self._scrub(self.pages,
+                                 jnp.asarray([phys, off], jnp.int32))
+        self._view_dirty = True
+
+    def invalidate_view(self) -> None:
+        """Force the next ``gather_view`` to rebuild from the pages —
+        needed when a tick ran more than one decode closure (healthy +
+        degraded), because ``apply_decode`` caches the *last* closure's
+        view which holds the other population's uncommitted rows."""
         self._view_dirty = True
 
     # --------------------------------------------------------------- views
@@ -310,6 +385,23 @@ class ContiguousKVCache(_KVCacheBase):
     def free_slot(self, slot: int) -> None:
         # stale K/V rows beyond len are masked out; states must be zeroed
         self.zero_slot_state(slot)
+
+    def quarantine_blocks(self, n: int) -> int:
+        return 0                      # no arena to pressure
+
+    def release_quarantined(self) -> int:
+        return 0
+
+    def arena_check(self) -> dict:
+        return {"allocated": 0, "free": 0, "quarantined": 0,
+                "reserved": 0, "num_blocks": 0}
+
+    def scrub_row(self, slot: int, pos: int) -> None:
+        for n in self.seq_names:
+            self.store[n] = self.store[n].at[:, slot, pos].set(0)
+
+    def invalidate_view(self) -> None:
+        pass                          # gather_view reads the store directly
 
     def gather_view(self, lens) -> dict:
         cache = dict(self.store)

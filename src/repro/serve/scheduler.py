@@ -28,9 +28,21 @@ import time
 import numpy as np
 
 __all__ = ["RequestMetrics", "Scheduler", "percentiles",
-           "latency_summary"]
+           "latency_summary", "TERMINAL_STATES"]
 
 POLICIES = ("fcfs", "sjf")
+
+# every request ends in exactly one of these (the robustness contract:
+# "fast" and "fast because we dropped it" are different states):
+#   completed        — full output, healthy datapath throughout
+#   degraded         — full output, but some tokens came from the dense
+#                      fallback after a quarantine (still greedy-correct)
+#   cancelled        — torn down by an explicit cancel()
+#   deadline_expired — torn down by a TTFT / wall-clock deadline
+#   failed           — torn down because no datapath could produce finite
+#                      logits (or retries exhausted)
+TERMINAL_STATES = ("completed", "degraded", "cancelled",
+                   "deadline_expired", "failed")
 
 
 @dataclasses.dataclass
@@ -42,6 +54,7 @@ class RequestMetrics:
     t_first: float | None = None
     t_done: float | None = None
     n_out: int = 0
+    state: str = "in_flight"
 
     @property
     def queue_delay(self) -> float | None:
@@ -71,13 +84,19 @@ def percentiles(xs, qs=(50, 95)) -> dict:
 
 
 def latency_summary(done: list[RequestMetrics]) -> dict:
-    """p50/p95 report over completed requests (shared by the scheduler's
-    summary and the engine's EngineStats)."""
+    """p50/p95 report over finished requests (shared by the scheduler's
+    summary and the engine's EngineStats).  ``states`` counts the
+    terminal state of every finished request, so the latency percentiles
+    can never silently mix dropped requests into "fast"."""
+    states: dict = {}
+    for m in done:
+        states[m.state] = states.get(m.state, 0) + 1
     return {
         "requests": len(done),
         "ttft_s": percentiles([m.ttft for m in done]),
         "tpot_s": percentiles([m.tpot for m in done]),
         "queue_delay_s": percentiles([m.queue_delay for m in done]),
+        "states": states,
     }
 
 
@@ -141,9 +160,42 @@ class Scheduler:
         return "decode", None
 
     # ------------------------------------------------------------- metrics
-    def finish(self, metrics: RequestMetrics) -> None:
+    def finish(self, metrics: RequestMetrics,
+               state: str = "completed") -> None:
+        if state not in TERMINAL_STATES:
+            raise ValueError(f"unknown terminal state {state!r}; "
+                             f"use {TERMINAL_STATES}")
         metrics.t_done = time.monotonic()
+        metrics.state = state
         self.completed.append(metrics)
+
+    def cancel_pending(self, rid: int) -> bool:
+        """Cancel a not-yet-admitted request; returns True if found."""
+        for i, (req, m) in enumerate(self.pending):
+            if req.rid == rid:
+                self.pending.pop(i)
+                req.done = True
+                self.finish(m, "cancelled")
+                return True
+        return False
+
+    def expire_pending(self, now: float) -> list:
+        """Retire queued requests whose deadline passed while waiting for
+        admission; returns their rids."""
+        out = []
+        keep = []
+        for req, m in self.pending:
+            dl = getattr(req, "deadline_s", None)
+            tdl = getattr(req, "ttft_deadline_s", None)
+            limit = min(x for x in (dl, tdl, float("inf")) if x is not None)
+            if now - m.t_submit > limit:
+                req.done = True
+                self.finish(m, "deadline_expired")
+                out.append(req.rid)
+            else:
+                keep.append((req, m))
+        self.pending = keep
+        return out
 
     def summary(self) -> dict:
         return latency_summary(self.completed)

@@ -1,0 +1,427 @@
+"""Serving-layer fault tolerance (DESIGN.md §11).
+
+Three layers under test:
+
+* **pack integrity** — the property that ANY single bit flip in ANY
+  plane of an offline pack (fp, int8, nibble-packed int4) is caught by
+  fingerprint verification; bounds validation catches what hashing
+  cannot interpret (out-of-bounds indices with a *fresh* fingerprint);
+  and a schedule/pack mismatch that passes every structural check is
+  still caught because the SDDS plan digest is bound into the pack
+  fingerprint.
+* **engine hardening** — load-time rejection / degrade-to-dense,
+  quarantine -> dense-fallback parity with zero leaked blocks, cancel
+  and deadline teardown restoring the block pool, capped-backoff retry,
+  and the arena invariant tripwire.
+* **shared strike logic** — the ``StrikePolicy`` both the cluster
+  straggler detector and the serving ``LatencyWatchdog`` escalate
+  through.
+
+The parity assertions are exact (greedy decode is batching-independent)
+— "unaffected slots bit-identical to the no-fault run", not a
+tolerance.
+"""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: fall back to a seeded random sweep
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs.registry import get_config
+from repro.core import integrity
+from repro.core.integrity import PackIntegrityError
+from repro.core.pruning import magnitude_prune
+from repro.core.sparse_format import pack_bucketed_stack, pack_ell_chunked
+from repro.core.sparse_model import (pruned_param_tree, sparsify_model,
+                                     verify_sparse)
+from repro.models import factory
+from repro.runtime.fault_tolerance import LatencyWatchdog, StrikePolicy
+from repro.serve import faults
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.scheduler import TERMINAL_STATES, latency_summary
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand_sparse(r, c, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return magnitude_prune(rng.standard_normal((r, c)).astype(np.float32), s)
+
+
+def _quantized(pack, mode):
+    from repro.quant import default_spec
+    from repro.quant.qpack import quantize_bucketed_stack, quantize_pack
+    if hasattr(pack, "buckets"):
+        quantize_bucketed_stack(pack, default_spec(mode))
+    else:
+        quantize_pack(pack, default_spec(mode))
+    return pack
+
+
+def _make_pack(kind):
+    if kind.startswith("ell"):
+        p = pack_ell_chunked(_rand_sparse(64, 48, 0.8), row_tile=16,
+                             chunk_cols=16)
+    else:
+        mats = [[_rand_sparse(48, 32, 0.8, seed=h * 7 + l) for l in range(2)]
+                for h in range(2)]
+        p = pack_bucketed_stack(mats, row_tile=16, chunk_cols=16,
+                                n_buckets=2)
+    if kind.endswith("_int8"):
+        p = _quantized(p, "int8")
+    elif kind.endswith("_int4"):
+        p = _quantized(p, "int4")
+    return p
+
+
+PACK_KINDS = ("ell_chunked", "ell_chunked_int8", "ell_chunked_int4",
+              "bucketed", "bucketed_int8", "bucketed_int4")
+_PACK_CACHE: dict = {}
+
+
+def _pack(kind):
+    if kind not in _PACK_CACHE:
+        _PACK_CACHE[kind] = _make_pack(kind)
+    return _PACK_CACHE[kind]
+
+
+# --------------------------------------------------------------------------
+# 1) pack integrity: the bit-flip property
+# --------------------------------------------------------------------------
+def _flip_bit_inplace(arr, bit_seed):
+    flat = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
+    bit = bit_seed % (flat.size * 8)
+    # mutate through the original buffer when contiguous (the builders
+    # always produce contiguous planes, so this aliases the pack)
+    tgt = arr.view(np.uint8).reshape(-1)
+    tgt[bit // 8] ^= np.uint8(1 << (bit % 8))
+
+
+@settings(max_examples=30, deadline=None)
+@given(kind=st.sampled_from(PACK_KINDS),
+       plane_seed=st.integers(0, 10**6), bit_seed=st.integers(0, 10**6))
+def test_any_single_bitflip_is_caught(kind, plane_seed, bit_seed):
+    """Flip one uniformly-chosen bit of one uniformly-chosen plane —
+    index, value, valid-mask, perm, quant codes, scales or group bits —
+    and verification must raise.  sha256 makes this a certainty, but the
+    property pins the *wiring*: every plane the decode path consumes is
+    inside the fingerprint."""
+    pack = copy.deepcopy(_pack(kind))
+    assert pack.fingerprint is not None, "builders must fingerprint"
+    integrity.verify_pack(pack)         # pristine copy passes
+    planes, _ = integrity.pack_planes(pack)
+    name = sorted(planes)[plane_seed % len(planes)]
+    _flip_bit_inplace(planes[name], bit_seed)
+    with pytest.raises(PackIntegrityError):
+        integrity.verify_pack(pack)
+
+
+def test_bounds_validation_catches_oob_even_with_fresh_fingerprint():
+    """Hashing catches corruption-after-build; bounds validation catches
+    packs that were *built wrong* (or re-fingerprinted after corruption):
+    an index outside the chunk's gather domain fails validate_pack even
+    when the digests are internally consistent."""
+    pack = copy.deepcopy(_pack("ell_chunked"))
+    slot = tuple(np.argwhere(pack.valid)[0])
+    pack.cols[slot] = pack.chunk_cols + 3          # beyond any chunk limit
+    pack.fingerprint = integrity.fingerprint_pack(pack)   # digests agree
+    with pytest.raises(PackIntegrityError, match="out of bounds"):
+        integrity.verify_pack(pack)
+
+
+def test_schedule_mismatch_caught_only_by_bound_fingerprint():
+    """Roll perm+inv_perm one layer: each layer's pair stays a valid
+    permutation (bounds/involution checks pass — validate_pack is happy
+    with NO fingerprint), yet the pack now decodes under the wrong
+    schedule; the bound fingerprint is the only thing that catches it."""
+    pack = copy.deepcopy(_pack("bucketed"))
+    pack.perm = np.roll(pack.perm, 1, axis=0)
+    pack.inv_perm = np.roll(pack.inv_perm, 1, axis=0)
+    integrity.validate_pack(pack)                  # structurally clean
+    with pytest.raises(PackIntegrityError, match="perm"):
+        integrity.verify_pack(pack)
+
+
+# --------------------------------------------------------------------------
+# 2) engine: load-time verification and the degrade ladder
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def llama_sparse():
+    cfg = get_config("llama7b-espim", reduced=True)
+    params = factory.init_params(cfg, KEY)
+    sparse = sparsify_model(cfg, params, 0.9, row_tile=32)
+    return cfg, params, sparse
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("granite-3-2b", reduced=True)
+    params = factory.init_params(cfg, KEY)
+    return cfg, params
+
+
+def _reqs(cfg, n, max_new=6, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(
+        1, cfg.vocab_size, 4 + 3 * (i % 3)).tolist(),
+        max_new_tokens=max_new, **kw) for i in range(n)]
+
+
+def _drain(eng, reqs, on_step=None, max_steps=2000):
+    for r in reqs:
+        eng.submit(r)
+    steps = 0
+    while steps < max_steps and (eng.scheduler.has_pending
+                                 or any(s is not None for s in eng.slots)):
+        eng.step()
+        steps += 1
+        if on_step:
+            on_step(eng, steps)
+
+
+def test_engine_rejects_corruption_at_load(llama_sparse):
+    cfg, params, sparse = llama_sparse
+    rng = np.random.default_rng(0)
+    for bad in (faults.corrupt_group_plane(sparse, "index", rng),
+                faults.corrupt_group_plane(sparse, "value", rng),
+                faults.mismatch_schedule(sparse)):
+        with pytest.raises(PackIntegrityError):
+            ServeEngine(cfg, params, batch_slots=2, max_len=64,
+                        sparse=bad, block_size=8, prefill_chunk=8)
+    # the clean dict still verifies and the engine records the digests
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64, sparse=sparse,
+                      block_size=8, prefill_chunk=8)
+    assert eng.verified_packs == verify_sparse(sparse)
+
+
+def test_on_verify_failure_degrade_serves_dense(llama_sparse):
+    cfg, params, sparse = llama_sparse
+    bad = faults.corrupt_group_plane(sparse, "value",
+                                     np.random.default_rng(1))
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=64, sparse=bad,
+                      block_size=8, prefill_chunk=8,
+                      on_verify_failure="degrade")
+    assert eng.sparse is None and eng.stats.degraded_to_dense
+    reqs = _reqs(cfg, 1)
+    _drain(eng, reqs)
+    assert eng.stats.requests_completed == 1 and len(reqs[0].output) == 6
+    assert eng.cache.free_blocks == eng.cache.num_blocks
+
+
+def test_quarantine_degrades_to_dense_with_parity(llama_sparse):
+    """Runtime value-plane poison (injected AFTER load verification
+    passed): every poisoned tick is quarantined — no emit, no KV commit —
+    then served by the dense fallback; because the fallback reconstructs
+    the clean pruned weights, the final outputs are bit-identical to the
+    no-fault run, with zero leaked blocks."""
+    cfg, params, sparse = llama_sparse
+
+    def run(poison):
+        eng = ServeEngine(cfg, params, batch_slots=2, max_len=64,
+                          sparse=sparse, block_size=8, prefill_chunk=8,
+                          validate_arena=True)
+        reqs = _reqs(cfg, 3)
+
+        def on_step(e, step):
+            if poison and step == 5:
+                e._poisoned = True
+                faults.inject_poisoned_decode(
+                    e, faults.poison_values(sparse,
+                                            np.random.default_rng(2)))
+        _drain(eng, reqs, on_step=on_step)
+        return eng, [r.output for r in reqs]
+
+    eng_base, base = run(False)
+    eng_bad, outs = run(True)
+    assert outs == base                      # exact greedy parity
+    assert eng_bad.stats.quarantines >= 1
+    assert eng_bad.stats.degraded_tokens >= 1
+    assert eng_bad.stats.requests_failed == 0
+    assert eng_bad.stats.requests_completed == 3
+    assert eng_bad.stats.requests_degraded >= 1
+    assert eng_bad.cache.free_blocks == eng_bad.cache.num_blocks
+    states = eng_bad.stats.latency_summary()["states"]
+    assert set(states) <= {"completed", "degraded"}
+
+
+def test_dense_engine_nonfinite_fails_cleanly(dense_setup):
+    """A dense engine has no fallback rung: a non-finite slot ends
+    ``failed`` — blocks released, other slots' outputs untouched."""
+    cfg, params = dense_setup
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48,
+                      block_size=8, validate_arena=True)
+    reqs = _reqs(cfg, 2)
+    armed = []
+
+    def on_step(e, step):
+        if step == 4 and not armed:
+            armed.append(step)
+            faults.force_nonfinite_flag(e, slots=[0], n_calls=1)
+    _drain(eng, reqs, on_step=on_step)
+    assert eng.stats.quarantines == 1
+    assert eng.stats.requests_failed == 1
+    assert eng.stats.requests_completed == 1
+    assert eng.cache.free_blocks == eng.cache.num_blocks
+
+
+# --------------------------------------------------------------------------
+# 3) engine: cancel / deadline / retry / arena invariant
+# --------------------------------------------------------------------------
+def test_cancel_releases_blocks_and_preserves_others(dense_setup):
+    cfg, params = dense_setup
+    # solo reference run for the surviving request
+    solo = ServeEngine(cfg, params, batch_slots=2, max_len=48, block_size=8)
+    ref = _reqs(cfg, 2)[1]
+    _drain(solo, [ref])
+
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, block_size=8,
+                      validate_arena=True)
+    reqs = _reqs(cfg, 3)
+    done = []
+
+    def on_step(e, step):
+        if step == 3 and not done:
+            done.append(step)
+            assert e.cancel(reqs[0].rid)       # in-flight
+            assert e.cancel(reqs[2].rid)       # still queued
+            assert not e.cancel(99)            # unknown rid
+    _drain(eng, reqs, on_step=on_step)
+    assert eng.stats.requests_cancelled == 2
+    assert eng.stats.requests_completed == 1
+    assert reqs[0].done and reqs[2].done and reqs[2].output == []
+    assert reqs[1].output == ref.output        # unaffected slot parity
+    assert eng.cache.free_blocks == eng.cache.num_blocks
+    states = eng.stats.latency_summary()["states"]
+    assert states.get("cancelled") == 2 and states.get("completed") == 1
+
+
+def test_deadlines_expire_queued_and_inflight(dense_setup):
+    cfg, params = dense_setup
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=48, block_size=8)
+    occupant, queued = _reqs(cfg, 2, max_new=4)
+    queued.deadline_s = 0.0                    # expires while waiting
+    eng.submit(occupant)
+    eng.submit(queued)
+    eng.step()
+    eng.step()
+    # now expire the in-flight occupant via its total wall-clock deadline
+    occupant.deadline_s = 0.0
+    _drain(eng, [])
+    assert occupant.done and queued.done
+    assert eng.stats.requests_deadline_expired == 2
+    assert eng.cache.free_blocks == eng.cache.num_blocks
+    st = eng.stats.latency_summary()["states"]
+    assert st.get("deadline_expired") == 2
+
+    # TTFT deadline: never produces a first token -> expired
+    eng2 = ServeEngine(cfg, params, batch_slots=1, max_len=48, block_size=8)
+    r = _reqs(cfg, 1, max_new=4)[0]
+    r.ttft_deadline_s = -1.0
+    _drain(eng2, [r])
+    assert r.done and r.output == []
+    assert eng2.stats.requests_deadline_expired == 1
+
+
+def test_transient_retry_recovers_with_parity(dense_setup):
+    cfg, params = dense_setup
+    base_eng = ServeEngine(cfg, params, batch_slots=2, max_len=48,
+                           block_size=8)
+    base = _reqs(cfg, 2)
+    _drain(base_eng, base)
+
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, block_size=8,
+                      max_retries=2, retry_backoff=0.001)
+    state = None
+    reqs = _reqs(cfg, 2)
+
+    def on_step(e, step):
+        nonlocal state
+        if step == 3 and state is None:
+            state = faults.arm_transient_errors(e, at_call=1, n_failures=2)
+    _drain(eng, reqs, on_step=on_step)
+    assert state["fails"] == 2
+    assert eng.stats.retries == 2
+    assert eng.stats.requests_failed == 0
+    assert [r.output for r in reqs] == [r.output for r in base]
+
+    # exhaustion: more consecutive failures than retries -> slots end
+    # "failed", the engine itself survives and drains
+    eng2 = ServeEngine(cfg, params, batch_slots=2, max_len=48, block_size=8,
+                       max_retries=1, retry_backoff=0.001)
+    reqs2 = _reqs(cfg, 2)
+    armed = []
+
+    def on_step2(e, step):
+        if step == 3 and not armed:
+            armed.append(faults.arm_transient_errors(e, at_call=1,
+                                                     n_failures=99))
+    _drain(eng2, reqs2, on_step=on_step2)
+    assert eng2.stats.requests_failed == 2
+    assert eng2.cache.free_blocks == eng2.cache.num_blocks
+
+
+def test_arena_invariant_tripwire(dense_setup):
+    cfg, params = dense_setup
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, block_size=8,
+                      validate_arena=True)
+    reqs = _reqs(cfg, 2)
+    _drain(eng, reqs)                  # per-step check stayed silent
+    acct = eng.check_arena()
+    assert acct["free"] == acct["num_blocks"] and acct["allocated"] == 0
+    eng.cache._free.pop()              # simulate a leaked block
+    with pytest.raises(RuntimeError, match="arena accounting"):
+        eng.check_arena()
+
+
+def test_arena_oom_pressure_only_delays_admission(dense_setup):
+    cfg, params = dense_setup
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, block_size=8,
+                      validate_arena=True)
+    reqs = _reqs(cfg, 3)
+
+    def on_step(e, step):
+        if step == 1:
+            e.cache.quarantine_blocks(e.cache.free_blocks // 2)
+        elif step == 10:
+            e.cache.release_quarantined()
+    _drain(eng, reqs, on_step=on_step)
+    eng.cache.release_quarantined()
+    assert eng.stats.requests_completed == 3
+    assert eng.stats.requests_failed == 0
+    assert eng.cache.free_blocks == eng.cache.num_blocks
+
+
+# --------------------------------------------------------------------------
+# 4) shared strike logic + terminal-state plumbing
+# --------------------------------------------------------------------------
+def test_strike_policy_and_watchdog():
+    pol = StrikePolicy(patience=3)
+    assert not pol.strike("w") and not pol.strike("w")
+    pol.clear("w")                         # one clean observation forgives
+    assert not pol.strike("w") and not pol.strike("w")
+    assert pol.strike("w")                 # third consecutive trips
+
+    wd = LatencyWatchdog(threshold=3.0, patience=2, min_samples=4)
+    for _ in range(6):
+        assert not wd.observe(0.01)        # build the baseline
+    assert not wd.observe(1.0)             # first spike: strike, no trip
+    assert wd.observe(1.0)                 # second consecutive: trip
+    assert not wd.observe(0.01)            # clean step resets the streak
+    assert not wd.observe(1.0)
+
+
+def test_terminal_states_contract():
+    assert set(TERMINAL_STATES) == {"completed", "degraded", "cancelled",
+                                    "deadline_expired", "failed"}
+    from repro.serve.scheduler import RequestMetrics, Scheduler
+    s = Scheduler()
+    m = RequestMetrics(rid=0, prompt_len=1, t_submit=0.0)
+    with pytest.raises(ValueError):
+        s.finish(m, "vanished")
+    s.finish(m, "failed")
+    assert latency_summary(s.completed)["states"] == {"failed": 1}

@@ -31,7 +31,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -41,11 +40,18 @@ from repro.core.pruning import magnitude_prune
 from repro.core.sparse_format import chunk_pack, pack_bucketed_stack, pack_ell
 from repro.kernels import ops, ref
 from repro.quant import default_spec, quantize_bucketed_stack
+from repro.telemetry import time_launch
+from repro.telemetry.trace import BREAKDOWN_SCHEMA_KEYS, Tracer, \
+    phase_breakdown
 
 from benchmarks.common import csv_row
 
 JSON_PATH = "BENCH_kernels.json"
 SMOKE_JSON_PATH = "BENCH_kernels_smoke.json"
+
+# every _time() launch (warmup AND timed iterations) lands here, so the
+# report's ``breakdown`` section can attribute bench wall to phases
+_TRACER = Tracer(enabled=True)
 
 # the decode sweep: Table III serving matrices (paper Section IV) at the
 # headline 90% sparsity, batch widths around continuous-batching slots
@@ -58,15 +64,13 @@ DECODE_CHUNKS = (512, 1024)
 N_BUCKETS = 4
 
 
-def _time(fn, *args, iters=5):
-    fn(*args).block_until_ready()  # compile + warm
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        out.block_until_ready()
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6
+def _time(fn, *args, iters=5, label="launch", **kw):
+    """One launch site through the shared telemetry harness (PR 7):
+    warmup discard + per-iteration fencing + histogram p50/p95 next to
+    the historic best-of figure.  Returns a ``LaunchTiming``; call sites
+    read ``.best_us`` where they used to take the bare float."""
+    return time_launch(fn, *args, iters=iters, warmup=1, tracer=_TRACER,
+                       label=label, **kw)
 
 
 def _bench_unbatched(rows: list[str], report: dict) -> None:
@@ -81,8 +85,15 @@ def _bench_unbatched(rows: list[str], report: dict) -> None:
         sparse_fn = jax.jit(lambda v, cc, xx: ops.espim_spmv(
             v, cc, xx, chunk_cols=dev.chunk_cols, impl="ref"))
         dense_fn = jax.jit(lambda ww, xx: ww @ xx)
-        us_sparse = _time(sparse_fn, dev.values, dev.cols, x)
-        us_dense = _time(dense_fn, wd, x)
+        t_dense = _time(dense_fn, wd, x, label=f"dense/{r}x{c}")
+        us_dense = t_dense.best_us
+        # value + index plane bytes one MV streams (the pin traffic) vs
+        # the dense roofline on the same device — per-launch GB/s figures
+        plane_bytes = 4 * int(dev.values.size) + 4 * int(dev.cols.size)
+        t_sparse = _time(sparse_fn, dev.values, dev.cols, x,
+                         label=f"spmv/{r}x{c}", bytes_moved=plane_bytes,
+                         dense_bytes=4 * r * c, dense_us=us_dense)
+        us_sparse = t_sparse.best_us
         rows.append(csv_row(
             f"kernels/espim_spmv/{r}x{c}_s{int(s*100)}", us_sparse,
             f"dense_us={us_dense:.1f};speedup={us_dense/us_sparse:.2f}x;"
@@ -90,6 +101,10 @@ def _bench_unbatched(rows: list[str], report: dict) -> None:
         report["unbatched"].append({
             "shape": f"{r}x{c}", "rows": r, "cols": c, "sparsity": s,
             "sparse_us": round(us_sparse, 1), "dense_us": round(us_dense, 1),
+            "sparse_p50_us": round(t_sparse.p50_us, 1),
+            "sparse_p95_us": round(t_sparse.p95_us, 1),
+            "gbps_best": round(t_sparse.gbps_best, 3),
+            "roofline_frac": round(t_sparse.roofline_frac, 3),
             "ell_width": pack.stats.ell_width,
             "pad_frac": round(pack.stats.padding_frac, 4),
         })
@@ -159,7 +174,8 @@ def _bench_batched_decode(rows: list[str], report: dict) -> None:
         # reuse across the batch sweep (calibration is B-independent)
         for b in DECODE_BATCH:
             x = jnp.asarray(rng.standard_normal((c, b)), jnp.float32)
-            us_old = _time(old_fn, v2, c2, x, iters=3)
+            us_old = _time(old_fn, v2, c2, x, iters=3,
+                           label=f"einsum/{name}/B{b}").best_us
 
             prev = None
             for cc, cp in chunked.items():
@@ -167,7 +183,8 @@ def _bench_batched_decode(rows: list[str], report: dict) -> None:
                 c3 = jnp.asarray(cp.cols, jnp.int32)
                 fn = jax.jit(lambda v, cl, xx, _cc=cc: ops.espim_spmv_batched(
                     v, cl, xx, chunk_cols=_cc, impl="ref"))
-                us = _time(fn, v3, c3, x, iters=3)
+                us = _time(fn, v3, c3, x, iters=3,
+                           label=f"chunked/{name}/B{b}").best_us
                 cand = {"chunk_cols": cc, "us": round(us, 1),
                         "chunk_width": cp.chunk_width,
                         "pad_frac": round(cp.stats.padding_frac, 4)}
@@ -177,8 +194,12 @@ def _bench_batched_decode(rows: list[str], report: dict) -> None:
             best = None
             detail = []
             for cc, bp in bucketed.items():
-                us = _time(_bucketed_fn(bp), x, iters=3)
+                t = _time(_bucketed_fn(bp), x, iters=3,
+                          label=f"bucketed/{name}/B{b}")
+                us = t.best_us
                 cand = {"chunk_cols": cc, "us": round(us, 1),
+                        "p50_us": round(t.p50_us, 1),
+                        "p95_us": round(t.p95_us, 1),
                         "bucket_rows": list(bp.bucket_rows),
                         "bucket_widths": list(bp.widths),
                         "pad_frac": round(bp.pad_frac, 4)}
@@ -190,22 +211,34 @@ def _bench_batched_decode(rows: list[str], report: dict) -> None:
             # fp32 vs int8 vs nibble-packed int4, bytes-per-MV alongside
             bp_best = bucketed[best["chunk_cols"]]
             vb_fp, ib = _pack_bytes(bp_best)
-            quant_rows = {"fp": {"us": best["us"], "value_bytes": vb_fp,
+            quant_rows = {"fp": {"us": best["us"],
+                                 "p50_us": best["p50_us"],
+                                 "p95_us": best["p95_us"],
+                                 "value_bytes": vb_fp,
                                  "index_bytes": ib,
-                                 "bytes_per_mv": vb_fp + ib}}
+                                 "bytes_per_mv": vb_fp + ib,
+                                 "gbps_best": round(
+                                     (vb_fp + ib) / max(best["us"], 1e-3)
+                                     / 1e3, 3)}}
             for mode in ("int8", "int4"):
                 key = (best["chunk_cols"], mode)
                 if key not in qcache:
                     qcache[key] = quantize_bucketed_stack(
                         bp_best, default_spec(mode), attach=False)
                 bp_best.qplanes = qcache[key]
-                us_q = _time(_bucketed_quant_fn(bp_best), x, iters=3)
                 vb, _ = _pack_bytes(bp_best, quant=mode)
+                t_q = _time(_bucketed_quant_fn(bp_best), x, iters=3,
+                            label=f"bucketed_{mode}/{name}/B{b}",
+                            bytes_moved=vb + ib)
+                us_q = t_q.best_us
                 quant_rows[mode] = {
                     "us": round(us_q, 1),
+                    "p50_us": round(t_q.p50_us, 1),
+                    "p95_us": round(t_q.p95_us, 1),
                     "value_bytes": vb,
                     "index_bytes": ib,
                     "bytes_per_mv": vb + ib,
+                    "gbps_best": round(t_q.gbps_best, 3),
                     "bits_per_nnz": round(8.0 * vb / max(1, bp_best.nnz), 2),
                     "speedup_vs_fp": round(best["us"] / us_q, 3),
                     "storage": bp_best.qplanes[0].storage,
@@ -220,6 +253,8 @@ def _bench_batched_decode(rows: list[str], report: dict) -> None:
                 "prev_chunk_cols": prev["chunk_cols"],
                 "prev_pad_frac": prev["pad_frac"],
                 "fused_us": best["us"],
+                "fused_p50_us": best["p50_us"],
+                "fused_p95_us": best["p95_us"],
                 "chunk_cols": best["chunk_cols"],
                 "bucket_widths": best["bucket_widths"],
                 "pad_frac": best["pad_frac"],
@@ -270,10 +305,14 @@ def _smoke(report: dict) -> None:
     err = float(jnp.abs(got - want).max() / jnp.abs(want).max())
     assert err < 5e-5, f"fused decode layer diverged from pruned dense: {err}"
 
+    t_fused = _time(fused, hn, label="smoke/fused_layer")
     report["smoke_result"] = {
         "arch": cfg.name, "reduced": True, "B": 8,
-        "fused_layer_us": round(_time(fused, hn), 1),
-        "dense_layer_us": round(_time(dense, hn), 1),
+        "fused_layer_us": round(t_fused.best_us, 1),
+        "fused_layer_p50_us": round(t_fused.p50_us, 1),
+        "fused_layer_p95_us": round(t_fused.p95_us, 1),
+        "dense_layer_us": round(_time(dense, hn,
+                                      label="smoke/dense_layer").best_us, 1),
         "max_rel_err": err,
         "gateup_buckets": list(sparse["gateup"]["bucket_rows"]),
         "gateup_widths": list(sparse["gateup"]["widths"]),
@@ -288,8 +327,11 @@ def _smoke(report: dict) -> None:
             f"{mode} fused layer diverged from its dequantized dense "
             f"reference: {err_q}")
         st = SM.sparse_stats(sparse_q)
+        t_q = _time(fused_q, hn, label=f"smoke/fused_layer_{mode}")
         report["smoke_result"]["quant"][mode] = {
-            "fused_layer_us": round(_time(fused_q, hn), 1),
+            "fused_layer_us": round(t_q.best_us, 1),
+            "fused_layer_p50_us": round(t_q.p50_us, 1),
+            "fused_layer_p95_us": round(t_q.p95_us, 1),
             "max_rel_err": err_q,
             "bits_per_nnz": round(st["total"]["bits_per_nnz"], 2),
             "bytes_per_token": st["total"]["bytes_per_token"],
@@ -311,12 +353,16 @@ def _smoke(report: dict) -> None:
     assert err_a < 5e-4, (
         f"attention-sparse decode step diverged from pruned dense: {err_a}")
     st_a = SM.sparse_stats(sparse_a)
+    t_s = _time(lambda t: dec_s(params, cache_s, {"tokens": t})[0], toks,
+                label="smoke/attn_sparse_step")
     report["smoke_result"]["attn_sparse"] = {
         "max_rel_err": err_a,
-        "sparse_step_us": round(_time(
-            lambda t: dec_s(params, cache_s, {"tokens": t})[0], toks), 1),
+        "sparse_step_us": round(t_s.best_us, 1),
+        "sparse_step_p50_us": round(t_s.p50_us, 1),
+        "sparse_step_p95_us": round(t_s.p95_us, 1),
         "dense_step_us": round(_time(
-            lambda t: dec_d(pruned, cache_d, {"tokens": t})[0], toks), 1),
+            lambda t: dec_d(pruned, cache_d, {"tokens": t})[0], toks,
+            label="smoke/attn_dense_step").best_us, 1),
         "bytes_per_token": st_a["total"]["bytes_per_token"],
         "groups": list(sparse_a["groups"]),
     }
@@ -326,9 +372,15 @@ def check_schema(report: dict, smoke: bool) -> None:
     assert report["schema"] == "espim-kernels-bench/v3"
     assert "provenance" in report and "backend" in report["provenance"]
     assert "quant" in report["provenance"]
+    # the per-phase breakdown section (PR 7) — same schema as serve_bench
+    for k in BREAKDOWN_SCHEMA_KEYS:
+        assert k in report["breakdown"], f"breakdown.{k} missing"
+    assert {"warmup", "timed"} <= set(report["breakdown"]["phases"]), \
+        report["breakdown"]["phases"].keys()
     if smoke:
         s = report["smoke_result"]
-        for k in ("fused_layer_us", "dense_layer_us", "max_rel_err"):
+        for k in ("fused_layer_us", "dense_layer_us", "max_rel_err",
+                  "fused_layer_p50_us", "fused_layer_p95_us"):
             assert k in s, f"smoke_result.{k} missing"
         for mode in ("int8", "int4"):
             q = s["quant"][mode]
@@ -340,7 +392,7 @@ def check_schema(report: dict, smoke: bool) -> None:
         return
     for e in report["batched_decode"]:
         for k in ("einsum_us", "prev_fused_us", "fused_us", "pad_frac",
-                  "speedup_vs_prev"):
+                  "speedup_vs_prev", "fused_p50_us", "fused_p95_us"):
             assert k in e, f"batched_decode.{k} missing"
         for mode in ("fp", "int8", "int4"):
             assert "bytes_per_mv" in e["quant"][mode], (e["shape"], mode)
@@ -351,6 +403,7 @@ def check_schema(report: dict, smoke: bool) -> None:
 
 def run(smoke: bool = False) -> list[str]:
     rows: list[str] = []
+    _TRACER.clear()
     report = {
         "schema": "espim-kernels-bench/v3",
         "backend": jax.default_backend(),
@@ -395,6 +448,9 @@ def run(smoke: bool = False) -> list[str]:
                 (e["quant"]["int8"]["speedup_vs_fp"]
                  for e in by_case.values()), default=None),
         }
+    # warmup vs timed wall attribution over every launch the run made —
+    # the same BREAKDOWN_SCHEMA_KEYS section serve_bench emits per step
+    report["breakdown"] = phase_breakdown(_TRACER)
     check_schema(report, smoke)
     with open(SMOKE_JSON_PATH if smoke else JSON_PATH, "w") as f:
         json.dump(report, f, indent=2)

@@ -10,9 +10,13 @@ section 9) and prints the measured weight-bytes/token reduction.
 ``--sparse-attn`` serves the WHOLE decoder layer from the format — the
 fused QKV + O pack groups (DESIGN.md section 10) on top of the MLP packs
 — and prints the dense-attention vs whole-layer bytes/token delta.
+``--trace out.json`` records every engine phase (scheduler / prefill /
+decode / host sync) as nested spans and writes a Perfetto/Chrome trace —
+open it at https://ui.perfetto.dev — plus a per-phase breakdown on
+stdout (DESIGN.md section 12).
 
 Run:  PYTHONPATH=src python examples/serve_sparse_llm.py \
-          [--quant int4] [--sparse-attn]
+          [--quant int4] [--sparse-attn] [--trace out.json]
 """
 import argparse
 import time
@@ -25,8 +29,10 @@ from repro.configs.registry import get_config
 from repro.core.espim_linear import ESPIMGroupLinear
 from repro.core.pruning import magnitude_prune
 from repro.core.sparse_model import sparse_stats, sparsify_model
+from repro.kernels import ops
 from repro.models import factory
 from repro.serve.engine import Request, ServeEngine
+from repro.telemetry.trace import Tracer, phase_breakdown
 
 SPARSITY = 0.9
 
@@ -39,8 +45,13 @@ ap.add_argument("--quant", choices=("none", "int8", "int4"),
 ap.add_argument("--sparse-attn", action="store_true",
                 help="pack q/k/v/o too (fused QKV + O groups) and serve "
                      "every per-token MV from the compressed format")
+ap.add_argument("--trace", default=None, metavar="PATH",
+                help="write a Perfetto/Chrome trace of the serving run "
+                     "(open at https://ui.perfetto.dev); .jsonl paths get "
+                     "the plain event-log format instead")
 args = ap.parse_args()
 QUANT = args.quant
+tracer = Tracer(enabled=args.trace is not None)
 params = factory.init_params(cfg, jax.random.PRNGKey(0))
 
 # --- flexible dense/sparse projections (Section III-I) ---------------------
@@ -106,7 +117,7 @@ prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
 
 eng = ServeEngine(cfg, params, batch_slots=4, max_len=96, sparse=sparse,
                   paged=True, block_size=16, prefill_chunk=16,
-                  policy="sjf")
+                  policy="sjf", tracer=tracer)
 reqs = [Request(rid=rid, prompt=p, max_new_tokens=12)
         for rid, p in enumerate(prompts)]
 for r in reqs:
@@ -127,3 +138,19 @@ print(f"TTFT p50/p95 = {lat['ttft_s']['p50']:.3f}/"
       f"(sjf over {len(reqs)} mixed-length prompts, "
       f"arena {eng.cache.num_blocks} x {eng.cache.block_size}-token "
       f"blocks)")
+
+if args.trace:
+    prov = ops.provenance(impl=eng.impl, quant=QUANT,
+                          attn="sparse" if args.sparse_attn else "dense")
+    if args.trace.endswith(".jsonl"):
+        tracer.write_jsonl(args.trace, provenance=prov)
+    else:
+        tracer.write_chrome_trace(args.trace, provenance=prov)
+    bd = phase_breakdown(tracer, parent="engine.step")
+    phases = ", ".join(f"{k} {v['frac']:.0%}"
+                       for k, v in sorted(bd["phases"].items(),
+                                          key=lambda kv: -kv[1]["frac"]))
+    print(f"\ntrace: {len(tracer.spans())} spans -> {args.trace} "
+          f"(open at https://ui.perfetto.dev)\n"
+          f"engine.step breakdown ({bd['coverage']:.0%} of "
+          f"{bd['wall_us'] / 1e3:.1f}ms step wall): {phases}")

@@ -6,8 +6,11 @@
 # the pruned copies — so a kernel-, quant- or pack-group regression
 # fails here in seconds, long before the full serve bench), then the
 # serving fault-drill smoke (every fault class rejected at load or
-# recovered with zero leaks — the robustness gate), then tier-1 tests,
-# then the serving benchmark smoke.
+# recovered with zero leaks — the robustness gate; traced, so the drill
+# emits a validated span trace too), then tier-1 tests, then the serving
+# benchmark smoke (traced: the telemetry gate validates the Chrome
+# trace_event schema, >= 95% engine.step span coverage, and the metrics
+# snapshot against the checked-in REQUIRED_SERVE_METRICS family list).
 #
 #   scripts/ci.sh                  # smoke benches + tests
 #   FULL_BENCH=1 scripts/ci.sh     # also regenerate the full BENCH_kernels.json
@@ -30,7 +33,7 @@ PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" ESPIM_IMPL=ref \
 echo "== serving fault-drill smoke: bit flips rejected at load, quarantine->dense, cancel/OOM/retry recovery =="
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" ESPIM_IMPL=ref \
     python benchmarks/serve_bench.py --fault-drill --smoke \
-    --out BENCH_fault_drill_smoke.json
+    --out BENCH_fault_drill_smoke.json --trace TRACE_fault_drill_smoke.json
 test -f BENCH_fault_drill_smoke.json && echo "BENCH_fault_drill_smoke.json written"
 
 echo "== tier-1 tests =="
@@ -42,7 +45,36 @@ if [ -n "${FULL_BENCH:-}" ]; then
     test -f BENCH_kernels.json && echo "BENCH_kernels.json written"
 fi
 
-echo "== serving benchmark smoke =="
+echo "== serving benchmark smoke (traced) =="
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/serve_bench.py \
-    --smoke --out BENCH_serve_smoke.json
+    --smoke --out BENCH_serve_smoke.json --trace TRACE_serve_smoke.json
 test -f BENCH_serve_smoke.json && echo "BENCH_serve_smoke.json written"
+
+echo "== telemetry smoke: trace_event schema + span coverage + metrics snapshot =="
+python - <<'EOF'
+import json
+
+from repro.telemetry.trace import BREAKDOWN_SCHEMA_KEYS, validate_chrome_trace
+
+for path in ("TRACE_serve_smoke.json", "TRACE_fault_drill_smoke.json"):
+    doc = json.load(open(path))
+    validate_chrome_trace(doc)
+    assert doc["otherData"]["provenance"]["impl"], path
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert "engine.step" in names, f"{path}: no engine.step spans"
+    print(f"{path}: {len(doc['traceEvents'])} events, schema valid")
+
+bench = json.load(open("BENCH_serve_smoke.json"))
+tel = bench["telemetry"]
+assert all(k in tel["breakdown"] for k in BREAKDOWN_SCHEMA_KEYS)
+assert tel["step_coverage"] >= 0.95, tel["step_coverage"]
+assert tel["overlap_errors"] == 0
+# the snapshot was validated against REQUIRED_SERVE_METRICS inside the
+# bench (validate_snapshot); re-assert the family list is intact here
+from repro.telemetry.metrics import REQUIRED_SERVE_METRICS
+missing = [m for m in REQUIRED_SERVE_METRICS
+           if m not in tel["metrics_families"]]
+assert not missing, f"metrics families missing from traced run: {missing}"
+print(f"telemetry smoke ok: step coverage {tel['step_coverage']:.1%}, "
+      f"{len(tel['metrics_families'])} metric families")
+EOF

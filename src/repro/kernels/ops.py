@@ -16,6 +16,7 @@ matvec path and lowers through the einsum reference.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 
 import jax
@@ -28,6 +29,7 @@ from repro.kernels.dense_mv import dense_mv_pallas
 from repro.kernels.espim_spmv import (espim_spmv_batched_pallas,
                                       espim_spmv_batched_quant_pallas,
                                       espim_spmv_pallas)
+from repro.telemetry.trace import get_tracer
 
 __all__ = [
     "on_tpu",
@@ -39,6 +41,7 @@ __all__ = [
     "EspimWeights",
     "QuantEspimWeights",
     "pack_to_device",
+    "Provenance",
     "provenance",
     "DEFAULT_CHUNK_COLS",
     "ENV_IMPL",
@@ -80,25 +83,65 @@ def _interpret() -> bool:
     return not on_tpu()
 
 
+@dataclasses.dataclass(frozen=True)
+class Provenance:
+    """Where a kernel call would run right now — recorded by the benches
+    and trace headers so every result carries its backend/impl context.
+
+    Before PR 7 this was a kwarg-sprawl dict rebuilt ad-hoc at each call
+    site; now one frozen dataclass with a stable ``to_dict()`` (the dict
+    shape the BENCH_*.json provenance blocks have carried since PR 2).
+
+    ``quant`` names the value-plane encoding the caller is timing
+    (none/int8/int4); ``attn`` names the attention projection datapath
+    (dense = MLP-only packs, sparse = whole-layer fused QKV + O packs,
+    sweep = both); ``packs`` maps a label to the bound pack fingerprint
+    the run served (``core.integrity``), so a result is tied to the
+    exact plane bytes.
+    """
+    backend: str
+    impl: str
+    quant: str
+    attn: str
+    pallas_interpret: bool
+    packs: dict | None
+    env: dict
+
+    @classmethod
+    def collect(cls, impl: str | None = None, quant: str | None = None,
+                attn: str | None = None,
+                packs: dict | None = None) -> "Provenance":
+        return cls(
+            backend=jax.default_backend(),
+            impl=_resolve(impl),
+            quant=quant or "none",
+            attn=attn or "dense",
+            pallas_interpret=_interpret(),
+            packs=dict(packs) if packs else None,
+            env={ENV_IMPL: os.environ.get(ENV_IMPL) or None,
+                 ENV_INTERPRET: os.environ.get(ENV_INTERPRET) or None},
+        )
+
+    def to_dict(self) -> dict:
+        """Stable key order, JSON-ready — byte-compatible with the dict
+        ``provenance()`` has always returned."""
+        return {
+            "backend": self.backend,
+            "impl": self.impl,
+            "quant": self.quant,
+            "attn": self.attn,
+            "pallas_interpret": self.pallas_interpret,
+            "packs": dict(self.packs) if self.packs else None,
+            "env": dict(self.env),
+        }
+
+
 def provenance(impl: str | None = None, quant: str | None = None,
                attn: str | None = None, packs: dict | None = None) -> dict:
-    """Where a kernel call would run right now — recorded by the benches
-    so BENCH_*.json results carry their backend/impl context.  ``quant``
-    names the value-plane encoding the caller is timing (none/int8/int4);
-    ``attn`` names the attention projection datapath (dense = MLP-only
-    packs, sparse = whole-layer fused QKV + O packs, sweep = both);
-    ``packs`` maps a label to the bound pack fingerprint the run served
-    (``core.integrity``), so a result is tied to the exact plane bytes."""
-    return {
-        "backend": jax.default_backend(),
-        "impl": _resolve(impl),
-        "quant": quant or "none",
-        "attn": attn or "dense",
-        "pallas_interpret": _interpret(),
-        "packs": dict(packs) if packs else None,
-        "env": {ENV_IMPL: os.environ.get(ENV_IMPL) or None,
-                ENV_INTERPRET: os.environ.get(ENV_INTERPRET) or None},
-    }
+    """Backward-compatible functional form: ``Provenance.collect(...)
+    .to_dict()`` (see the dataclass for field semantics)."""
+    return Provenance.collect(impl=impl, quant=quant, attn=attn,
+                              packs=packs).to_dict()
 
 
 def _dispatch_spmv(values, cols, x, chunk_cols, impl,
@@ -290,9 +333,18 @@ def pack_to_device(pack: ELLPack | ELLChunkedPack, dtype=jnp.float32,
     and upload raises ``PackIntegrityError`` here instead of gathering
     garbage at decode.
     """
+    tr = get_tracer()
+    with tr.span("pack.to_device", cat="pack",
+                 args={"quant": getattr(quant, "bits", quant) or "none",
+                       "verify": verify}):
+        return _pack_to_device(pack, dtype, chunk_cols, quant, verify, tr)
+
+
+def _pack_to_device(pack, dtype, chunk_cols, quant, verify, tr):
     if verify:
         from repro.core.integrity import verify_pack
-        verify_pack(pack)
+        with tr.span("pack.verify", cat="pack"):
+            verify_pack(pack)
     if isinstance(pack, ELLPack):
         pack = chunk_pack(pack, chunk_cols)
     if quant is None:

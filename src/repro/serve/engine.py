@@ -23,6 +23,15 @@ Families without a chunked ``prefill_chunk`` (moe / vlm / audio) fall back
 to the seed behavior: token-by-token prompt replay through the decode
 path (``prefill_mode="replay"``).
 
+Telemetry (DESIGN.md §12): every tick is traced — ``engine.step`` spans
+with scheduler / prefill / decode / host_sync children, device work
+fenced at span boundaries so async dispatch is billed to the span that
+launched it — and mirrored into a metrics registry (TTFT/TPOT/queue
+histograms, terminal-state and fault counters, arena occupancy gauges,
+per-plane bytes/token).  Both default to ~no-ops: the tracer hands out
+one shared null span and the registry's counters are plain attribute
+increments, so the instrumented hot path *is* the production hot path.
+
 Fault tolerance (DESIGN.md §11): sparse packs are fingerprint-verified
 at engine construction (``verify_packs`` — a corrupted or mismatched
 pack fails loudly at load, or degrades the whole engine to the pruned
@@ -54,6 +63,8 @@ from repro.serve.prefill import ChunkedPrefiller
 from repro.serve.scheduler import Scheduler
 from repro.serve.serve_step import (sample_tokens, serve_step_fn,
                                     serve_step_sparse_fn)
+from repro.telemetry import metrics as tm
+from repro.telemetry import trace as tt
 
 __all__ = ["Request", "EngineStats", "ServeEngine", "TransientStepError"]
 
@@ -114,10 +125,13 @@ class EngineStats:
     requests_failed: int = 0       # no datapath produced finite logits
     degraded_to_dense: bool = False  # whole engine fell back at load
     requests: list = dataclasses.field(default_factory=list)
+    # the scheduler's streaming latency histograms (telemetry) — summary
+    # percentiles come from these in O(buckets), never a full sort
+    hists: dict | None = dataclasses.field(default=None, repr=False)
 
     def latency_summary(self) -> dict:
         from repro.serve.scheduler import latency_summary
-        return latency_summary(self.requests)
+        return latency_summary(self.requests, hists=self.hists)
 
 
 class _Slot:
@@ -148,11 +162,27 @@ class ServeEngine:
                  verify_packs: bool = True, on_verify_failure: str = "raise",
                  max_retries: int = 2, retry_backoff: float = 0.05,
                  retry_backoff_cap: float = 1.0, watchdog=None,
-                 validate_arena: bool = False):
+                 validate_arena: bool = False, tracer: tt.Tracer | None = None,
+                 metrics: tm.Registry | None = None):
         if on_verify_failure not in ("raise", "degrade"):
             raise ValueError(
                 f"unknown on_verify_failure {on_verify_failure!r}; "
                 f"use 'raise' or 'degrade'")
+        # telemetry first, so even load-time verification is observable:
+        # a disabled tracer hands out one shared null span (no hot-path
+        # allocations); the registry is always live (counter increments
+        # are plain attribute adds — see tests/test_telemetry.py)
+        self.tracer = tracer if tracer is not None else tt.get_tracer()
+        self.metrics = metrics if metrics is not None else tm.Registry({
+            "model": cfg.name,
+            "impl": impl,
+            "quant": (sparse or {}).get("quant", "none"),
+            "attn": ("sparse" if (sparse or {}).get("attn_sparse")
+                     else "dense"),
+        })
+        self._c_verify_fail = self.metrics.counter(
+            "serve_verify_failures_total",
+            "pack integrity verifications that failed at engine load")
         # pack integrity gate FIRST: a bit-flipped plane or a pack whose
         # SDDS schedule no longer matches its fingerprint must never reach
         # a decode closure (DESIGN.md §11) — either fail the load or serve
@@ -161,8 +191,10 @@ class ServeEngine:
         degraded_to_dense = False
         if sparse is not None and verify_packs:
             try:
-                self.verified_packs = sparse_model.verify_sparse(sparse)
+                with self.tracer.span("pack.verify", cat="pack"):
+                    self.verified_packs = sparse_model.verify_sparse(sparse)
             except PackIntegrityError:
+                self._c_verify_fail.inc()
                 if on_verify_failure != "degrade":
                     raise
                 params = sparse_model.pruned_param_tree(params, sparse)
@@ -183,9 +215,12 @@ class ServeEngine:
         self.slots: list[_Slot | None] = [None] * batch_slots
         self.seq_len = np.zeros(batch_slots, np.int32)
         self.scheduler = Scheduler(policy=policy,
-                                   max_prefill_streak=max_prefill_streak)
+                                   max_prefill_streak=max_prefill_streak,
+                                   metrics=self.metrics)
         self.stats = EngineStats(requests=self.scheduler.completed,
-                                 degraded_to_dense=degraded_to_dense)
+                                 degraded_to_dense=degraded_to_dense,
+                                 hists=self.scheduler.hists)
+        self._init_metrics(sparse)
         self._key = jax.random.PRNGKey(seed)
         self._occ_accum = 0.0
         self.max_retries = max(0, max_retries)
@@ -228,15 +263,94 @@ class ServeEngine:
         self._dense_decode = None
         self._dense_params = None
 
+    # ------------------------------------------------------------ telemetry
+    def _init_metrics(self, sparse: dict | None) -> None:
+        """Register the engine's instruments once and keep direct
+        references — the hot path increments attributes, it never does a
+        registry lookup.  Static facts about the packs (bytes/token by
+        plane, pad_frac by width bucket) are published as gauges here:
+        they are properties of the loaded model, not of any one step."""
+        reg = self.metrics
+        h = tm.LATENCY_BUCKETS_S
+        self._h_step = {
+            "prefill": reg.histogram("serve_step_seconds", buckets=h,
+                                     phase="prefill"),
+            "decode": reg.histogram("serve_step_seconds", buckets=h,
+                                    phase="decode"),
+        }
+        self._c_tokens = reg.counter(
+            "serve_tokens_total", "tokens emitted, all datapaths")
+        self._c_degraded_tokens = reg.counter(
+            "serve_degraded_tokens_total", "tokens from the dense fallback")
+        self._c_quarantines = reg.counter(
+            "serve_quarantines_total", "per-slot non-finite guard trips")
+        self._c_retries = reg.counter(
+            "serve_retries_total", "transient step failures retried")
+        self._c_watchdog = reg.counter(
+            "serve_watchdog_flags_total", "stuck-decode watchdog trips")
+        self._c_arena_checks = reg.counter(
+            "serve_arena_checks_total", "leaked-block invariant sweeps run")
+        self._g_slot_occ = reg.gauge(
+            "serve_slot_occupancy", "mean fraction of slots decoding")
+        self._g_arena = {
+            s: reg.gauge("serve_arena_blocks", state=s)
+            for s in ("used", "free", "quarantined")}
+        self._g_arena_occ = reg.gauge(
+            "serve_arena_occupancy", "fraction of arena blocks in use")
+        self._g_arena_frag = reg.gauge(
+            "serve_arena_fragmentation",
+            "1 - largest contiguous free run / free blocks")
+        if sparse is None:
+            return
+        from repro.core.sparse_model import sparse_stats
+        st = sparse_stats(sparse)
+        tot = st["total"]
+        for plane, nbytes in (("value", tot["value_plane_bytes"]),
+                              ("index", tot["index_plane_bytes"]),
+                              ("dense", tot["dense_proj_bytes_per_token"])):
+            reg.gauge("espim_bytes_per_token", plane=plane).set(nbytes)
+        # pad_frac per width bucket: the padding each SDDS bucket's ELL
+        # width actually costs, from the pack's own validity mask
+        for gname, g in sparse["groups"].items():
+            for i, (b, width) in enumerate(zip(g["buckets"], g["widths"])):
+                valid = np.asarray(b["valid"])
+                reg.gauge("espim_pad_frac", group=gname, bucket=str(i),
+                          width=str(int(width))).set(
+                    1.0 - float(valid.sum()) / max(1, valid.size))
+
+    def _update_arena_gauges(self) -> None:
+        nb = getattr(self.cache, "num_blocks", 0)
+        if not nb:
+            return
+        free = self.cache.free_blocks
+        quarantined = len(getattr(self.cache, "_quarantined", ()))
+        self._g_arena["used"].set(nb - free - quarantined)
+        self._g_arena["free"].set(free)
+        self._g_arena["quarantined"].set(quarantined)
+        self._g_arena_occ.set((nb - free - quarantined) / nb)
+        # fragmentation: how broken-up the free pool is physically —
+        # 1 - (largest contiguous free run / free blocks)
+        if free:
+            run = best = 1
+            ids = sorted(self.cache._free)
+            for a, b in zip(ids, ids[1:]):
+                run = run + 1 if b == a + 1 else 1
+                best = max(best, run)
+            self._g_arena_frag.set(1.0 - best / free)
+        else:
+            self._g_arena_frag.set(0.0)
+
     # ------------------------------------------------------------ lifecycle
     def reset_stats(self) -> None:
         """Zero every counter and the per-request metrics — e.g. after a
         jit-warmup request, so a benchmark measures steady state only."""
         self.scheduler.completed.clear()
+        self.scheduler.reset_metrics()
         self._occ_accum = 0.0
         self.stats = EngineStats(
             requests=self.scheduler.completed,
-            degraded_to_dense=self.stats.degraded_to_dense)
+            degraded_to_dense=self.stats.degraded_to_dense,
+            hists=self.scheduler.hists)
 
     def submit(self, req: Request) -> None:
         worst = req.worst_case_tokens(self.max_len)
@@ -340,6 +454,7 @@ class ServeEngine:
         st.req.output.append(tok)
         st.metrics.n_out += 1
         self.stats.tokens_generated += 1
+        self._c_tokens.inc()
         st.cur_token = tok
         seq_len = len(st.req.prompt) + len(st.req.output)
         if (tok == st.req.eos_id
@@ -379,12 +494,17 @@ class ServeEngine:
                 if attempt >= self.max_retries:
                     raise
                 self.stats.retries += 1
+                self._c_retries.inc()
+                self.tracer.instant("fault.retry", cat="fault",
+                                    args={"attempt": attempt,
+                                          "backoff_s": delay})
                 time.sleep(delay)
                 delay = min(delay * 2.0, self.retry_backoff_cap)
 
     def check_arena(self) -> dict:
         """Arena invariant after any step: every physical block in exactly
         one owner, and empty slots own nothing.  Raises on violation."""
+        self._c_arena_checks.inc()
         acct = self.cache.arena_check()
         n_blocks = getattr(self.cache, "n_blocks", None)
         if n_blocks is not None:
@@ -399,24 +519,34 @@ class ServeEngine:
     def _prefill_tick(self, i: int) -> None:
         st = self.slots[i]
         plen = len(st.req.prompt)
-        logits, st.pf_cache, n_valid = self._prefiller.run_chunk(
-            self.params, st.pf_cache, st.req.prompt, st.pos)
-        self.cache.ensure(i, st.pos + n_valid)
-        self.cache.scatter_chunk(
-            i, self._prefiller.chunk_rows(st.pf_cache, st.pos),
-            st.pos, n_valid)
+        with self.tracer.span("prefill.launch", cat="prefill",
+                              args=None) as sp:
+            sp.set("slot", i).set("pos", st.pos)
+            logits, st.pf_cache, n_valid = self._prefiller.run_chunk(
+                self.params, st.pf_cache, st.req.prompt, st.pos)
+            self.tracer.fence(logits)
+        with self.tracer.span("cache.scatter", cat="prefill"):
+            self.cache.ensure(i, st.pos + n_valid)
+            self.cache.scatter_chunk(
+                i, self._prefiller.chunk_rows(st.pf_cache, st.pos),
+                st.pos, n_valid)
         st.pos += n_valid
         self.stats.steps += 1
         self.stats.prefill_chunks += 1
         if st.pos >= plen:
             # prompt fully prefilled: install recurrent states and sample
             # the first token straight from the final chunk's logits
-            last = logits[:, n_valid - 1]
-            if not bool(np.isfinite(np.asarray(last, np.float32)).all()):
+            with self.tracer.span("host.sample", cat="host_sync"):
+                last = logits[:, n_valid - 1]
+                finite = bool(np.isfinite(np.asarray(last, np.float32)).all())
+            if not finite:
                 # a poisoned prefill has already contaminated this slot's
                 # KV history — no fallback can recompute it, so the slot
                 # ends here rather than ever emit a wrong token
                 self.stats.quarantines += 1
+                self._c_quarantines.inc()
+                self.tracer.instant("fault.quarantine", cat="fault",
+                                    args={"slot": i, "phase": "prefill"})
                 self._teardown(i, "failed")
                 return
             self.cache.set_slot_state(
@@ -429,21 +559,24 @@ class ServeEngine:
             self._emit_token(i, tok)
 
     def _decode_tick(self, decoding: list[int]) -> None:
-        cur = np.zeros((self.b, 1), np.int32)
-        lens = np.zeros(self.b, np.int32)
-        for i in decoding:
-            st = self.slots[i]
-            if st.cursor is not None and st.cursor < len(st.req.prompt):
-                cur[i, 0] = st.req.prompt[st.cursor]   # replay prefill
-            else:
-                cur[i, 0] = st.cur_token
-            lens[i] = self.seq_len[i]
-            self.cache.ensure(i, int(self.seq_len[i]) + 1)
-        healthy = [i for i in decoding if not self.slots[i].degraded]
-        degraded = [i for i in decoding if self.slots[i].degraded]
+        with self.tracer.span("decode.prepare", cat="decode"):
+            cur = np.zeros((self.b, 1), np.int32)
+            lens = np.zeros(self.b, np.int32)
+            for i in decoding:
+                st = self.slots[i]
+                if st.cursor is not None and st.cursor < len(st.req.prompt):
+                    cur[i, 0] = st.req.prompt[st.cursor]   # replay prefill
+                else:
+                    cur[i, 0] = st.cur_token
+                lens[i] = self.seq_len[i]
+                self.cache.ensure(i, int(self.seq_len[i]) + 1)
+            healthy = [i for i in decoding if not self.slots[i].degraded]
+            degraded = [i for i in decoding if self.slots[i].degraded]
 
-        view = self.cache.gather_view(lens)
-        batch = {"tokens": jnp.asarray(cur), "rng": self._next_key()}
+        with self.tracer.span("cache.gather", cat="decode"):
+            view = self.cache.gather_view(lens)
+            batch = {"tokens": jnp.asarray(cur), "rng": self._next_key()}
+            self.tracer.fence(view)
         t0 = time.monotonic()
         results: dict[int, int] = {}   # slot -> sampled token this tick
         n_applies = 0
@@ -463,20 +596,27 @@ class ServeEngine:
 
         if healthy:
             try:
-                nxt, ok, new_cache = self._retry(
-                    self._decode, self.params, view, batch)
+                with self.tracer.span("decode.launch", cat="decode"):
+                    nxt, ok, new_cache = self._retry(
+                        self._decode, self.params, view, batch)
+                    self.tracer.fence(ok)
             except TransientStepError:
                 for i in list(healthy):
                     self._teardown(i, "failed")
             else:
-                nxt, ok = np.asarray(nxt), np.asarray(ok)
-                _commit(ok, new_cache, healthy)
+                with self.tracer.span("host.sync", cat="host_sync"):
+                    nxt, ok = np.asarray(nxt), np.asarray(ok)
+                with self.tracer.span("cache.scatter", cat="decode"):
+                    _commit(ok, new_cache, healthy)
                 for i in healthy:
                     if ok[i]:
                         results[i] = int(nxt[i, 0])
                         continue
                     any_drop = True
                     self.stats.quarantines += 1
+                    self._c_quarantines.inc()
+                    self.tracer.instant("fault.quarantine", cat="fault",
+                                        args={"slot": i, "phase": "decode"})
                     if self.sparse is None:
                         # dense engine: no lower rung on the ladder
                         self._teardown(i, "failed")
@@ -489,13 +629,19 @@ class ServeEngine:
         if degraded:
             fn, dparams = self._dense_fallback()
             try:
-                nxt, ok, new_cache = self._retry(fn, dparams, view, batch)
+                with self.tracer.span("decode.launch_degraded",
+                                      cat="decode"):
+                    nxt, ok, new_cache = self._retry(fn, dparams, view,
+                                                     batch)
+                    self.tracer.fence(ok)
             except TransientStepError:
                 for i in list(degraded):
                     self._teardown(i, "failed")
             else:
-                nxt, ok = np.asarray(nxt), np.asarray(ok)
-                _commit(ok, new_cache, degraded)
+                with self.tracer.span("host.sync", cat="host_sync"):
+                    nxt, ok = np.asarray(nxt), np.asarray(ok)
+                with self.tracer.span("cache.scatter", cat="decode"):
+                    _commit(ok, new_cache, degraded)
                 for i in degraded:
                     if ok[i]:
                         results[i] = int(nxt[i, 0])
@@ -515,47 +661,71 @@ class ServeEngine:
         self.stats.decode_steps += 1
         self._occ_accum += len(decoding) / self.b
         self.stats.slot_occupancy = self._occ_accum / self.stats.decode_steps
+        self._g_slot_occ.set(self.stats.slot_occupancy)
         if (self._watchdog is not None
                 and self._watchdog.observe(time.monotonic() - t0)):
             self.stats.watchdog_flags += 1
+            self._c_watchdog.inc()
+            self.tracer.instant("fault.watchdog_flag", cat="fault")
 
-        for i in decoding:
-            st = self.slots[i]
-            if st is None or i not in results:
-                continue    # torn down or quarantined: no emit, no advance
-            self.seq_len[i] += 1
-            if st.cursor is not None and st.cursor < len(st.req.prompt):
-                st.cursor += 1
-                if st.cursor < len(st.req.prompt):
-                    continue        # still replaying: output ignored
-            if st.degraded:
-                st.emitted_degraded = True
-                self.stats.degraded_tokens += 1
-            self._emit_token(i, results[i])
+        with self.tracer.span("decode.emit", cat="decode"):
+            for i in decoding:
+                st = self.slots[i]
+                if st is None or i not in results:
+                    continue  # torn down or quarantined: no emit/advance
+                self.seq_len[i] += 1
+                if st.cursor is not None and st.cursor < len(st.req.prompt):
+                    st.cursor += 1
+                    if st.cursor < len(st.req.prompt):
+                        continue        # still replaying: output ignored
+                if st.degraded:
+                    st.emitted_degraded = True
+                    self.stats.degraded_tokens += 1
+                    self._c_degraded_tokens.inc()
+                self._emit_token(i, results[i])
 
     # ------------------------------------------------------------- stepping
     def step(self) -> None:
         """One engine tick: a prefill chunk for one slot, or one decode
         step across all decode-ready slots.  A fully idle engine (queue
-        drained, every slot empty) is a no-op — no wasted jitted call."""
-        self._expire()
-        self._admit()
-        prefilling = [i for i, s in enumerate(self.slots)
-                      if s is not None and s.phase == "prefill"]
-        decoding = [i for i, s in enumerate(self.slots)
-                    if s is not None and s.phase == "decode"]
-        action, target = self.scheduler.next_action(prefilling, decoding)
-        if action == "prefill":
-            self._prefill_tick(target)
-        elif action == "decode":
-            self._decode_tick(decoding)
-        if self.validate_arena:
-            self.check_arena()
+        drained, every slot empty) is a no-op — no wasted jitted call.
+
+        Traced as one ``engine.step`` span whose direct children are the
+        per-phase breakdown (scheduler / prefill / decode / host_sync /
+        bookkeeping) — ``span_coverage`` over these is asserted >= 95%
+        in tests, so the breakdown IS the step, not a sample of it."""
+        with self.tracer.span("engine.step", cat="engine"):
+            with self.tracer.span("scheduler.expire", cat="scheduler"):
+                self._expire()
+            with self.tracer.span("scheduler.admit", cat="scheduler"):
+                self._admit()
+            with self.tracer.span("scheduler.plan", cat="scheduler"):
+                prefilling = [i for i, s in enumerate(self.slots)
+                              if s is not None and s.phase == "prefill"]
+                decoding = [i for i, s in enumerate(self.slots)
+                            if s is not None and s.phase == "decode"]
+                action, target = self.scheduler.next_action(prefilling,
+                                                            decoding)
+            if action == "prefill":
+                t0 = time.monotonic()
+                with self.tracer.span("prefill.chunk", cat="prefill"):
+                    self._prefill_tick(target)
+                self._h_step["prefill"].observe(time.monotonic() - t0)
+            elif action == "decode":
+                t0 = time.monotonic()
+                with self.tracer.span("decode.step", cat="decode"):
+                    self._decode_tick(decoding)
+                self._h_step["decode"].observe(time.monotonic() - t0)
+            with self.tracer.span("metrics.update", cat="scheduler"):
+                if self.validate_arena:
+                    self.check_arena()
+                self._update_arena_gauges()
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
-        for _ in range(max_steps):
-            if (not self.scheduler.has_pending
-                    and all(s is None for s in self.slots)):
-                break
-            self.step()
+        with self.tracer.span("engine.run", cat="engine"):
+            for _ in range(max_steps):
+                if (not self.scheduler.has_pending
+                        and all(s is None for s in self.slots)):
+                    break
+                self.step()
         return self.stats

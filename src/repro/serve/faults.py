@@ -222,7 +222,8 @@ def run_fault_drill(cfg, params, sparse: dict, sparse_alt: dict | None = None,
                     seed: int = 0, kinds=None, *, impl: str = "ref",
                     batch_slots: int = 2, max_len: int = 64,
                     block_size: int = 8, prefill_chunk: int = 8,
-                    n_requests: int = 4, max_new_tokens: int = 8) -> dict:
+                    n_requests: int = 4, max_new_tokens: int = 8,
+                    tracer=None) -> dict:
     """One engine per fault class against a shared no-fault baseline.
 
     ``sparse`` must be an fp pack dict (``sparsify_model``); pass a
@@ -231,6 +232,10 @@ def run_fault_drill(cfg, params, sparse: dict, sparse_alt: dict | None = None,
     batching-independent, so per-request outputs are comparable
     bit-for-bit across engines — "unaffected slots identical to the
     no-fault run" is an exact assertion, not a tolerance.
+
+    ``tracer`` (a telemetry ``Tracer``) is threaded into every drill
+    engine, so a traced drill's export carries the quarantine / retry /
+    watchdog instants next to the step spans that absorbed them.
     """
     kinds = tuple(kinds) if kinds is not None else FAULT_KINDS
     rng = np.random.default_rng(seed)
@@ -246,7 +251,7 @@ def run_fault_drill(cfg, params, sparse: dict, sparse_alt: dict | None = None,
         return ServeEngine(
             cfg, params, batch_slots, max_len, sparse=sparse_arg, impl=impl,
             block_size=block_size, prefill_chunk=prefill_chunk,
-            validate_arena=True,
+            validate_arena=True, tracer=tracer,
             watchdog=LatencyWatchdog(threshold=3.0, patience=2,
                                      min_samples=4), **kw)
 

@@ -19,6 +19,14 @@ owns three decisions:
 * **metrics** — per-request queue delay, TTFT (submit -> first generated
   token) and TPOT (mean inter-token time after the first), aggregated
   into p50/p95 summaries for the engine's ``EngineStats``.
+
+Latency percentiles are served from the telemetry histograms' streaming
+quantile estimate: ``finish`` observes each request's TTFT/TPOT/queue
+delay into fixed log-bucket histograms once, and ``summary`` reads
+p50/p95 in O(buckets) — the pre-PR 7 path re-sorted every sample on
+every ``latency_summary()`` call, O(n log n) per report tick.  The
+module-level ``percentiles``/``latency_summary(done)`` helpers keep the
+exact-sort semantics for ad-hoc lists.
 """
 from __future__ import annotations
 
@@ -26,6 +34,8 @@ import dataclasses
 import time
 
 import numpy as np
+
+from repro.telemetry.metrics import Histogram, Registry
 
 __all__ = ["RequestMetrics", "Scheduler", "percentiles",
            "latency_summary", "TERMINAL_STATES"]
@@ -83,25 +93,40 @@ def percentiles(xs, qs=(50, 95)) -> dict:
     return {f"p{q}": float(np.percentile(np.asarray(xs), q)) for q in qs}
 
 
-def latency_summary(done: list[RequestMetrics]) -> dict:
+LATENCY_HISTS = ("ttft_s", "tpot_s", "queue_delay_s")
+_HIST_METRIC = {"ttft_s": "serve_ttft_seconds",
+                "tpot_s": "serve_tpot_seconds",
+                "queue_delay_s": "serve_queue_delay_seconds"}
+
+
+def latency_summary(done: list[RequestMetrics],
+                    hists: dict | None = None) -> dict:
     """p50/p95 report over finished requests (shared by the scheduler's
     summary and the engine's EngineStats).  ``states`` counts the
     terminal state of every finished request, so the latency percentiles
-    can never silently mix dropped requests into "fast"."""
+    can never silently mix dropped requests into "fast".
+
+    With ``hists`` (the scheduler's streaming histograms, one per
+    LATENCY_HISTS key) the percentiles are the histograms' O(buckets)
+    quantile estimates; without, the exact full-sort path runs — kept
+    for ad-hoc metric lists, but NOT the engine report path."""
     states: dict = {}
     for m in done:
         states[m.state] = states.get(m.state, 0) + 1
-    return {
-        "requests": len(done),
-        "ttft_s": percentiles([m.ttft for m in done]),
-        "tpot_s": percentiles([m.tpot for m in done]),
-        "queue_delay_s": percentiles([m.queue_delay for m in done]),
-        "states": states,
-    }
+    if hists is not None:
+        lat = {k: hists[k].percentile_summary() for k in LATENCY_HISTS}
+    else:
+        lat = {
+            "ttft_s": percentiles([m.ttft for m in done]),
+            "tpot_s": percentiles([m.tpot for m in done]),
+            "queue_delay_s": percentiles([m.queue_delay for m in done]),
+        }
+    return {"requests": len(done), **lat, "states": states}
 
 
 class Scheduler:
-    def __init__(self, policy: str = "fcfs", max_prefill_streak: int = 2):
+    def __init__(self, policy: str = "fcfs", max_prefill_streak: int = 2,
+                 metrics: Registry | None = None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; use {POLICIES}")
         self.policy = policy
@@ -109,6 +134,24 @@ class Scheduler:
         self.pending: list = []       # [(request, RequestMetrics)]
         self.completed: list[RequestMetrics] = []
         self._streak = 0
+        # streaming latency histograms: observed once per finished
+        # request, read in O(buckets) by every summary — registered in
+        # the engine's registry when one is supplied, private otherwise
+        if metrics is not None:
+            self.hists = {k: metrics.histogram(_HIST_METRIC[k])
+                          for k in LATENCY_HISTS}
+            self._c_requests = {
+                s: metrics.counter("serve_requests_total", state=s)
+                for s in TERMINAL_STATES}
+        else:
+            self.hists = {k: Histogram(_HIST_METRIC[k], {})
+                          for k in LATENCY_HISTS}
+            self._c_requests = None
+
+    def reset_metrics(self) -> None:
+        """Zero the streaming latency histograms (per-repeat benches)."""
+        for h in self.hists.values():
+            h.reset()
 
     # ----------------------------------------------------------- admission
     def add(self, request) -> RequestMetrics:
@@ -168,6 +211,13 @@ class Scheduler:
         metrics.t_done = time.monotonic()
         metrics.state = state
         self.completed.append(metrics)
+        for key, value in (("ttft_s", metrics.ttft),
+                           ("tpot_s", metrics.tpot),
+                           ("queue_delay_s", metrics.queue_delay)):
+            if value is not None:
+                self.hists[key].observe(value)
+        if self._c_requests is not None:
+            self._c_requests[state].inc()
 
     def cancel_pending(self, rid: int) -> bool:
         """Cancel a not-yet-admitted request; returns True if found."""
@@ -198,4 +248,4 @@ class Scheduler:
         return out
 
     def summary(self) -> dict:
-        return latency_summary(self.completed)
+        return latency_summary(self.completed, hists=self.hists)

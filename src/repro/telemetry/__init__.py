@@ -1,0 +1,34 @@
+"""Zero-dependency observability for the sparse serving stack (DESIGN §12).
+
+Three layers, threaded through the whole pipeline:
+
+* ``trace``   — nested span tracer (thread-safe, ~no-op when disabled)
+  with Perfetto/Chrome ``trace_event`` and JSONL exporters, span
+  coverage analysis, and the shared per-phase breakdown schema.
+* ``metrics`` — counters / gauges / log-bucket histograms with labels,
+  dict snapshots, Prometheus text format, and the streaming-quantile
+  summaries that replaced the full-sort percentile path.
+* ``profile`` — kernel launch profiling (warmup discard, best/p50/p95,
+  effective GB/s vs the dense roofline) consumed by both benches.
+"""
+from repro.telemetry.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                                     LATENCY_BUCKETS_S,
+                                     REQUIRED_SERVE_METRICS, Registry,
+                                     THROUGHPUT_BUCKETS, US_BUCKETS,
+                                     log_buckets, validate_snapshot)
+from repro.telemetry.profile import (KernelProfiler,  # noqa: F401
+                                     LaunchTiming, time_launch)
+from repro.telemetry.trace import (BREAKDOWN_SCHEMA_KEYS,  # noqa: F401
+                                   NULL_TRACER, Span, Tracer, get_tracer,
+                                   phase_breakdown, set_tracer,
+                                   span_coverage, validate_chrome_trace)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "log_buckets",
+    "LATENCY_BUCKETS_S", "THROUGHPUT_BUCKETS", "US_BUCKETS",
+    "REQUIRED_SERVE_METRICS", "validate_snapshot",
+    "KernelProfiler", "LaunchTiming", "time_launch",
+    "Span", "Tracer", "NULL_TRACER", "get_tracer", "set_tracer",
+    "span_coverage", "phase_breakdown", "validate_chrome_trace",
+    "BREAKDOWN_SCHEMA_KEYS",
+]

@@ -44,8 +44,21 @@ and emits its per-class goodput / recovery / leak report; full
 BENCH_serve.json.  Either path asserts ``check_drill`` — the bench fails
 loudly if any fault class could have produced a silent wrong token.
 
-Run:   PYTHONPATH=src:. python benchmarks/serve_bench.py [--smoke]
-Drill: PYTHONPATH=src:. python benchmarks/serve_bench.py --fault-drill [--smoke]
+``--overload`` runs the DESIGN.md §13 overload scenario instead: a
+seeded Poisson burst at 2x (and, full runs, 4x) the engine's service
+rate against a deliberately tight arena and bounded wait queue,
+reporting goodput-under-SLO, shed/preempt counts and the terminal-state
+census per shed policy — asserted against ``check_overload_drill`` (the
+burst must be absorbed by policy: zero failed, zero leaked, drained).
+``--crash-drill`` kills an engine at an arbitrary step, restores the
+snapshot into a fresh engine and asserts bit-exact output parity plus
+zero leaked blocks (``check_crash_drill``).  Full serving runs attach
+both reports under ``overload`` / ``crash_drill`` in BENCH_serve.json.
+
+Run:      PYTHONPATH=src:. python benchmarks/serve_bench.py [--smoke]
+Drill:    PYTHONPATH=src:. python benchmarks/serve_bench.py --fault-drill [--smoke]
+Overload: PYTHONPATH=src:. python benchmarks/serve_bench.py --overload [--smoke]
+Crash:    PYTHONPATH=src:. python benchmarks/serve_bench.py --crash-drill [--smoke]
 Smoke: tiny traces + schema assertion (wired into scripts/ci.sh).
 """
 from __future__ import annotations
@@ -63,7 +76,9 @@ from repro.core.sparse_model import sparse_stats, sparsify_model
 from repro.kernels import ops
 from repro.models import factory
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.faults import check_drill, run_fault_drill
+from repro.serve.faults import (check_crash_drill, check_drill,
+                                check_overload_drill, run_crash_drill,
+                                run_fault_drill, run_overload_drill)
 from repro.telemetry.metrics import (THROUGHPUT_BUCKETS, Histogram,
                                      validate_snapshot)
 from repro.telemetry.trace import (BREAKDOWN_SCHEMA_KEYS, Tracer,
@@ -273,6 +288,41 @@ def bench_fault_drill(cfg, params, *, smoke: bool, seed: int,
     return drill
 
 
+def bench_overload(cfg, params, *, smoke: bool, seed: int,
+                   tracer=None) -> dict:
+    """The §13 overload scenario at bench scale: Poisson bursts against
+    the serving-default whole-layer packs, one run per (burst factor x
+    shed policy) cell, each asserted against ``check_overload_drill``."""
+    sparse = sparsify_model(cfg, params, SPARSITY, projections="all")
+    factors = (2.0,) if smoke else (2.0, 4.0)
+    policies = ("shed-largest",) if smoke else ("shed-largest", "reject")
+    n_requests = 16 if smoke else 32
+    runs = {}
+    for factor in factors:
+        for policy in policies:
+            r = run_overload_drill(
+                cfg, params, sparse, seed=seed, factor=factor,
+                shed_policy=policy, n_requests=n_requests, tracer=tracer)
+            check_overload_drill(r)
+            runs[f"{factor:g}x_{policy}"] = r
+    return {"pack": sparse["fingerprint"], "runs": runs}
+
+
+def bench_crash(cfg, params, *, smoke: bool, seed: int,
+                tracer=None) -> dict:
+    """Kill/restore drill at bench scale: one random kill point per
+    seed (full runs sweep three seeds so early/mid/late boundaries are
+    all exercised), each asserted bit-exact with zero leaks."""
+    sparse = sparsify_model(cfg, params, SPARSITY, projections="all")
+    seeds = (seed,) if smoke else (seed, seed + 1, seed + 2)
+    runs = {}
+    for s in seeds:
+        r = run_crash_drill(cfg, params, sparse, seed=s, tracer=tracer)
+        check_crash_drill(r)
+        runs[str(s)] = r
+    return {"pack": sparse["fingerprint"], "runs": runs}
+
+
 def check_schema(doc: dict) -> None:
     assert doc["paged_parity"] is True, "paged/contiguous tokens diverged"
     for scen_name in ("single_stream", "batched"):
@@ -309,6 +359,13 @@ def check_schema(doc: dict) -> None:
     assert doc["provenance"]["packs"], "pack fingerprints missing"
     if "fault_drill" in doc:
         assert set(doc["fault_drill"]["faults"]), "empty fault drill"
+    if "overload" in doc:
+        for name, r in doc["overload"]["runs"].items():
+            assert r["leaked_blocks"] == 0, f"overload.{name} leaked"
+            assert "goodput_tok_s_under_slo" in r, name
+    if "crash_drill" in doc:
+        for name, r in doc["crash_drill"]["runs"].items():
+            assert r["exact_parity"], f"crash_drill.{name} parity"
     # the traced-run telemetry section (PR 7): per-phase breakdown in the
     # shared schema, >= 95% of engine.step wall accounted to phase spans
     tel = doc["telemetry"]
@@ -332,6 +389,12 @@ def main():
     ap.add_argument("--fault-drill", action="store_true",
                     help="run only the fault-injection drill and emit its "
                     "per-fault-class report (goodput, recovery, leaks)")
+    ap.add_argument("--overload", action="store_true",
+                    help="run only the overload scenario (Poisson burst at "
+                    "2-4x capacity: goodput-under-SLO, sheds, preempts)")
+    ap.add_argument("--crash-drill", action="store_true",
+                    help="run only the snapshot/restore crash drill "
+                    "(kill at a random step, restore, assert parity)")
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", default=None, metavar="PATH",
@@ -382,6 +445,42 @@ def main():
               f"; retries {f_['transient_step_error']['retries']}; watchdog "
               f"flags {f_['latency_spike']['watchdog_flags']}; leaked blocks "
               f"{max(r.get('leaked_blocks', 0) for r in f_.values())})")
+        return
+
+    if args.overload or args.crash_drill:
+        doc = {
+            "bench": "serve_overload" if args.overload else "serve_crash",
+            "arch": ARCH,
+            "reduced": True,
+            "smoke": args.smoke,
+            "sparsity": SPARSITY,
+            "provenance": ops.provenance(impl="ref", quant="none",
+                                         attn="sparse"),
+        }
+        if args.overload:
+            doc["overload"] = bench_overload(cfg, params, smoke=args.smoke,
+                                             seed=args.seed)
+            default_out = "BENCH_overload.json"
+            runs = doc["overload"]["runs"]
+            summary = "; ".join(
+                f"{name}: {r['sheds']} shed / {r['preempts']} preempted, "
+                f"{r['goodput_tok_s_under_slo']:.1f} tok/s under SLO, "
+                f"{r['leaked_blocks']} leaked"
+                for name, r in runs.items())
+        else:
+            doc["crash_drill"] = bench_crash(cfg, params, smoke=args.smoke,
+                                             seed=args.seed)
+            default_out = "BENCH_crash_drill.json"
+            runs = doc["crash_drill"]["runs"]
+            summary = "; ".join(
+                f"seed {name}: kill@{r['kill_step']}/{r['total_steps']}, "
+                f"{r['restored_requests']} restored, parity "
+                f"{r['exact_parity']}, recovery {r['recovery_s']:.2f}s"
+                for name, r in runs.items())
+        out = (args.out if args.out != "BENCH_serve.json" else default_out)
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"wrote {out}: {summary}")
         return
 
     if args.smoke:
@@ -511,11 +610,16 @@ def main():
         "breakdown": telemetry["breakdown"],
     }
     if not args.smoke:
-        # full runs carry the fault drill inline; CI smoke runs it as its
-        # own --fault-drill pass instead (kept out of the smoke schema run
-        # so each gate fails independently)
+        # full runs carry the robustness drills inline; CI smoke runs them
+        # as their own --fault-drill / --overload / --crash-drill passes
+        # instead (kept out of the smoke schema run so each gate fails
+        # independently)
         doc["fault_drill"] = bench_fault_drill(cfg, params, smoke=True,
                                                seed=args.seed)
+        doc["overload"] = bench_overload(cfg, params, smoke=True,
+                                         seed=args.seed)
+        doc["crash_drill"] = bench_crash(cfg, params, smoke=True,
+                                         seed=args.seed)
     check_schema(doc)
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)

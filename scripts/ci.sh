@@ -7,7 +7,12 @@
 # fails here in seconds, long before the full serve bench), then the
 # serving fault-drill smoke (every fault class rejected at load or
 # recovered with zero leaks — the robustness gate; traced, so the drill
-# emits a validated span trace too), then tier-1 tests, then the serving
+# emits a validated span trace too), then the crash-recovery drill
+# (snapshot/restore with bit-exact parity and zero leaked blocks) and
+# the overload smoke (Poisson burst at 2x capacity absorbed by
+# shed/preempt policy, goodput-under-SLO reported, no OOM) — both gate
+# ahead of the tests so a robustness regression fails in seconds — then
+# tier-1 tests, then the serving
 # benchmark smoke (traced: the telemetry gate validates the Chrome
 # trace_event schema, >= 95% engine.step span coverage, and the metrics
 # snapshot against the checked-in REQUIRED_SERVE_METRICS family list).
@@ -35,6 +40,18 @@ PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" ESPIM_IMPL=ref \
     python benchmarks/serve_bench.py --fault-drill --smoke \
     --out BENCH_fault_drill_smoke.json --trace TRACE_fault_drill_smoke.json
 test -f BENCH_fault_drill_smoke.json && echo "BENCH_fault_drill_smoke.json written"
+
+echo "== crash-recovery drill: kill at an arbitrary step, restore, bit-exact parity + zero leaks =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" ESPIM_IMPL=ref \
+    python benchmarks/serve_bench.py --crash-drill --smoke \
+    --out BENCH_crash_drill_smoke.json
+test -f BENCH_crash_drill_smoke.json && echo "BENCH_crash_drill_smoke.json written"
+
+echo "== overload smoke: Poisson burst at 2x capacity, shed/preempt per policy, no OOM =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" ESPIM_IMPL=ref \
+    python benchmarks/serve_bench.py --overload --smoke \
+    --out BENCH_overload_smoke.json
+test -f BENCH_overload_smoke.json && echo "BENCH_overload_smoke.json written"
 
 echo "== tier-1 tests =="
 python -m pytest -x -q

@@ -32,6 +32,25 @@ per-plane bytes/token).  Both default to ~no-ops: the tracer hands out
 one shared null span and the registry's counters are plain attribute
 increments, so the instrumented hot path *is* the production hot path.
 
+Overload hardening (DESIGN.md §13): admission is token-budget based
+(worst-case prompt + max_new blocks reserved against the paged arena
+before a slot is taken), the wait queue is bounded with a configurable
+shed policy (``reject`` / ``shed-oldest`` / ``shed-largest`` — shed
+requests end in the ``shed`` terminal state, never in a latency
+percentile), and optional arena high/low watermarks pause admission with
+hysteresis before the pool is exhausted.  Under pressure the engine
+**preempts-to-recompute**: the longest-remaining slot releases its KV
+blocks back to the pool and re-enters the queue head; because ESPIM's
+sparsity is static (all per-request state is replayable from the prompt
+plus committed tokens), the victim later resumes by re-prefilling its
+committed history through the chunked prefiller and its remaining greedy
+tokens are bit-for-bit identical to a never-preempted run.  The same
+replayability powers ``snapshot()`` / ``restore()``: a versioned,
+digest- and pack-fingerprint-bound serialization of all scheduler and
+request state (KV planes are recomputed, not saved) from which a fresh
+engine completes every in-flight request with exact parity
+(``serve/snapshot.py``, crash drill in ``serve/faults.py``).
+
 Fault tolerance (DESIGN.md §11): sparse packs are fingerprint-verified
 at engine construction (``verify_packs`` — a corrupted or mismatched
 pack fails loudly at load, or degrades the whole engine to the pruned
@@ -117,6 +136,9 @@ class EngineStats:
     slot_occupancy: float = 0.0    # mean fraction of slots active per tick
     quarantines: int = 0           # per-slot non-finite guard trips
     retries: int = 0               # transient step failures retried
+    preempts: int = 0              # slots released to recompute later
+    requests_shed: int = 0         # dropped by overload admission control
+    restored_requests: int = 0     # requests re-admitted by restore()
     watchdog_flags: int = 0        # LatencyWatchdog trips (stuck decode)
     degraded_tokens: int = 0       # tokens emitted by the dense fallback
     requests_degraded: int = 0     # completed, but via the dense fallback
@@ -137,7 +159,8 @@ class EngineStats:
 class _Slot:
     """Per-slot serving state (the request plus its progress)."""
     __slots__ = ("req", "metrics", "phase", "pos", "cursor", "cur_token",
-                 "pf_cache", "degraded", "emitted_degraded")
+                 "pf_cache", "degraded", "emitted_degraded", "feed",
+                 "resumed")
 
     def __init__(self, req, metrics):
         self.req = req
@@ -149,6 +172,10 @@ class _Slot:
         self.pf_cache = None
         self.degraded = False          # decoding via the dense fallback
         self.emitted_degraded = False  # at least one fallback token out
+        # tokens the prefill/replay phase feeds: the prompt for a fresh
+        # request, prompt + committed output for a preempt/restore resume
+        self.feed = req.prompt
+        self.resumed = False
 
 
 class ServeEngine:
@@ -163,11 +190,22 @@ class ServeEngine:
                  max_retries: int = 2, retry_backoff: float = 0.05,
                  retry_backoff_cap: float = 1.0, watchdog=None,
                  validate_arena: bool = False, tracer: tt.Tracer | None = None,
-                 metrics: tm.Registry | None = None):
+                 metrics: tm.Registry | None = None,
+                 max_queue_depth: int | None = None,
+                 shed_policy: str = "reject", preempt: bool = True,
+                 watermark_high: float | None = None,
+                 watermark_low: float | None = None):
         if on_verify_failure not in ("raise", "degrade"):
             raise ValueError(
                 f"unknown on_verify_failure {on_verify_failure!r}; "
                 f"use 'raise' or 'degrade'")
+        if watermark_high is not None:
+            if watermark_low is None:
+                watermark_low = max(0.0, watermark_high - 0.25)
+            if not (0.0 <= watermark_low < watermark_high <= 1.0):
+                raise ValueError(
+                    f"watermarks need 0 <= low < high <= 1, got "
+                    f"low={watermark_low} high={watermark_high}")
         # telemetry first, so even load-time verification is observable:
         # a disabled tracer hands out one shared null span (no hot-path
         # allocations); the registry is always live (counter increments
@@ -216,7 +254,14 @@ class ServeEngine:
         self.seq_len = np.zeros(batch_slots, np.int32)
         self.scheduler = Scheduler(policy=policy,
                                    max_prefill_streak=max_prefill_streak,
-                                   metrics=self.metrics)
+                                   metrics=self.metrics,
+                                   max_queue_depth=max_queue_depth,
+                                   shed_policy=shed_policy)
+        self.scheduler.on_shed = self._on_shed
+        self.preempt = preempt
+        self._wm_high = watermark_high
+        self._wm_low = watermark_low
+        self._backpressure = False
         self.stats = EngineStats(requests=self.scheduler.completed,
                                  degraded_to_dense=degraded_to_dense,
                                  hists=self.scheduler.hists)
@@ -290,6 +335,17 @@ class ServeEngine:
             "serve_watchdog_flags_total", "stuck-decode watchdog trips")
         self._c_arena_checks = reg.counter(
             "serve_arena_checks_total", "leaked-block invariant sweeps run")
+        self._c_preempts = reg.counter(
+            "serve_preempts_total", "slots released to recompute later")
+        self._c_shed = reg.counter(
+            "serve_shed_total", "requests dropped by overload admission")
+        self._c_restores = reg.counter(
+            "serve_restores_total", "requests re-admitted from a snapshot")
+        self._g_queue_depth = reg.gauge(
+            "serve_queue_depth", "requests waiting for admission")
+        self._g_headroom = reg.gauge(
+            "serve_arena_headroom_blocks",
+            "free arena blocks not covered by admission reservations")
         self._g_slot_occ = reg.gauge(
             "serve_slot_occupancy", "mean fraction of slots decoding")
         self._g_arena = {
@@ -319,10 +375,12 @@ class ServeEngine:
                     1.0 - float(valid.sum()) / max(1, valid.size))
 
     def _update_arena_gauges(self) -> None:
+        self._g_queue_depth.set(self.scheduler.queue_depth)
         nb = getattr(self.cache, "num_blocks", 0)
         if not nb:
             return
         free = self.cache.free_blocks
+        self._g_headroom.set(free - int(self.cache._resv.sum()))
         quarantined = len(getattr(self.cache, "_quarantined", ()))
         self._g_arena["used"].set(nb - free - quarantined)
         self._g_arena["free"].set(free)
@@ -352,7 +410,11 @@ class ServeEngine:
             degraded_to_dense=self.stats.degraded_to_dense,
             hists=self.scheduler.hists)
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Enqueue a request.  Infeasible requests (cannot ever fit the
+        arena or max_len) raise; a feasible request may still be shed by
+        the bounded-queue overload policy — returns False in that case
+        (the request is terminal in state ``shed``), True when queued."""
         worst = req.worst_case_tokens(self.max_len)
         if self.paged and self.cache.blocks_needed(worst) > self.cache.num_blocks:
             raise ValueError(
@@ -362,7 +424,16 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.rid} prompt ({len(req.prompt)}) exceeds "
                 f"max_len ({self.max_len})")
-        self.scheduler.add(req)
+        admitted = self.scheduler.add(req) is not None
+        self._g_queue_depth.set(self.scheduler.queue_depth)
+        return admitted
+
+    def _on_shed(self, req) -> None:
+        """Scheduler shed hook: one request dropped by overload policy."""
+        self.stats.requests_shed += 1
+        self._c_shed.inc()
+        self.tracer.instant("fault.shed", cat="fault",
+                            args={"rid": req.rid})
 
     def cancel(self, rid: int) -> bool:
         """Cancel a request wherever it lives: an in-flight slot is torn
@@ -378,7 +449,45 @@ class ServeEngine:
             return True
         return False
 
+    def snapshot(self) -> dict:
+        """Versioned, digest- and pack-fingerprint-bound serialization of
+        the engine's control plane (queues, committed tokens, slot map).
+        KV planes are recomputed on restore, never saved.  Call at a step
+        boundary (between ``step()`` calls)."""
+        from repro.serve import snapshot as snapmod
+        return snapmod.snapshot_engine(self)
+
+    def restore(self, snap: dict, requests: dict | None = None) -> list:
+        """Re-admit every request from a snapshot into this (idle)
+        engine; each resumes by re-prefilling its committed history, so
+        remaining greedy tokens match the uninterrupted run bit-for-bit.
+        Raises ``SnapshotIntegrityError`` on digest/version/pack
+        mismatch.  Returns the restored Request objects."""
+        from repro.serve import snapshot as snapmod
+        return snapmod.restore_engine(self, snap, requests)
+
+    def _arena_pressure(self) -> float:
+        """Fraction of the arena that is used or spoken for (allocated +
+        quarantined + outstanding reservations) — the watermark signal."""
+        nb = getattr(self.cache, "num_blocks", 0)
+        if not nb:
+            return 0.0
+        used = nb - self.cache.free_blocks
+        return (used + int(self.cache._resv.sum())) / nb
+
     def _admit(self) -> None:
+        if self._wm_high is not None and self.paged:
+            # hysteresis backpressure: past the high watermark admission
+            # pauses (headroom is kept for in-flight growth + restores)
+            # and resumes only once pressure falls below the low mark
+            occ = self._arena_pressure()
+            if self._backpressure:
+                if occ <= self._wm_low:
+                    self._backpressure = False
+            elif occ >= self._wm_high:
+                self._backpressure = True
+            if self._backpressure:
+                return
         for i in range(self.b):
             if self.slots[i] is not None:
                 continue
@@ -395,14 +504,97 @@ class ServeEngine:
             req, metrics = picked
             st = _Slot(req, metrics)
             self.seq_len[i] = 0
+            # a request with committed output resumes (preempt/restore):
+            # its per-request state is replayed from prompt + committed
+            # tokens — the SDDS planes are static, so the recompute is
+            # bit-identical to the original prefill + decode history
+            hist = list(req.prompt) + [int(t) for t in req.output]
+            st.resumed = bool(req.output)
+            if st.resumed:
+                self.tracer.instant("fault.resume", cat="fault",
+                                    args={"slot": i, "rid": req.rid,
+                                          "committed": len(req.output)})
             if self.chunked_prefill:
                 st.phase = "prefill"
                 st.pf_cache = self._prefiller.proto
+                # the last committed token is the next decode's input, so
+                # prefill re-feeds everything before it
+                st.feed = hist[:-1] if st.resumed else hist
             else:
                 st.phase = "decode"
                 st.cursor = 0
-                st.cur_token = req.prompt[0]
+                st.feed = hist
+                st.cur_token = st.feed[0]
             self.slots[i] = st
+
+    # ----------------------------------------------------------- preemption
+    def _remaining_tokens(self, st: _Slot) -> int:
+        """Tokens this slot still has to serve: unfed prefill/replay rows
+        plus undecoded output — the longest-remaining-first victim key."""
+        rem = st.req.max_new_tokens - len(st.req.output)
+        if st.phase == "prefill":
+            rem += len(st.feed) - st.pos
+        elif st.cursor is not None and st.cursor < len(st.feed):
+            rem += len(st.feed) - st.cursor
+        return rem
+
+    def _preempt_slot(self, i: int) -> _Slot:
+        """Release one slot's KV blocks back to the pool, keeping the
+        request's committed tokens for later recompute.  NOT a terminal
+        exit — the caller requeues the request."""
+        st = self.slots[i]
+        self.stats.preempts += 1
+        self._c_preempts.inc()
+        self.tracer.instant("fault.preempt", cat="fault",
+                            args={"slot": i, "rid": st.req.rid,
+                                  "committed": len(st.req.output)})
+        self.cache.free_slot(i)
+        self.slots[i] = None
+        self.seq_len[i] = 0
+        return st
+
+    def _maybe_preempt(self) -> None:
+        """Preempt-to-recompute: when the next queued request has a free
+        slot waiting but is blocked on ARENA space (its worst-case block
+        reservation fails) and some slot has strictly more work left than
+        the candidate's whole footprint, release that slot (longest
+        remaining first), admit the candidate into the freed blocks in
+        the same tick, and requeue the victim at the queue head.  The
+        strict ordering (victim remaining > candidate total) makes the
+        policy well-founded — every preemption serves strictly shorter
+        work, so chains terminate and no pair can flip-flop.  Slot
+        shortage alone (all slots busy, arena fine) never preempts: that
+        is ordinary queueing, not pressure."""
+        if (not self.preempt or not self.paged or self._backpressure
+                or not self.scheduler.has_pending
+                or all(s is not None for s in self.slots)):
+            return
+        cand = self.scheduler.peek()
+        if cand is None:
+            return
+        req, _m = cand
+        cand_rem = (len(req.prompt) + req.max_new_tokens
+                    - len(req.output))
+        victim, victim_rem = None, cand_rem
+        for i, st in enumerate(self.slots):
+            if st is None:
+                continue
+            rem = self._remaining_tokens(st)
+            if rem > victim_rem:
+                victim, victim_rem = i, rem
+        if victim is None:
+            return
+        # pointless-preemption guard: only evict when the victim's slot +
+        # blocks actually let the candidate reserve
+        need = self.cache.blocks_needed(req.worst_case_tokens(self.max_len))
+        avail = self.cache.free_blocks - int(self.cache._resv.sum())
+        freed = (int(self.cache.n_blocks[victim])
+                 + int(self.cache._resv[victim]))
+        if avail + freed < need:
+            return
+        st = self._preempt_slot(victim)
+        self._admit()                     # candidate takes the freed space
+        self.scheduler.requeue(st.req, st.metrics)
 
     def _teardown(self, i: int, state: str = "completed") -> None:
         """The single exit path for every slot, whatever the reason —
@@ -518,12 +710,12 @@ class ServeEngine:
     # ----------------------------------------------------------- tick kinds
     def _prefill_tick(self, i: int) -> None:
         st = self.slots[i]
-        plen = len(st.req.prompt)
+        plen = len(st.feed)
         with self.tracer.span("prefill.launch", cat="prefill",
                               args=None) as sp:
             sp.set("slot", i).set("pos", st.pos)
             logits, st.pf_cache, n_valid = self._prefiller.run_chunk(
-                self.params, st.pf_cache, st.req.prompt, st.pos)
+                self.params, st.pf_cache, st.feed, st.pos)
             self.tracer.fence(logits)
         with self.tracer.span("cache.scatter", cat="prefill"):
             self.cache.ensure(i, st.pos + n_valid)
@@ -534,6 +726,17 @@ class ServeEngine:
         self.stats.steps += 1
         self.stats.prefill_chunks += 1
         if st.pos >= plen:
+            if st.resumed:
+                # resume recompute: the feed ends just before the last
+                # committed token, which becomes the next decode input —
+                # the final chunk's logits are history, never re-sampled
+                self.cache.set_slot_state(
+                    i, self._prefiller.state_rows(st.pf_cache))
+                st.pf_cache = None
+                self.seq_len[i] = plen
+                st.cur_token = int(st.req.output[-1])
+                st.phase = "decode"
+                return
             # prompt fully prefilled: install recurrent states and sample
             # the first token straight from the final chunk's logits
             with self.tracer.span("host.sample", cat="host_sync"):
@@ -564,8 +767,8 @@ class ServeEngine:
             lens = np.zeros(self.b, np.int32)
             for i in decoding:
                 st = self.slots[i]
-                if st.cursor is not None and st.cursor < len(st.req.prompt):
-                    cur[i, 0] = st.req.prompt[st.cursor]   # replay prefill
+                if st.cursor is not None and st.cursor < len(st.feed):
+                    cur[i, 0] = st.feed[st.cursor]   # replay prefill/resume
                 else:
                     cur[i, 0] = st.cur_token
                 lens[i] = self.seq_len[i]
@@ -674,9 +877,9 @@ class ServeEngine:
                 if st is None or i not in results:
                     continue  # torn down or quarantined: no emit/advance
                 self.seq_len[i] += 1
-                if st.cursor is not None and st.cursor < len(st.req.prompt):
+                if st.cursor is not None and st.cursor < len(st.feed):
                     st.cursor += 1
-                    if st.cursor < len(st.req.prompt):
+                    if st.cursor < len(st.feed):
                         continue        # still replaying: output ignored
                 if st.degraded:
                     st.emitted_degraded = True
@@ -699,6 +902,7 @@ class ServeEngine:
                 self._expire()
             with self.tracer.span("scheduler.admit", cat="scheduler"):
                 self._admit()
+                self._maybe_preempt()
             with self.tracer.span("scheduler.plan", cat="scheduler"):
                 prefilling = [i for i, s in enumerate(self.slots)
                               if s is not None and s.phase == "prefill"]

@@ -40,7 +40,9 @@ from repro.serve.serve_step import serve_step_sparse_fn
 __all__ = ["FAULT_KINDS", "LOAD_FAULTS", "flip_bit", "corrupt_group_plane",
            "mismatch_schedule", "poison_values", "inject_poisoned_decode",
            "force_nonfinite_flag", "arm_latency_spike",
-           "arm_transient_errors", "run_fault_drill", "check_drill"]
+           "arm_transient_errors", "run_fault_drill", "check_drill",
+           "run_crash_drill", "check_crash_drill",
+           "run_overload_drill", "check_overload_drill"]
 
 FAULT_KINDS = ("index_bitflip", "value_bitflip", "schedule_mismatch",
                "nonfinite_logits", "abort_mid_decode", "arena_oom",
@@ -359,6 +361,217 @@ def _drill_one(kind, _mk_engine, _fresh_reqs, baseline, sparse, sparse_alt,
         "wall_s": wall,
     })
     return res
+
+
+def run_crash_drill(cfg, params, sparse: dict | None = None, seed: int = 0,
+                    *, impl: str = "ref", batch_slots: int = 2,
+                    max_len: int = 64, block_size: int = 8,
+                    prefill_chunk: int = 8, n_requests: int = 4,
+                    max_new_tokens: int = 8, kill_step: int | None = None,
+                    tracer=None) -> dict:
+    """Crash-consistency drill (DESIGN.md §13): run a trace to completion
+    for a baseline, then run a second engine and *kill it* at an
+    arbitrary step boundary — snapshot, discard the engine, restore the
+    snapshot into a fresh engine and drain.  The contract: every request
+    finishes with greedy output bit-identical to the uninterrupted run,
+    and the restored engine leaks zero blocks.  The snapshot round-trips
+    through its JSON text form, so what is asserted is what a crash
+    handler would actually write to disk."""
+    from repro.serve import snapshot as snapmod
+
+    rng = np.random.default_rng(seed)
+    reqs = _drill_requests(cfg, rng, n_requests, max_new_tokens)
+    prompts = {r.rid: list(r.prompt) for r in reqs}
+
+    def _fresh_reqs():
+        return [Request(rid=rid, prompt=list(p),
+                        max_new_tokens=max_new_tokens)
+                for rid, p in prompts.items()]
+
+    def _mk_engine():
+        return ServeEngine(
+            cfg, params, batch_slots, max_len, sparse=sparse, impl=impl,
+            block_size=block_size, prefill_chunk=prefill_chunk,
+            validate_arena=True, tracer=tracer)
+
+    # ---- uninterrupted baseline ----------------------------------------
+    base_reqs = _fresh_reqs()
+    eng = _mk_engine()
+    total_steps = _drain(eng, base_reqs)
+    baseline = {r.rid: list(r.output) for r in base_reqs}
+
+    # ---- the run that dies ---------------------------------------------
+    if kill_step is None:
+        kill_step = int(rng.integers(1, max(2, total_steps)))
+    victim_reqs = _fresh_reqs()
+    eng = _mk_engine()
+    for r in victim_reqs:
+        eng.submit(r)
+    for _ in range(kill_step):
+        if (not eng.scheduler.has_pending
+                and all(s is None for s in eng.slots)):
+            break
+        eng.step()
+    snap_text = snapmod.dumps(eng.snapshot())
+    in_flight = sum(1 for r in victim_reqs if not r.done)
+    del eng                                 # the "crash": engine is gone
+
+    # ---- restore into a fresh engine and drain -------------------------
+    t0 = time.monotonic()
+    eng2 = _mk_engine()
+    snap = snapmod.loads(snap_text)
+    restored = eng2.restore(snap, {r.rid: r for r in victim_reqs})
+    toks_at_restore = eng2.stats.tokens_generated
+    t_first_new = [None]
+
+    def on_step(e, step):
+        if (t_first_new[0] is None
+                and e.stats.tokens_generated > toks_at_restore):
+            t_first_new[0] = time.monotonic() - t0
+
+    _drain(eng2, [], on_step=on_step)
+    recovery_s = time.monotonic() - t0
+    eng2.check_arena()
+
+    parity = {r.rid: r.output == baseline[r.rid] for r in victim_reqs}
+    return {
+        "seed": seed,
+        "kill_step": kill_step,
+        "total_steps": total_steps,
+        "snapshot_bytes": len(snap_text),
+        "in_flight_at_kill": in_flight,
+        "restored_requests": len(restored),
+        "parity": parity,
+        "exact_parity": all(parity.values()),
+        "leaked_blocks": eng2.cache.num_blocks - eng2.cache.free_blocks,
+        "first_new_token_s": t_first_new[0],
+        "recovery_s": recovery_s,
+        "states": eng2.stats.latency_summary()["states"],
+    }
+
+
+def check_crash_drill(drill: dict) -> None:
+    """Assert the crash-drill contract: bit-exact parity with the
+    uninterrupted run for every request, zero leaked blocks."""
+    ctx = (f"crash drill (kill_step={drill['kill_step']}/"
+           f"{drill['total_steps']}): {drill['parity']}")
+    assert drill["exact_parity"], f"{ctx} — restored output diverged"
+    assert drill["leaked_blocks"] == 0, f"{ctx} — leaked paged blocks"
+    assert drill["restored_requests"] == drill["in_flight_at_kill"], \
+        f"{ctx} — snapshot lost or duplicated in-flight requests"
+
+
+def run_overload_drill(cfg, params, sparse: dict | None = None,
+                       seed: int = 0, *, impl: str = "ref",
+                       batch_slots: int = 2, max_len: int = 64,
+                       block_size: int = 8, prefill_chunk: int = 8,
+                       n_requests: int = 16, factor: float = 2.0,
+                       max_queue_depth: int = 3,
+                       shed_policy: str = "shed-largest",
+                       ttft_slo_s: float = 2.0, num_blocks: int | None = None,
+                       tracer=None, max_steps: int = 6000) -> dict:
+    """Poisson overload burst at ``factor``x the engine's service rate.
+
+    Arrivals are drawn per *step* from a seeded Poisson process (so the
+    shed/preempt decision sequence is reproducible — only wall-clock
+    latency varies run to run).  The request mix is bimodal: long
+    generations that occupy the tight arena next to short ones that
+    arrive blocked, which is exactly the shape where preempt-to-recompute
+    pays off.  Reports goodput-under-SLO (tokens from requests whose
+    TTFT met ``ttft_slo_s``, per wall second), shed/preempt counts, and
+    the terminal-state census.  The contract (``check_overload_drill``):
+    overload is absorbed by *policy* — shed and/or preempt — with zero
+    failed requests, zero leaked blocks and no OOM."""
+    rng = np.random.default_rng(seed)
+    # bimodal mix: heavy generations + short ones (rids interleaved)
+    reqs = []
+    for r in range(n_requests):
+        if r % 2 == 0:
+            mnew = 12 + int(rng.integers(5))        # long: 12-16 new
+            plen = 6 + int(rng.integers(4))
+        else:
+            mnew = 3 + int(rng.integers(3))         # short: 3-5 new
+            plen = 4 + int(rng.integers(3))
+        reqs.append(Request(
+            rid=r, max_new_tokens=mnew,
+            prompt=[int(t) for t in rng.integers(1, cfg.vocab_size, plen)]))
+    mean_steps = float(np.mean(
+        [len(r.prompt) / prefill_chunk + r.max_new_tokens for r in reqs]))
+    lam = factor * batch_slots / mean_steps     # requests per engine step
+    if num_blocks is None:
+        # arena sized so one long resident starves a short arrival (a
+        # blocked short next to a long-remaining resident is the shape
+        # preempt-to-recompute exists for), while still admitting every
+        # request on its own
+        worst = max(r.worst_case_tokens(max_len) for r in reqs)
+        num_blocks = (worst + block_size - 1) // block_size + 1
+    eng = ServeEngine(
+        cfg, params, batch_slots, max_len, sparse=sparse, impl=impl,
+        block_size=block_size, num_blocks=num_blocks,
+        prefill_chunk=prefill_chunk, validate_arena=True, tracer=tracer,
+        max_queue_depth=max_queue_depth, shed_policy=shed_policy,
+        preempt=True, watermark_high=0.97)
+
+    submitted = 0
+    max_queue = 0
+    t0 = time.monotonic()
+    steps = 0
+    while steps < max_steps:
+        if submitted < n_requests:
+            for _ in range(int(rng.poisson(lam))):
+                if submitted >= n_requests:
+                    break
+                eng.submit(reqs[submitted])
+                submitted += 1
+        elif (not eng.scheduler.has_pending
+                and all(s is None for s in eng.slots)):
+            break
+        eng.step()
+        steps += 1
+        max_queue = max(max_queue, eng.scheduler.queue_depth)
+    wall = time.monotonic() - t0
+    eng.check_arena()
+
+    st = eng.stats
+    states = st.latency_summary()["states"]
+    good_tokens = sum(
+        m.n_out for m in eng.scheduler.completed
+        if m.state in ("completed", "degraded")
+        and m.ttft is not None and m.ttft <= ttft_slo_s)
+    return {
+        "seed": seed,
+        "factor": factor,
+        "shed_policy": shed_policy,
+        "scale": {"batch_slots": batch_slots, "num_blocks": num_blocks,
+                  "max_queue_depth": max_queue_depth,
+                  "n_requests": n_requests, "lambda_per_step": lam},
+        "steps": steps,
+        "wall_s": wall,
+        "states": states,
+        "tokens": st.tokens_generated,
+        "sheds": st.requests_shed,
+        "preempts": st.preempts,
+        "max_queue_depth_seen": max_queue,
+        "goodput_tokens_under_slo": good_tokens,
+        "goodput_tok_s_under_slo": good_tokens / max(wall, 1e-9),
+        "leaked_blocks": eng.cache.num_blocks - eng.cache.free_blocks,
+        "drained": steps < max_steps,
+    }
+
+
+def check_overload_drill(drill: dict) -> None:
+    """Assert the overload contract: the burst is absorbed by policy
+    (shedding and/or preemption engaged), nothing fails or leaks, and
+    the engine drains — overload degrades goodput, never correctness."""
+    ctx = f"overload drill: {drill}"
+    assert drill["drained"], f"{ctx} — engine never drained (livelock?)"
+    assert drill["leaked_blocks"] == 0, f"{ctx} — leaked paged blocks"
+    assert drill["states"].get("failed", 0) == 0, f"{ctx} — requests failed"
+    assert drill["sheds"] + drill["preempts"] >= 1, \
+        f"{ctx} — 2x overload absorbed without any policy action"
+    served = (drill["states"].get("completed", 0)
+              + drill["states"].get("degraded", 0))
+    assert served >= 1, f"{ctx} — nothing completed under overload"
 
 
 def check_drill(drill: dict) -> None:

@@ -11,6 +11,19 @@ owns three decisions:
   TTFT under load, at the cost of tail latency for long prompts).
   Admission is gated on the paged cache's worst-case block reservation,
   so an admitted request can never deadlock the arena mid-flight.
+* **overload policy** (DESIGN.md §13) — the wait queue is bounded
+  (``max_queue_depth``); a submit past the bound is resolved by
+  ``shed_policy``: ``reject`` (refuse the newcomer), ``shed-oldest``
+  (drop the longest-waiting queued request) or ``shed-largest`` (drop
+  whichever of queue+newcomer has the largest worst-case token
+  footprint).  Shed requests end in the ``shed`` terminal state — "we
+  dropped it under load" is never reported as latency.  Under arena
+  pressure the scheduler also nominates a **preemption** victim
+  (longest-remaining generation first): the engine releases the victim's
+  KV blocks and ``requeue``-s it; because ESPIM's sparsity plan is
+  static, the victim resumes later by re-prefilling its prompt +
+  committed tokens and its remaining greedy tokens are bit-identical to
+  a never-preempted run.
 * **prefill/decode interleave** — each engine tick is either one prefill
   chunk (for one slot) or one batched decode step (for every decode-ready
   slot).  At most ``max_prefill_streak`` consecutive prefill ticks run
@@ -38,9 +51,10 @@ import numpy as np
 from repro.telemetry.metrics import Histogram, Registry
 
 __all__ = ["RequestMetrics", "Scheduler", "percentiles",
-           "latency_summary", "TERMINAL_STATES"]
+           "latency_summary", "TERMINAL_STATES", "SHED_POLICIES"]
 
 POLICIES = ("fcfs", "sjf")
+SHED_POLICIES = ("reject", "shed-oldest", "shed-largest")
 
 # every request ends in exactly one of these (the robustness contract:
 # "fast" and "fast because we dropped it" are different states):
@@ -51,8 +65,10 @@ POLICIES = ("fcfs", "sjf")
 #   deadline_expired — torn down by a TTFT / wall-clock deadline
 #   failed           — torn down because no datapath could produce finite
 #                      logits (or retries exhausted)
+#   shed             — dropped by overload admission control before (or
+#                      instead of) ever running (bounded wait queue)
 TERMINAL_STATES = ("completed", "degraded", "cancelled",
-                   "deadline_expired", "failed")
+                   "deadline_expired", "failed", "shed")
 
 
 @dataclasses.dataclass
@@ -65,6 +81,7 @@ class RequestMetrics:
     t_done: float | None = None
     n_out: int = 0
     state: str = "in_flight"
+    preempts: int = 0       # times this request was preempted + requeued
 
     @property
     def queue_delay(self) -> float | None:
@@ -126,11 +143,19 @@ def latency_summary(done: list[RequestMetrics],
 
 class Scheduler:
     def __init__(self, policy: str = "fcfs", max_prefill_streak: int = 2,
-                 metrics: Registry | None = None):
+                 metrics: Registry | None = None,
+                 max_queue_depth: int | None = None,
+                 shed_policy: str = "reject"):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; use {POLICIES}")
+        if shed_policy not in SHED_POLICIES:
+            raise ValueError(f"unknown shed_policy {shed_policy!r}; "
+                             f"use {SHED_POLICIES}")
         self.policy = policy
         self.max_prefill_streak = max(1, max_prefill_streak)
+        self.max_queue_depth = max_queue_depth
+        self.shed_policy = shed_policy
+        self.on_shed = None           # callback(request) — engine hook
         self.pending: list = []       # [(request, RequestMetrics)]
         self.completed: list[RequestMetrics] = []
         self._streak = 0
@@ -154,15 +179,75 @@ class Scheduler:
             h.reset()
 
     # ----------------------------------------------------------- admission
-    def add(self, request) -> RequestMetrics:
+    @staticmethod
+    def _footprint(req) -> int:
+        """Worst-case token footprint — the shed-largest ordering key."""
+        return len(req.prompt) + getattr(req, "max_new_tokens", 0)
+
+    def _shed(self, req, m) -> None:
+        req.done = True
+        self.finish(m, "shed")
+        if self.on_shed is not None:
+            self.on_shed(req)
+
+    def add(self, request) -> RequestMetrics | None:
+        """Enqueue a request, or shed per ``shed_policy`` when the wait
+        queue is at ``max_queue_depth``.  Returns the new request's
+        metrics, or None when the newcomer itself was shed.  Preempted
+        requests waiting to resume are never shed — their committed
+        tokens were already delivered, so dropping them would turn a
+        partial stream into a lie."""
         m = RequestMetrics(rid=request.rid, prompt_len=len(request.prompt),
                            t_submit=time.monotonic())
+        if (self.max_queue_depth is not None
+                and len(self.pending) >= self.max_queue_depth):
+            sheddable = [i for i, (r, pm) in enumerate(self.pending)
+                         if pm.preempts == 0]
+            if self.shed_policy == "reject" or not sheddable:
+                self._shed(request, m)
+                return None
+            if self.shed_policy == "shed-oldest":
+                victim = sheddable[0]
+            else:                       # shed-largest: biggest worst-case
+                victim = max(sheddable,  # footprint of queue + newcomer
+                             key=lambda i: self._footprint(
+                                 self.pending[i][0]))
+                if (self._footprint(request)
+                        > self._footprint(self.pending[victim][0])):
+                    self._shed(request, m)
+                    return None
+            vreq, vm = self.pending.pop(victim)
+            self._shed(vreq, vm)
         self.pending.append((request, m))
         return m
+
+    def requeue(self, request, m: RequestMetrics) -> None:
+        """Put a preempted request back at the head of the wait queue: it
+        is the oldest admitted work (FCFS order preserved; SJF re-sorts
+        at pick time anyway).  Requeueing bypasses the queue bound — the
+        request already held a slot, so this is not new load."""
+        m.preempts += 1
+        m.t_admit = None
+        self.pending.insert(0, (request, m))
 
     @property
     def has_pending(self) -> bool:
         return bool(self.pending)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.pending)
+
+    def peek(self) -> tuple | None:
+        """The (request, metrics) admission would try next per policy —
+        the preemption candidate when its reservation is what's blocked."""
+        if not self.pending:
+            return None
+        if self.policy == "sjf":
+            i = min(range(len(self.pending)),
+                    key=lambda i: (len(self.pending[i][0].prompt), i))
+            return self.pending[i]
+        return self.pending[0]
 
     def pick(self, can_admit) -> tuple | None:
         """Choose the next request for a free slot per policy; ``can_admit``

@@ -271,6 +271,11 @@ REQUIRED_SERVE_METRICS = (
     "serve_retries_total",
     "serve_verify_failures_total",
     "serve_watchdog_flags_total",
+    "serve_preempts_total",
+    "serve_shed_total",
+    "serve_restores_total",
+    "serve_queue_depth",
+    "serve_arena_headroom_blocks",
     "serve_arena_checks_total",
     "serve_arena_blocks",
     "serve_arena_occupancy",

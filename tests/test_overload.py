@@ -1,0 +1,293 @@
+"""Overload hardening (DESIGN.md §13): bounded-queue shedding, watermark
+backpressure, preempt-to-recompute parity, and the overload drill.
+
+The exactness bar matches the rest of the serving tests: a preempted
+request's final output is asserted bit-identical to a never-preempted
+run (greedy decode over static SDDS packs is replayable), and every
+scenario ends with the arena invariant green — overload policy degrades
+goodput, never correctness and never the block pool.
+"""
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: fall back to a seeded random sweep
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs.registry import get_config
+from repro.models import factory
+from repro.core.sparse_model import sparsify_model
+from repro.serve import faults
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.paged_cache import PagedKVCache
+from repro.serve.scheduler import (SHED_POLICIES, TERMINAL_STATES,
+                                   RequestMetrics, Scheduler)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def llama_sparse():
+    cfg = get_config("llama7b-espim", reduced=True)
+    params = factory.init_params(cfg, KEY)
+    sparse = sparsify_model(cfg, params, 0.9, row_tile=32)
+    return cfg, params, sparse
+
+
+def _req(rid, plen, max_new=6, seed=0):
+    rng = np.random.default_rng(seed + rid)
+    return Request(rid=rid, prompt=rng.integers(1, 400, plen).tolist(),
+                   max_new_tokens=max_new)
+
+
+def _drain(eng, max_steps=3000):
+    steps = 0
+    while steps < max_steps and (eng.scheduler.has_pending
+                                 or any(s is not None for s in eng.slots)):
+        eng.step()
+        steps += 1
+    assert steps < max_steps, "engine failed to drain"
+    return steps
+
+
+# --------------------------------------------------------------------------
+# 1) bounded queue + shed policies (scheduler-level, no model needed)
+# --------------------------------------------------------------------------
+def test_shed_policy_names_are_closed():
+    assert set(SHED_POLICIES) == {"reject", "shed-oldest", "shed-largest"}
+    assert "shed" in TERMINAL_STATES
+    with pytest.raises(ValueError):
+        Scheduler(shed_policy="drop-tail")
+
+
+def _sched(policy, depth=2):
+    shed = []
+    s = Scheduler(max_queue_depth=depth, shed_policy=policy)
+    s.on_shed = shed.append
+    return s, shed
+
+
+def test_reject_sheds_the_newcomer():
+    s, shed = _sched("reject")
+    assert s.add(_req(0, 4)) is not None
+    assert s.add(_req(1, 4)) is not None
+    late = _req(2, 4)
+    assert s.add(late) is None
+    assert [r.rid for r in shed] == [2] and late.done
+    assert [r.rid for r, _ in s.pending] == [0, 1]
+    assert s.completed[-1].state == "shed"
+
+
+def test_shed_oldest_drops_the_queue_head():
+    s, shed = _sched("shed-oldest")
+    s.add(_req(0, 4)), s.add(_req(1, 4))
+    m = s.add(_req(2, 4))
+    assert m is not None                      # newcomer got the slot
+    assert [r.rid for r in shed] == [0]
+    assert [r.rid for r, _ in s.pending] == [1, 2]
+
+
+def test_shed_largest_drops_biggest_footprint():
+    s, shed = _sched("shed-largest")
+    s.add(_req(0, 4, max_new=2))
+    s.add(_req(1, 12, max_new=20))            # the whale
+    assert s.add(_req(2, 4, max_new=2)) is not None
+    assert [r.rid for r in shed] == [1]
+    # a newcomer bigger than everything queued sheds itself
+    assert s.add(_req(3, 30, max_new=30)) is None
+    assert [r.rid for r in shed] == [1, 3]
+
+
+def test_preempted_requests_are_never_shed():
+    s, shed = _sched("shed-oldest", depth=1)
+    r0, m0 = _req(0, 4), None
+    m0 = s.add(r0)
+    s.pending.pop()                           # "admit" it
+    s.requeue(r0, m0)                         # preempted back to the head
+    assert m0.preempts == 1 and m0.t_admit is None
+    assert s.add(_req(1, 4)) is None          # r0 is shielded: newcomer sheds
+    assert [r.rid for r in shed] == [1]
+    assert s.pending[0][0].rid == 0
+
+
+def test_engine_submit_returns_false_when_shed(llama_sparse):
+    cfg, params, sparse = llama_sparse
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=48, sparse=sparse,
+                      block_size=8, prefill_chunk=8, validate_arena=True,
+                      max_queue_depth=1, shed_policy="reject")
+    reqs = [_req(i, 5, max_new=3) for i in range(4)]
+    admitted = [eng.submit(r) for r in reqs]
+    # slot takes none until step(); queue holds 1; the rest shed
+    assert admitted == [True, False, False, False]
+    assert eng.stats.requests_shed == 3
+    _drain(eng)
+    eng.check_arena()
+    states = eng.stats.latency_summary()["states"]
+    assert states == {"completed": 1, "shed": 3}
+    snap = eng.metrics.snapshot()
+    assert any(k.startswith("serve_shed_total") and v == 3
+               for k, v in snap.items())
+
+
+# --------------------------------------------------------------------------
+# 2) preempt-to-recompute: exact parity with the never-preempted run
+# --------------------------------------------------------------------------
+def test_preemption_parity_and_counters(llama_sparse):
+    cfg, params, sparse = llama_sparse
+    long_req = lambda: _req(0, 6, max_new=14, seed=7)
+    short_req = lambda: _req(1, 4, max_new=3, seed=7)
+
+    def _eng(**kw):
+        return ServeEngine(cfg, params, batch_slots=2, max_len=48,
+                           sparse=sparse, block_size=8, prefill_chunk=8,
+                           validate_arena=True, **kw)
+
+    # baseline: roomy arena, no pressure, no preemption
+    base = _eng()
+    b_long, b_short = long_req(), short_req()
+    base.submit(b_long), base.submit(b_short)
+    _drain(base)
+    assert base.stats.preempts == 0
+
+    # tight arena (exactly the long request's worst-case reservation):
+    # the resident starves the short arrival -> preempt, recompute,
+    # both finish
+    worst = long_req().worst_case_tokens(48)
+    nb = base.cache.blocks_needed(worst)
+    eng = _eng(num_blocks=nb)
+    p_long, p_short = long_req(), short_req()
+    eng.submit(p_long)
+    for _ in range(3):                        # let the long one get going
+        eng.step()
+    eng.submit(p_short)
+    _drain(eng)
+    eng.check_arena()
+    assert eng.stats.preempts >= 1
+    states = eng.stats.latency_summary()["states"]
+    assert states.get("completed", 0) == 2
+    # the robustness bar: bit-exact vs the never-preempted run
+    assert p_long.output == b_long.output
+    assert p_short.output == b_short.output
+    snap = eng.metrics.snapshot()
+    assert any(k.startswith("serve_preempts_total") and v >= 1
+               for k, v in snap.items())
+
+
+def test_watermark_backpressure_pauses_admission(llama_sparse):
+    cfg, params, sparse = llama_sparse
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, batch_slots=1, max_len=48, sparse=sparse,
+                    watermark_high=0.5, watermark_low=0.6)
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, sparse=sparse,
+                      block_size=8, prefill_chunk=8, validate_arena=True,
+                      num_blocks=6, watermark_high=0.6, watermark_low=0.2)
+    for i in range(3):
+        eng.submit(_req(i, 5, max_new=4))
+    saw_backpressure = []
+    steps = 0
+    while steps < 2000 and (eng.scheduler.has_pending
+                            or any(s is not None for s in eng.slots)):
+        eng.step()
+        saw_backpressure.append(eng._backpressure)
+        steps += 1
+    assert steps < 2000
+    eng.check_arena()
+    assert any(saw_backpressure), "high watermark never engaged"
+    assert not saw_backpressure[-1], "backpressure never released"
+    assert eng.stats.latency_summary()["states"] == {"completed": 3}
+
+
+# --------------------------------------------------------------------------
+# 3) cancel() coverage: wait-queue and mid-prefill (satellite)
+# --------------------------------------------------------------------------
+def test_cancel_queued_request(llama_sparse):
+    cfg, params, sparse = llama_sparse
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=48, sparse=sparse,
+                      block_size=8, prefill_chunk=8, validate_arena=True)
+    r0, r1 = _req(0, 5, max_new=3), _req(1, 5, max_new=3)
+    eng.submit(r0), eng.submit(r1)
+    eng.step()                                # r0 takes the slot
+    assert eng.cancel(1)                      # r1 still queued
+    assert r1.done and not eng.scheduler.has_pending
+    assert eng.cancel(1) is False             # idempotent: already gone
+    _drain(eng)
+    eng.check_arena()
+    states = {m.rid: m.state for m in eng.scheduler.completed}
+    assert states[1] == "cancelled" and states[0] == "completed"
+    assert eng.stats.requests_cancelled == 1
+
+
+def test_cancel_mid_prefill_frees_blocks(llama_sparse):
+    cfg, params, sparse = llama_sparse
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=64, sparse=sparse,
+                      block_size=8, prefill_chunk=4, validate_arena=True)
+    req = _req(0, 14, max_new=3)              # several prefill chunks
+    eng.submit(req)
+    eng.step()
+    st = eng.slots[0]
+    assert st is not None and st.phase == "prefill" and st.pos < 14
+    assert eng.cancel(0)
+    assert eng.slots[0] is None and req.done
+    eng.check_arena()                         # partial prefill blocks freed
+    assert eng.cache.free_blocks == eng.cache.num_blocks
+    assert eng.scheduler.completed[-1].state == "cancelled"
+    assert eng.stats.requests_cancelled == 1
+
+
+# --------------------------------------------------------------------------
+# 4) property test: admit/preempt/restore/free interleavings vs the arena
+# --------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_arena_accounting_under_random_interleavings(seed):
+    """Random admit (reserve+ensure) / preempt (free_slot) / restore
+    (re-reserve+re-ensure) / finish (free_slot) sequences keep
+    ``arena_check`` green after EVERY op: every physical block in exactly
+    one owner, reservations never exceeding the free pool."""
+    rng = np.random.default_rng(seed)
+    cfg = get_config("granite-3-2b", reduced=True)
+    pc = PagedKVCache(cfg, batch_slots=4, max_len=64,
+                      block_size=int(rng.choice([4, 8])),
+                      num_blocks=int(rng.integers(8, 24)))
+    grown = np.zeros(4, int)      # rows each live slot has materialized
+    live = [False] * 4
+    for _ in range(60):
+        slot = int(rng.integers(4))
+        op = rng.choice(["admit", "grow", "preempt", "finish", "restore"])
+        if op in ("admit", "restore"):
+            if not live[slot]:
+                worst = int(rng.integers(1, 64))
+                if pc.reserve(slot, worst):
+                    live[slot] = True
+                    grown[slot] = int(rng.integers(1, worst + 1))
+                    pc.ensure(slot, grown[slot])
+        elif op == "grow" and live[slot]:
+            # growth inside the reservation can never fail
+            grown[slot] = min(grown[slot] + int(rng.integers(1, 8)),
+                              grown[slot] + pc._resv[slot] * pc.block_size)
+            pc.ensure(slot, grown[slot])
+        elif op in ("preempt", "finish") and live[slot]:
+            pc.free_slot(slot)
+            live[slot] = False
+            grown[slot] = 0
+        acct = pc.arena_check()
+        assert acct["num_blocks"] == pc.num_blocks
+
+
+# --------------------------------------------------------------------------
+# 5) the overload drill end-to-end (the serve_bench --overload scenario)
+# --------------------------------------------------------------------------
+def test_overload_drill_sheds_and_preempts_without_oom(llama_sparse):
+    cfg, params, sparse = llama_sparse
+    drill = faults.run_overload_drill(cfg, params, sparse, seed=0)
+    faults.check_overload_drill(drill)
+    assert drill["sheds"] >= 1, "2x burst against a bounded queue must shed"
+    assert drill["preempts"] >= 1, \
+        "tight arena + bimodal mix must exercise preemption"
+    assert drill["states"].get("failed", 0) == 0
+    assert drill["leaked_blocks"] == 0
+    total = sum(drill["states"].values())
+    assert total == drill["scale"]["n_requests"], \
+        "every submitted request must reach a terminal state"

@@ -417,7 +417,7 @@ def test_strike_policy_and_watchdog():
 
 def test_terminal_states_contract():
     assert set(TERMINAL_STATES) == {"completed", "degraded", "cancelled",
-                                    "deadline_expired", "failed"}
+                                    "deadline_expired", "failed", "shed"}
     from repro.serve.scheduler import RequestMetrics, Scheduler
     s = Scheduler()
     m = RequestMetrics(rid=0, prompt_len=1, t_submit=0.0)

@@ -1,0 +1,205 @@
+"""Crash-consistent snapshot/restore (DESIGN.md §13, serve/snapshot.py).
+
+The contract under test: a snapshot taken at any step boundary restores
+into a fresh engine that finishes every request with greedy output
+bit-identical to the uninterrupted run and zero leaked blocks — across
+fp/int8/int4 packs and dense engines — while a snapshot bound to a
+different pack fingerprint, a tampered snapshot, or a wrong-version
+snapshot is refused loudly.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.sparse_model import sparsify_model
+from repro.models import factory
+from repro.serve import faults
+from repro.serve import snapshot as snapmod
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.snapshot import (SNAPSHOT_VERSION, SnapshotIntegrityError)
+from repro.core.integrity import PackIntegrityError
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_config("llama7b-espim", reduced=True)
+    params = factory.init_params(cfg, KEY)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def packs(llama):
+    cfg, params = llama
+    return {q: sparsify_model(cfg, params, 0.9, row_tile=32,
+                              quant=None if q == "fp" else q)
+            for q in ("fp", "int8", "int4")}
+
+
+def _eng(cfg, params, sparse, **kw):
+    kw.setdefault("max_len", 48)
+    return ServeEngine(cfg, params, batch_slots=2, sparse=sparse,
+                       block_size=8, prefill_chunk=8, validate_arena=True,
+                       **kw)
+
+
+def _reqs(n=3, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(1, 400, 4 + 2 * i).tolist(),
+                    max_new_tokens=5) for i in range(n)]
+
+
+# --------------------------------------------------------------------------
+# round-trip parity across quant modes (the crash drill end-to-end)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("quant", ["fp", "int8", "int4"])
+def test_crash_drill_round_trip_parity(llama, packs, quant):
+    cfg, params = llama
+    drill = faults.run_crash_drill(cfg, params, packs[quant], seed=1,
+                                   n_requests=3, max_new_tokens=5,
+                                   kill_step=7)
+    faults.check_crash_drill(drill)
+    assert drill["exact_parity"] and drill["leaked_blocks"] == 0
+    assert drill["snapshot_bytes"] < 16_384, \
+        "control-plane snapshot must not carry KV planes"
+
+
+def test_crash_drill_dense_engine(llama):
+    cfg, params = llama
+    drill = faults.run_crash_drill(cfg, params, None, seed=2,
+                                   n_requests=2, max_new_tokens=4)
+    faults.check_crash_drill(drill)
+
+
+def test_crash_drill_random_kill_steps(llama, packs):
+    """The kill step is arbitrary by contract — exercise an early, a mid
+    and a late boundary explicitly rather than trusting one draw."""
+    cfg, params = llama
+    base = faults.run_crash_drill(cfg, params, packs["fp"], seed=0,
+                                  n_requests=2, max_new_tokens=4,
+                                  kill_step=1)
+    for frac in (0.5, 0.9):
+        k = max(1, int(base["total_steps"] * frac))
+        d = faults.run_crash_drill(cfg, params, packs["fp"], seed=0,
+                                   n_requests=2, max_new_tokens=4,
+                                   kill_step=k)
+        faults.check_crash_drill(d)
+    faults.check_crash_drill(base)
+
+
+# --------------------------------------------------------------------------
+# snapshot format, digest and rejection paths
+# --------------------------------------------------------------------------
+def test_snapshot_schema_and_json_round_trip(llama, packs):
+    cfg, params = llama
+    eng = _eng(cfg, params, packs["fp"])
+    for r in _reqs():
+        eng.submit(r)
+    for _ in range(5):
+        eng.step()
+    snap = eng.snapshot()
+    assert snap["version"] == SNAPSHOT_VERSION
+    assert snap["pack_fingerprint"] == packs["fp"]["fingerprint"]
+    assert snap["digest"] == snapmod.snapshot_digest(snap)
+    origins = {e["origin"] for e in snap["requests"]}
+    assert origins <= {"slot", "queue"}
+    # slot residents serialize before the wait queue (admission order)
+    slots_seen = [e["origin"] for e in snap["requests"]]
+    assert slots_seen == sorted(slots_seen, key=lambda o: o != "slot")
+    again = snapmod.loads(snapmod.dumps(snap))
+    assert again == snap
+
+
+def test_restore_rejects_fingerprint_mismatch(llama, packs):
+    cfg, params = llama
+    eng = _eng(cfg, params, packs["fp"])
+    eng.submit(_reqs(1)[0])
+    eng.step()
+    snap = eng.snapshot()
+    other = _eng(cfg, params, packs["int8"])
+    with pytest.raises(SnapshotIntegrityError, match="different weights"):
+        other.restore(snap)
+    dense = _eng(cfg, params, None)
+    with pytest.raises(SnapshotIntegrityError):
+        dense.restore(snap)
+    # the refusal is part of the pack-integrity family
+    assert issubclass(SnapshotIntegrityError, PackIntegrityError)
+
+
+def test_restore_rejects_tamper_version_and_busy_engine(llama, packs):
+    cfg, params = llama
+    eng = _eng(cfg, params, packs["fp"])
+    reqs = _reqs(2)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    snap = eng.snapshot()
+
+    tampered = dict(snap)
+    tampered["requests"] = [dict(e) for e in snap["requests"]]
+    tampered["requests"][0]["output"] = \
+        list(tampered["requests"][0]["output"]) + [7]
+    with pytest.raises(SnapshotIntegrityError, match="digest"):
+        snapmod.validate_snapshot(tampered)
+
+    wrong_version = dict(snap, version=SNAPSHOT_VERSION + 1)
+    wrong_version["digest"] = snapmod.snapshot_digest(wrong_version)
+    with pytest.raises(SnapshotIntegrityError, match="version"):
+        snapmod.validate_snapshot(wrong_version)
+
+    fresh = _eng(cfg, params, packs["fp"], max_len=eng.max_len * 2)
+    with pytest.raises(SnapshotIntegrityError, match="max_len"):
+        fresh.restore(snap)            # engine max_len differs
+    with pytest.raises(RuntimeError, match="idle"):
+        eng.restore(snap)              # engine still has residents
+
+
+def test_restore_reattaches_caller_requests(llama, packs):
+    cfg, params = llama
+    eng = _eng(cfg, params, packs["fp"])
+    reqs = _reqs(2)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    snap = eng.snapshot()
+    assert snap["requests"], "kill point too late: nothing in flight"
+    fresh = _eng(cfg, params, packs["fp"])
+    held = {r.rid: r for r in reqs if not r.done}
+    restored = fresh.restore(snap, held)
+    assert restored
+    assert all(r is held[r.rid] for r in restored)
+    assert fresh.stats.restored_requests == len(restored)
+    # committed-output requests are shielded from future shedding
+    assert all(m.preempts >= 1 for r, m in fresh.scheduler.pending
+               if r.output)
+    bad = {rid: Request(rid=rid, prompt=[1, 2, 3]) for rid in held}
+    fresh2 = _eng(cfg, params, packs["fp"])
+    with pytest.raises(SnapshotIntegrityError, match="prompt"):
+        fresh2.restore(snap, bad)
+
+
+def test_restore_bypasses_shed_policy(llama, packs):
+    """Restored work is not new load: a bounded queue shallower than the
+    snapshot's request count must still take every restored request."""
+    cfg, params = llama
+    eng = _eng(cfg, params, packs["fp"])
+    reqs = _reqs(3)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    snap = eng.snapshot()
+    n = len(snap["requests"])
+    assert n == 3
+    fresh = _eng(cfg, params, packs["fp"], max_queue_depth=1,
+                 shed_policy="reject")
+    restored = fresh.restore(snap, {r.rid: r for r in reqs})
+    assert len(restored) == n and fresh.stats.requests_shed == 0
+    fresh.run()
+    fresh.check_arena()
+    states = fresh.stats.latency_summary()["states"]
+    assert states == {"completed": 3}

@@ -1,0 +1,283 @@
+"""Bench-history ledger + CLI front-end for the perf-regression sentinel.
+
+Every bench run (``kernels_bench`` / ``serve_bench``) appends one line of
+headline metrics to ``BENCH_HISTORY.jsonl``, keyed by a provenance
+fingerprint (backend / impl / quant / attn / pack hashes) so runs from
+different configurations never get compared against each other's
+baselines.  ``scripts/ci.sh`` then gates with::
+
+    python benchmarks/bench_history.py check \
+        --bench BENCH_serve_smoke.json \
+        --baseline benchmarks/baselines/serve_smoke.json
+
+Metric *policy* (which metrics gate, exact vs windowed, tolerance) lives
+here in code — see ``SERVE_SPECS`` / ``KERNEL_SPECS`` and the semantics
+in ``repro.telemetry.regression`` — while baselines store only the
+observed windows, so tightening a band never requires regenerating a
+baseline.  Timing tolerances are deliberately generous (3x bands):
+the sentinel exists to catch order-of-magnitude cliffs (dropped fusion,
+accidental dense fallback, host sync in the decode loop) across noisy
+CI hosts, not 10% jitter.  Determinism metrics (bytes/token, bits/nnz)
+are exact: they are functions of pack geometry, not the host.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import hashlib
+import json
+import sys
+import time
+
+from repro.telemetry.regression import (MetricSpec, PerfRegressionError,
+                                        assert_no_regression,
+                                        format_findings)
+
+HISTORY_PATH = "BENCH_HISTORY.jsonl"
+BASELINE_DIR = "benchmarks/baselines"
+
+# one-sided timing band: observed may drift to 1/3x (throughput) or 3x
+# (latency) of the baseline window edge before the gate trips
+_TIMING_TOL = 2.0
+# error ceilings move with numerics noise but never by 10x
+_ERR_TOL = 9.0
+
+
+def _spec_timing_lo(key):
+    return MetricSpec(key, "lower_better", _TIMING_TOL)
+
+
+def _spec_timing_hi(key):
+    return MetricSpec(key, "higher_better", _TIMING_TOL)
+
+
+SERVE_SPECS = [
+    _spec_timing_hi("single_stream.dense.tok_s"),
+    _spec_timing_hi("single_stream.sparse.tok_s"),
+    _spec_timing_hi("single_stream.sparse_attn_int4.tok_s"),
+    _spec_timing_hi("batched.sparse.tok_s"),
+    _spec_timing_lo("single_stream.sparse.ttft_p95_s"),
+    _spec_timing_lo("single_stream.sparse.tpot_p95_s"),
+    MetricSpec("single_stream.sparse.bytes_per_token", "exact"),
+    MetricSpec("single_stream.sparse_int8.bytes_per_token", "exact"),
+    MetricSpec("single_stream.sparse_int4.bytes_per_token", "exact"),
+    MetricSpec("single_stream.sparse_attn.bytes_per_token", "exact"),
+    MetricSpec("single_stream.sparse_attn_int8.bytes_per_token", "exact"),
+    MetricSpec("single_stream.sparse_attn_int4.bytes_per_token", "exact"),
+    MetricSpec("pad_frac", "exact", 1e-6),
+]
+
+KERNEL_SPECS = [
+    _spec_timing_lo("fused_layer_us"),
+    _spec_timing_lo("dense_layer_us"),
+    _spec_timing_lo("quant.int8.fused_layer_us"),
+    _spec_timing_lo("quant.int4.fused_layer_us"),
+    _spec_timing_lo("attn_sparse.sparse_step_us"),
+    MetricSpec("quant.int8.bytes_per_token", "exact"),
+    MetricSpec("quant.int4.bytes_per_token", "exact"),
+    MetricSpec("quant.int8.bits_per_nnz", "exact"),
+    MetricSpec("quant.int4.bits_per_nnz", "exact"),
+    MetricSpec("attn_sparse.bytes_per_token", "exact"),
+    MetricSpec("max_rel_err", "lower_better", _ERR_TOL),
+    MetricSpec("quant.int8.max_rel_err", "lower_better", _ERR_TOL),
+    MetricSpec("quant.int4.max_rel_err", "lower_better", _ERR_TOL),
+    MetricSpec("attn_sparse.max_rel_err", "lower_better", _ERR_TOL),
+]
+
+
+def specs_for(doc: dict) -> list:
+    bench = doc.get("bench") or ("kernels" if "smoke_result" in doc
+                                 or "unbatched" in doc else None)
+    if bench == "serve":
+        return SERVE_SPECS
+    return KERNEL_SPECS
+
+
+def fingerprint(doc: dict) -> str:
+    """Stable identity of *what ran* — provenance subset, not results —
+    so history lines from different configs are never conflated."""
+    prov = doc.get("provenance") or {}
+    subset = {k: prov.get(k)
+              for k in ("backend", "impl", "quant", "attn",
+                        "pallas_interpret", "packs")}
+    subset["bench"] = doc.get("bench", doc.get("schema"))
+    subset["smoke"] = bool(doc.get("smoke"))
+    blob = json.dumps(subset, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _win(value, lo=None, hi=None):
+    if value is None:
+        return None
+    return {"value": float(value),
+            "lo": float(lo if lo is not None else value),
+            "hi": float(hi if hi is not None else value)}
+
+
+def headline_serve(doc: dict) -> dict:
+    """Headline metrics from a serve bench doc: per-mode throughput with
+    its repeat window (lo=p50 pessimistic edge), latency p95s, and the
+    exact bytes/token invariants."""
+    out: dict = {}
+    for scen_name, scen in doc.get("scenarios", {}).items():
+        for mode, m in scen.get("modes", {}).items():
+            pre = f"{scen_name}.{mode}"
+            tok = m.get("throughput_tok_s")
+            if tok is not None:
+                out[f"{pre}.tok_s"] = _win(
+                    tok, lo=m.get("throughput_p50_tok_s"),
+                    hi=m.get("throughput_p95_tok_s", tok))
+            for hist in ("ttft_s", "tpot_s"):
+                h = m.get(hist) or {}
+                if h.get("p95") is not None:
+                    out[f"{pre}.{hist[:-2]}_p95_s"] = _win(
+                        h["p95"], lo=h.get("p50"), hi=h["p95"])
+            if m.get("bytes_per_token") is not None:
+                out[f"{pre}.bytes_per_token"] = _win(m["bytes_per_token"])
+    pad = (doc.get("telemetry") or {}).get("pad_frac")
+    if pad is not None:
+        out["pad_frac"] = _win(pad)
+    return out
+
+
+def headline_kernels(doc: dict) -> dict:
+    """Headline metrics from a kernels bench doc (smoke_result section);
+    timing windows use p50/p95 of the interleaved repeats."""
+    res = doc.get("smoke_result") or {}
+    out: dict = {}
+
+    def timing(dst, node, stem):
+        v = node.get(f"{stem}_us")
+        if v is not None:
+            out[dst] = _win(v, lo=node.get(f"{stem}_p50_us", v),
+                            hi=node.get(f"{stem}_p95_us", v))
+
+    timing("fused_layer_us", res, "fused_layer")
+    if res.get("dense_layer_us") is not None:
+        out["dense_layer_us"] = _win(res["dense_layer_us"])
+    if res.get("max_rel_err") is not None:
+        out["max_rel_err"] = _win(res["max_rel_err"])
+    for q, node in (res.get("quant") or {}).items():
+        timing(f"quant.{q}.fused_layer_us", node, "fused_layer")
+        for k in ("bytes_per_token", "bits_per_nnz", "max_rel_err"):
+            if node.get(k) is not None:
+                out[f"quant.{q}.{k}"] = _win(node[k])
+    at = res.get("attn_sparse") or {}
+    timing("attn_sparse.sparse_step_us", at, "sparse_step")
+    for k in ("bytes_per_token", "max_rel_err"):
+        if at.get(k) is not None:
+            out[f"attn_sparse.{k}"] = _win(at[k])
+    # full (non-smoke) runs carry the sweep summary instead
+    summ = doc.get("summary") or {}
+    for k in ("min_speedup_at_B_ge_8", "min_int8_speedup_vs_fp",
+              "min_pad_frac_bucketed"):
+        if summ.get(k) is not None:
+            out[f"summary.{k}"] = _win(summ[k])
+    return out
+
+
+def headline(doc: dict) -> dict:
+    return (headline_serve(doc) if doc.get("bench") == "serve"
+            else headline_kernels(doc))
+
+
+def append(doc: dict, history_path: str = HISTORY_PATH) -> dict:
+    """Append one ledger line for a bench doc; returns the line."""
+    line = {
+        "t_unix": int(time.time()),
+        "bench": doc.get("bench", "kernels"),
+        "smoke": bool(doc.get("smoke")),
+        "fingerprint": fingerprint(doc),
+        "metrics": headline(doc),
+    }
+    with open(history_path, "a") as f:
+        f.write(json.dumps(line, sort_keys=True) + "\n")
+    return line
+
+
+def make_baseline(doc: dict) -> dict:
+    """A checked-in baseline: the headline windows plus enough metadata
+    to tell what it was cut from."""
+    return {
+        "baseline": True,
+        "bench": doc.get("bench", "kernels"),
+        "smoke": bool(doc.get("smoke")),
+        "fingerprint": fingerprint(doc),
+        "metrics": headline(doc),
+    }
+
+
+def check(doc: dict, baseline: dict, *, label: str | None = None) -> list:
+    """Gate a bench doc against a baseline; raises PerfRegressionError
+    (with the offending metric, baseline window, and observed value in
+    the message) on drift.  Returns the findings on success."""
+    specs = specs_for(doc)
+    obs = headline(doc)
+    if baseline.get("fingerprint") not in (None, fingerprint(doc)):
+        print(f"note: provenance fingerprint changed "
+              f"({baseline['fingerprint']} -> {fingerprint(doc)}); "
+              f"comparing anyway — refresh the baseline if intentional",
+              file=sys.stderr)
+    return assert_no_regression(baseline["metrics"], obs, specs,
+                                label=label or doc.get("bench", "bench"))
+
+
+# ------------------------------------------------------------------- CLI
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p = sub.add_parser("append", help="append a bench doc to the ledger")
+    p.add_argument("--bench", required=True)
+    p.add_argument("--history", default=HISTORY_PATH)
+    p = sub.add_parser("check", help="gate a bench doc against a baseline")
+    p.add_argument("--bench", required=True)
+    p.add_argument("--baseline", required=True)
+    p = sub.add_parser("baseline", help="cut a baseline from a bench doc")
+    p.add_argument("--bench", required=True)
+    p.add_argument("--out", required=True)
+    p = sub.add_parser("history", help="print the ledger")
+    p.add_argument("--history", default=HISTORY_PATH)
+    args = ap.parse_args(argv)
+
+    if args.cmd == "history":
+        for path in sorted(glob.glob(args.history)):
+            with open(path) as f:
+                for line in f:
+                    rec = json.loads(line)
+                    print(f"{rec['t_unix']} {rec['bench']}"
+                          f"{' smoke' if rec['smoke'] else ''} "
+                          f"{rec['fingerprint']} "
+                          f"{len(rec['metrics'])} metrics")
+        return 0
+
+    with open(args.bench) as f:
+        doc = json.load(f)
+    if args.cmd == "append":
+        line = append(doc, args.history)
+        print(f"appended {len(line['metrics'])} metrics "
+              f"({line['fingerprint']}) to {args.history}")
+        return 0
+    if args.cmd == "baseline":
+        base = make_baseline(doc)
+        with open(args.out, "w") as f:
+            json.dump(base, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote baseline with {len(base['metrics'])} metrics "
+              f"to {args.out}")
+        return 0
+    # check
+    with open(args.baseline) as f:
+        base = json.load(f)
+    try:
+        findings = check(doc, base, label=args.bench)
+    except PerfRegressionError as e:
+        print(f"REGRESSION: {e}", file=sys.stderr)
+        return 1
+    print(f"sentinel ok: {len(findings)} gated metric(s) in band "
+          f"for {args.bench}")
+    print(format_findings(findings))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

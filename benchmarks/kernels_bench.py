@@ -454,6 +454,10 @@ def run(smoke: bool = False) -> list[str]:
     check_schema(report, smoke)
     with open(SMOKE_JSON_PATH if smoke else JSON_PATH, "w") as f:
         json.dump(report, f, indent=2)
+    # feed the perf-regression ledger (benchmarks/bench_history.py): one
+    # headline line per run, keyed by provenance fingerprint
+    from benchmarks import bench_history
+    bench_history.append(report)
     return rows
 
 

@@ -4,14 +4,97 @@ roofline report.  Prints ``name,us_per_call,derived`` CSV.
 Scale note: PIM figures run the Table III LLaMA-7B matrices row-subsampled
 by REPRO_BENCH_SCALE (default 16; cycles scale back linearly — see
 benchmarks/common.py).  Set REPRO_BENCH_SCALE=1 for the full matrices.
+
+``summary`` mode instead aggregates every ``BENCH_*.json`` artifact in
+the working directory into one table (bench x scenario x mode x tok/s x
+bytes/token), so the repo's bench trajectory is readable at a glance::
+
+    PYTHONPATH=src:. python benchmarks/run.py summary
 """
 from __future__ import annotations
 
+import argparse
+import glob
+import json
 import sys
 import time
 
 
-def main() -> None:
+def _fmt(v, nd=1):
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.{nd}f}"
+    return str(v)
+
+
+def summarize(paths: list[str]) -> list[str]:
+    """One row per (artifact, scenario, mode): the serve scenarios'
+    throughput + weight-stream bytes, the kernel smokes' layer timings,
+    and the drill artifacts' health one-liners."""
+    rows = [f"{'file':<28} {'scenario':<16} {'mode':<18} "
+            f"{'tok/s':>8} {'bytes/tok':>10}  notes"]
+    for path in sorted(paths):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            rows.append(f"{path:<28} UNREADABLE: {e}")
+            continue
+        name = path.split("/")[-1]
+        bench = doc.get("bench") or ("kernels" if "smoke_result" in doc
+                                     or "unbatched" in doc else "?")
+        if bench == "serve":
+            for scen_name, scen in doc.get("scenarios", {}).items():
+                for mode, m in scen.get("modes", {}).items():
+                    rows.append(
+                        f"{name:<28} {scen_name:<16} {mode:<18} "
+                        f"{_fmt(m.get('throughput_tok_s')):>8} "
+                        f"{_fmt(m.get('bytes_per_token'), 0):>10}  "
+                        f"ttft_p95={_fmt((m.get('ttft_s') or {}).get('p95'), 4)}s")
+        elif bench == "kernels":
+            res = doc.get("smoke_result") or {}
+            cells = [("fp", res)] + list((res.get("quant") or {}).items())
+            for mode, node in cells:
+                if node.get("fused_layer_us") is None:
+                    continue
+                rows.append(
+                    f"{name:<28} {'layer':<16} {mode:<18} "
+                    f"{'-':>8} {_fmt(node.get('bytes_per_token'), 0):>10}  "
+                    f"fused={_fmt(node['fused_layer_us'])}us")
+            at = res.get("attn_sparse") or {}
+            if at.get("sparse_step_us") is not None:
+                rows.append(
+                    f"{name:<28} {'attn':<16} {'sparse':<18} "
+                    f"{'-':>8} {_fmt(at.get('bytes_per_token'), 0):>10}  "
+                    f"step={_fmt(at['sparse_step_us'])}us")
+            for k, e in (doc.get("summary") or {}).items():
+                if k.startswith("min_") and e is not None:
+                    rows.append(f"{name:<28} {'summary':<16} {k:<18} "
+                                f"{'-':>8} {'-':>10}  {_fmt(e, 3)}")
+        elif "fault_drill" in doc:
+            f_ = doc["fault_drill"]["faults"]
+            rows.append(f"{name:<28} {'drill':<16} {'faults':<18} "
+                        f"{'-':>8} {'-':>10}  {len(f_)} classes ok")
+        elif "overload" in doc:
+            for rname, r in doc["overload"]["runs"].items():
+                rows.append(
+                    f"{name:<28} {'overload':<16} {rname:<18} "
+                    f"{_fmt(r.get('goodput_tok_s_under_slo')):>8} "
+                    f"{'-':>10}  sheds={r.get('sheds')} "
+                    f"preempts={r.get('preempts')}")
+        elif "crash_drill" in doc:
+            for rname, r in doc["crash_drill"]["runs"].items():
+                rows.append(
+                    f"{name:<28} {'crash':<16} {'seed ' + rname:<18} "
+                    f"{'-':>8} {'-':>10}  parity={r.get('exact_parity')} "
+                    f"recovery={_fmt(r.get('recovery_s'), 2)}s")
+        else:
+            rows.append(f"{name:<28} {'?':<16} {bench:<18}")
+    return rows
+
+
+def run_all() -> None:
     from benchmarks import (fig10_speedup, fig11_ablation, fig12_fifo,
                             fig13_banks, fig14_energy, kernels_bench,
                             roofline, table4_area)
@@ -38,6 +121,26 @@ def main() -> None:
         for r in rows:
             print(r)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("mode", nargs="?", default="all",
+                    choices=("all", "summary"),
+                    help="'all' runs every suite (default); 'summary' "
+                    "aggregates existing BENCH_*.json artifacts")
+    ap.add_argument("--glob", default="BENCH_*.json",
+                    help="artifact pattern for summary mode")
+    args = ap.parse_args(argv)
+    if args.mode == "summary":
+        paths = glob.glob(args.glob)
+        if not paths:
+            print(f"no artifacts match {args.glob!r}", file=sys.stderr)
+            raise SystemExit(1)
+        for row in summarize(paths):
+            print(row)
+        return
+    run_all()
 
 
 if __name__ == "__main__":

@@ -79,10 +79,13 @@ from repro.serve.engine import Request, ServeEngine
 from repro.serve.faults import (check_crash_drill, check_drill,
                                 check_overload_drill, run_crash_drill,
                                 run_fault_drill, run_overload_drill)
+from repro.telemetry import flightrec, timeline
 from repro.telemetry.metrics import (THROUGHPUT_BUCKETS, Histogram,
                                      validate_snapshot)
 from repro.telemetry.trace import (BREAKDOWN_SCHEMA_KEYS, Tracer,
                                    phase_breakdown, span_coverage)
+
+from benchmarks import bench_history
 
 ARCH = "llama7b-espim"
 SPARSITY = 0.9
@@ -249,6 +252,15 @@ def traced_run(cfg, params, sparse, *, slots, max_len, block_size, chunk,
     cov = span_coverage(tr.spans(), "engine.step")
     snap = eng.metrics.snapshot()
     validate_snapshot(snap, sparse=sparse is not None)
+    # per-request timeline reconstruction (DESIGN.md §14): every terminal
+    # request must fold back into a complete queued -> terminal lifecycle
+    # whose TTFT/TPOT agree with the engine's own RequestMetrics
+    tls = timeline.timelines_from_tracer(tr)
+    tl_report = timeline.check_timelines(
+        tls, {m.rid: m for m in eng.scheduler.completed})
+    pad_gauges = [v for k, v in snap.items()
+                  if k.startswith("espim_pad_frac")
+                  and isinstance(v, (int, float))]
     prov = ops.provenance(impl="ref", quant=quant, attn=attn)
     if trace_path:
         if trace_path.endswith(".jsonl"):
@@ -262,6 +274,8 @@ def traced_run(cfg, params, sparse, *, slots, max_len, block_size, chunk,
         "steps_traced": cov["parents"],
         "spans": len(tr.spans()),
         "metrics_families": sorted({k.split("{", 1)[0] for k in snap}),
+        "timelines": tl_report,
+        "pad_frac": max(pad_gauges) if pad_gauges else None,
         "trace_path": trace_path,
     }
 
@@ -374,6 +388,11 @@ def check_schema(doc: dict) -> None:
     assert tel["step_coverage"] >= 0.95, \
         f"engine.step span coverage {tel['step_coverage']} < 0.95"
     assert tel["overlap_errors"] == 0, "sibling phase spans overlap"
+    # per-request timelines (PR 9): 100% of terminal requests reconstruct
+    tl = tel["timelines"]
+    assert tl["requests"] > 0, "traced run produced no timelines"
+    assert tl["complete"] == tl["requests"], \
+        f"only {tl['complete']}/{tl['requests']} timelines complete"
     assert doc["breakdown"] is tel["breakdown"]
     assert doc["sparse_dense_ratio"] > 0
     t = doc["ttft_improvement"]
@@ -404,6 +423,18 @@ def main():
                     "PATH ends in .jsonl")
     args = ap.parse_args()
 
+    # benches opt the process flight recorder into autodump: any fault
+    # ladder trip during the run (quarantine, storm, crash drill) leaves
+    # a FLIGHT_*.json post-mortem next to the bench JSON
+    flight = flightrec.FlightRecorder(capacity=4096, autodump=True)
+    flightrec.set_recorder(flight)
+
+    if (args.trace is None and not args.smoke and not args.fault_drill
+            and not args.overload and not args.crash_drill):
+        # full serving runs always leave the trace artifact behind, the
+        # way the CI smokes already do
+        args.trace = "TRACE_serve.json"
+
     rng = np.random.default_rng(args.seed)
     cfg = get_config(ARCH, reduced=True)
     params = factory.init_params(cfg, jax.random.PRNGKey(0))
@@ -433,6 +464,7 @@ def main():
             doc["trace_path"] = args.trace
         out = (args.out if args.out != "BENCH_serve.json"
                else "BENCH_fault_drill.json")
+        doc["flight_dumps"] = flight.dumps
         with open(out, "w") as f:
             json.dump(doc, f, indent=2)
         f_ = drill["faults"]
@@ -478,6 +510,7 @@ def main():
                 f"{r['exact_parity']}, recovery {r['recovery_s']:.2f}s"
                 for name, r in runs.items())
         out = (args.out if args.out != "BENCH_serve.json" else default_out)
+        doc["flight_dumps"] = flight.dumps
         with open(out, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"wrote {out}: {summary}")
@@ -620,9 +653,13 @@ def main():
                                          seed=args.seed)
         doc["crash_drill"] = bench_crash(cfg, params, smoke=True,
                                          seed=args.seed)
+    doc["flight_dumps"] = flight.dumps
     check_schema(doc)
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)
+    hist_line = bench_history.append(doc)
+    print(f"appended {len(hist_line['metrics'])} headline metrics "
+          f"({hist_line['fingerprint']}) to {bench_history.HISTORY_PATH}")
     t = doc["ttft_improvement"]
     print(f"wrote {args.out}: single-stream dense "
           f"{modes['dense']['throughput_tok_s']:.1f} tok/s, sparse fp "

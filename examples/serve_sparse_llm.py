@@ -32,6 +32,7 @@ from repro.core.sparse_model import sparse_stats, sparsify_model
 from repro.kernels import ops
 from repro.models import factory
 from repro.serve.engine import Request, ServeEngine
+from repro.telemetry.timeline import format_timeline, timelines_from_tracer
 from repro.telemetry.trace import Tracer, phase_breakdown
 
 SPARSITY = 0.9
@@ -154,3 +155,10 @@ if args.trace:
           f"(open at https://ui.perfetto.dev)\n"
           f"engine.step breakdown ({bd['coverage']:.0%} of "
           f"{bd['wall_us'] / 1e3:.1f}ms step wall): {phases}")
+    # per-request timelines (DESIGN.md §14): the same trace, folded into
+    # one lifecycle strip per request — q=queued, p=prefill, d=decode,
+    # .=resident-but-waiting
+    print("\nper-request timelines:")
+    tls = timelines_from_tracer(tracer)
+    for rid in sorted(tls):
+        print(format_timeline(tls[rid]))

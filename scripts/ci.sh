@@ -36,10 +36,14 @@ PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" ESPIM_IMPL=ref \
     python benchmarks/kernels_bench.py --smoke
 
 echo "== serving fault-drill smoke: bit flips rejected at load, quarantine->dense, cancel/OOM/retry recovery =="
+rm -f FLIGHT_quarantine.json
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" ESPIM_IMPL=ref \
     python benchmarks/serve_bench.py --fault-drill --smoke \
     --out BENCH_fault_drill_smoke.json --trace TRACE_fault_drill_smoke.json
 test -f BENCH_fault_drill_smoke.json && echo "BENCH_fault_drill_smoke.json written"
+# the drill's nonfinite quarantine must auto-dump the flight ring — the
+# always-on post-mortem contract (DESIGN.md §14)
+test -f FLIGHT_quarantine.json && echo "FLIGHT_quarantine.json written (flight recorder auto-dump)"
 
 echo "== crash-recovery drill: kill at an arbitrary step, restore, bit-exact parity + zero leaks =="
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" ESPIM_IMPL=ref \
@@ -92,6 +96,49 @@ from repro.telemetry.metrics import REQUIRED_SERVE_METRICS
 missing = [m for m in REQUIRED_SERVE_METRICS
            if m not in tel["metrics_families"]]
 assert not missing, f"metrics families missing from traced run: {missing}"
+# per-request timelines (PR 9): the traced smoke must reconstruct a
+# complete lifecycle for 100% of terminal requests — from the bench's
+# own check AND independently from the exported trace artifact
+tl = tel["timelines"]
+assert tl["requests"] > 0 and tl["complete"] == tl["requests"], tl
+from repro.telemetry.timeline import timelines_from_chrome
+trace_doc = json.load(open("TRACE_serve_smoke.json"))
+tls = timelines_from_chrome(trace_doc)
+assert len(tls) == tl["requests"] and all(
+    t.complete for t in tls.values()), \
+    f"chrome-trace timeline reconstruction incomplete: {tls}"
 print(f"telemetry smoke ok: step coverage {tel['step_coverage']:.1%}, "
-      f"{len(tel['metrics_families'])} metric families")
+      f"{len(tel['metrics_families'])} metric families, "
+      f"{tl['complete']}/{tl['requests']} request timelines complete "
+      f"(max ttft err {tl['max_ttft_err_s']}s)")
 EOF
+
+echo "== perf-regression sentinel: both smokes vs checked-in baselines =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/bench_history.py check \
+    --bench BENCH_kernels_smoke.json --baseline benchmarks/baselines/kernels_smoke.json
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/bench_history.py check \
+    --bench BENCH_serve_smoke.json --baseline benchmarks/baselines/serve_smoke.json
+
+echo "== sentinel negative check: a 10x-perturbed metric must fail loudly =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+import json, subprocess, sys, tempfile
+
+doc = json.load(open("BENCH_serve_smoke.json"))
+m = doc["scenarios"]["single_stream"]["modes"]["sparse"]
+m["throughput_tok_s"] /= 10.0          # simulate an order-of-magnitude cliff
+m["throughput_p50_tok_s"] /= 10.0
+with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as f:
+    json.dump(doc, f)
+    bad = f.name
+r = subprocess.run(
+    [sys.executable, "benchmarks/bench_history.py", "check",
+     "--bench", bad, "--baseline", "benchmarks/baselines/serve_smoke.json"],
+    capture_output=True, text=True)
+assert r.returncode != 0, "sentinel PASSED a 10x throughput regression"
+assert "single_stream.sparse.tok_s" in r.stderr, r.stderr
+print("sentinel negative check ok: 10x perturbation rejected with "
+      "offending metric, baseline window, and observed value in the log")
+EOF
+
+echo "== bench trajectory =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py summary

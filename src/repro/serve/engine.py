@@ -82,6 +82,7 @@ from repro.serve.prefill import ChunkedPrefiller
 from repro.serve.scheduler import Scheduler
 from repro.serve.serve_step import (sample_tokens, serve_step_fn,
                                     serve_step_sparse_fn)
+from repro.telemetry import flightrec
 from repro.telemetry import metrics as tm
 from repro.telemetry import trace as tt
 
@@ -190,7 +191,7 @@ class ServeEngine:
                  max_retries: int = 2, retry_backoff: float = 0.05,
                  retry_backoff_cap: float = 1.0, watchdog=None,
                  validate_arena: bool = False, tracer: tt.Tracer | None = None,
-                 metrics: tm.Registry | None = None,
+                 metrics: tm.Registry | None = None, flight=None,
                  max_queue_depth: int | None = None,
                  shed_policy: str = "reject", preempt: bool = True,
                  watermark_high: float | None = None,
@@ -211,6 +212,10 @@ class ServeEngine:
         # allocations); the registry is always live (counter increments
         # are plain attribute adds — see tests/test_telemetry.py)
         self.tracer = tracer if tracer is not None else tt.get_tracer()
+        # the always-on flight recorder (DESIGN.md §14): fed regardless
+        # of tracer state, dumped by the fault ladder on incidents
+        self.flight = (flight if flight is not None
+                       else flightrec.get_recorder())
         self.metrics = metrics if metrics is not None else tm.Registry({
             "model": cfg.name,
             "impl": impl,
@@ -256,7 +261,8 @@ class ServeEngine:
                                    max_prefill_streak=max_prefill_streak,
                                    metrics=self.metrics,
                                    max_queue_depth=max_queue_depth,
-                                   shed_policy=shed_policy)
+                                   shed_policy=shed_policy,
+                                   tracer=self.tracer, flight=self.flight)
         self.scheduler.on_shed = self._on_shed
         self.preempt = preempt
         self._wm_high = watermark_high
@@ -432,8 +438,11 @@ class ServeEngine:
         """Scheduler shed hook: one request dropped by overload policy."""
         self.stats.requests_shed += 1
         self._c_shed.inc()
-        self.tracer.instant("fault.shed", cat="fault",
-                            args={"rid": req.rid})
+        info = {"rid": req.rid}
+        self.tracer.instant("fault.shed", cat="fault", args=info)
+        self.flight.record("fault", "fault.shed", info)
+        if self.flight.pressure():
+            self.flight.trip("shed_storm", registry=self.metrics)
 
     def cancel(self, rid: int) -> bool:
         """Cancel a request wherever it lives: an in-flight slot is torn
@@ -455,7 +464,12 @@ class ServeEngine:
         KV planes are recomputed on restore, never saved.  Call at a step
         boundary (between ``step()`` calls)."""
         from repro.serve import snapshot as snapmod
-        return snapmod.snapshot_engine(self)
+        with self.tracer.span("snapshot.save", cat="snapshot") as sp:
+            snap = snapmod.snapshot_engine(self)
+            sp.set("requests", len(snap["requests"]))
+        self.flight.record("snapshot", "snapshot.save",
+                           {"requests": len(snap["requests"])})
+        return snap
 
     def restore(self, snap: dict, requests: dict | None = None) -> list:
         """Re-admit every request from a snapshot into this (idle)
@@ -464,7 +478,12 @@ class ServeEngine:
         Raises ``SnapshotIntegrityError`` on digest/version/pack
         mismatch.  Returns the restored Request objects."""
         from repro.serve import snapshot as snapmod
-        return snapmod.restore_engine(self, snap, requests)
+        with self.tracer.span("snapshot.restore", cat="snapshot") as sp:
+            reqs = snapmod.restore_engine(self, snap, requests)
+            sp.set("requests", len(reqs))
+        self.flight.record("snapshot", "snapshot.restore",
+                           {"requests": len(reqs)})
+        return reqs
 
     def _arena_pressure(self) -> float:
         """Fraction of the arena that is used or spoken for (allocated +
@@ -503,6 +522,10 @@ class ServeEngine:
                 break
             req, metrics = picked
             st = _Slot(req, metrics)
+            adm = {"rid": req.rid, "slot": i,
+                   "resumed": bool(req.output)}
+            self.tracer.instant("req.admit", cat="request", args=adm)
+            self.flight.record("request", "req.admit", adm)
             self.seq_len[i] = 0
             # a request with committed output resumes (preempt/restore):
             # its per-request state is replayed from prompt + committed
@@ -511,9 +534,10 @@ class ServeEngine:
             hist = list(req.prompt) + [int(t) for t in req.output]
             st.resumed = bool(req.output)
             if st.resumed:
-                self.tracer.instant("fault.resume", cat="fault",
-                                    args={"slot": i, "rid": req.rid,
-                                          "committed": len(req.output)})
+                res = {"slot": i, "rid": req.rid,
+                       "committed": len(req.output)}
+                self.tracer.instant("fault.resume", cat="fault", args=res)
+                self.flight.record("fault", "fault.resume", res)
             if self.chunked_prefill:
                 st.phase = "prefill"
                 st.pf_cache = self._prefiller.proto
@@ -545,9 +569,12 @@ class ServeEngine:
         st = self.slots[i]
         self.stats.preempts += 1
         self._c_preempts.inc()
-        self.tracer.instant("fault.preempt", cat="fault",
-                            args={"slot": i, "rid": st.req.rid,
-                                  "committed": len(st.req.output)})
+        info = {"slot": i, "rid": st.req.rid,
+                "committed": len(st.req.output)}
+        self.tracer.instant("fault.preempt", cat="fault", args=info)
+        self.flight.record("fault", "fault.preempt", info)
+        if self.flight.pressure():
+            self.flight.trip("preempt_storm", registry=self.metrics)
         self.cache.free_slot(i)
         self.slots[i] = None
         self.seq_len[i] = 0
@@ -606,6 +633,9 @@ class ServeEngine:
             state = "degraded"      # full output, but not all-sparse-path
         st.req.done = True
         self.scheduler.finish(st.metrics, state)
+        if state == "failed":
+            # no datapath produced finite logits — worth a post-mortem
+            self.flight.trip("failure", registry=self.metrics)
         if state in ("completed", "degraded"):
             self.stats.requests_completed += 1
             if state == "degraded":
@@ -643,6 +673,9 @@ class ServeEngine:
         st = self.slots[i]
         if st.metrics.t_first is None:
             st.metrics.t_first = time.monotonic()
+            ft = {"rid": st.req.rid, "slot": i}
+            self.tracer.instant("req.first_token", cat="request", args=ft)
+            self.flight.record("request", "req.first_token", ft)
         st.req.output.append(tok)
         st.metrics.n_out += 1
         self.stats.tokens_generated += 1
@@ -687,9 +720,9 @@ class ServeEngine:
                     raise
                 self.stats.retries += 1
                 self._c_retries.inc()
-                self.tracer.instant("fault.retry", cat="fault",
-                                    args={"attempt": attempt,
-                                          "backoff_s": delay})
+                info = {"attempt": attempt, "backoff_s": delay}
+                self.tracer.instant("fault.retry", cat="fault", args=info)
+                self.flight.record("fault", "fault.retry", info)
                 time.sleep(delay)
                 delay = min(delay * 2.0, self.retry_backoff_cap)
 
@@ -748,8 +781,10 @@ class ServeEngine:
                 # ends here rather than ever emit a wrong token
                 self.stats.quarantines += 1
                 self._c_quarantines.inc()
-                self.tracer.instant("fault.quarantine", cat="fault",
-                                    args={"slot": i, "phase": "prefill"})
+                q = {"slot": i, "rid": st.req.rid, "phase": "prefill"}
+                self.tracer.instant("fault.quarantine", cat="fault", args=q)
+                self.flight.record("fault", "fault.quarantine", q)
+                self.flight.trip("quarantine", registry=self.metrics)
                 self._teardown(i, "failed")
                 return
             self.cache.set_slot_state(
@@ -818,8 +853,12 @@ class ServeEngine:
                     any_drop = True
                     self.stats.quarantines += 1
                     self._c_quarantines.inc()
+                    q = {"slot": i, "rid": self.slots[i].req.rid,
+                         "phase": "decode"}
                     self.tracer.instant("fault.quarantine", cat="fault",
-                                        args={"slot": i, "phase": "decode"})
+                                        args=q)
+                    self.flight.record("fault", "fault.quarantine", q)
+                    self.flight.trip("quarantine", registry=self.metrics)
                     if self.sparse is None:
                         # dense engine: no lower rung on the ladder
                         self._teardown(i, "failed")
@@ -870,6 +909,7 @@ class ServeEngine:
             self.stats.watchdog_flags += 1
             self._c_watchdog.inc()
             self.tracer.instant("fault.watchdog_flag", cat="fault")
+            self.flight.record("fault", "fault.watchdog_flag", None)
 
         with self.tracer.span("decode.emit", cat="decode"):
             for i in decoding:
@@ -912,12 +952,22 @@ class ServeEngine:
                                                             decoding)
             if action == "prefill":
                 t0 = time.monotonic()
-                with self.tracer.span("prefill.chunk", cat="prefill"):
+                # work spans carry their owning request(s) so the
+                # timeline builder can attribute every tick to a rid
+                pf_args = {"rid": self.slots[target].req.rid,
+                           "slot": target}
+                self.flight.record("step", "prefill.chunk", pf_args)
+                with self.tracer.span("prefill.chunk", cat="prefill",
+                                      args=pf_args):
                     self._prefill_tick(target)
                 self._h_step["prefill"].observe(time.monotonic() - t0)
             elif action == "decode":
                 t0 = time.monotonic()
-                with self.tracer.span("decode.step", cat="decode"):
+                d_args = {"rids": [self.slots[i].req.rid
+                                   for i in decoding]}
+                self.flight.record("step", "decode.step", d_args)
+                with self.tracer.span("decode.step", cat="decode",
+                                      args=d_args):
                     self._decode_tick(decoding)
                 self._h_step["decode"].observe(time.monotonic() - t0)
             with self.tracer.span("metrics.update", cat="scheduler"):

@@ -414,6 +414,12 @@ def run_crash_drill(cfg, params, sparse: dict | None = None, seed: int = 0,
         eng.step()
     snap_text = snapmod.dumps(eng.snapshot())
     in_flight = sum(1 for r in victim_reqs if not r.done)
+    # the crash is exactly when a post-mortem needs the flight ring: dump
+    # it (when the process recorder opted into autodump) before the
+    # engine object disappears
+    eng.flight.record("fault", "crash_drill",
+                      {"kill_step": kill_step, "in_flight": in_flight})
+    flight_dump = eng.flight.trip("crash_drill", registry=eng.metrics)
     del eng                                 # the "crash": engine is gone
 
     # ---- restore into a fresh engine and drain -------------------------
@@ -447,6 +453,7 @@ def run_crash_drill(cfg, params, sparse: dict | None = None, seed: int = 0,
         "first_new_token_s": t_first_new[0],
         "recovery_s": recovery_s,
         "states": eng2.stats.latency_summary()["states"],
+        "flight_dump": flight_dump,
     }
 
 

@@ -48,7 +48,9 @@ import time
 
 import numpy as np
 
+from repro.telemetry import flightrec
 from repro.telemetry.metrics import Histogram, Registry
+from repro.telemetry.trace import NULL_TRACER
 
 __all__ = ["RequestMetrics", "Scheduler", "percentiles",
            "latency_summary", "TERMINAL_STATES", "SHED_POLICIES"]
@@ -145,7 +147,8 @@ class Scheduler:
     def __init__(self, policy: str = "fcfs", max_prefill_streak: int = 2,
                  metrics: Registry | None = None,
                  max_queue_depth: int | None = None,
-                 shed_policy: str = "reject"):
+                 shed_policy: str = "reject",
+                 tracer=None, flight=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; use {POLICIES}")
         if shed_policy not in SHED_POLICIES:
@@ -156,6 +159,11 @@ class Scheduler:
         self.max_queue_depth = max_queue_depth
         self.shed_policy = shed_policy
         self.on_shed = None           # callback(request) — engine hook
+        # request-scoped lifecycle marks (DESIGN.md §14) go to both the
+        # opt-in tracer and the always-on flight recorder
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.flight = (flight if flight is not None
+                       else flightrec.get_recorder())
         self.pending: list = []       # [(request, RequestMetrics)]
         self.completed: list[RequestMetrics] = []
         self._streak = 0
@@ -178,6 +186,11 @@ class Scheduler:
         for h in self.hists.values():
             h.reset()
 
+    def _mark(self, name: str, args: dict) -> None:
+        """One rid-keyed lifecycle mark, mirrored to tracer + flight."""
+        self.tracer.instant(name, cat="request", args=args)
+        self.flight.record("request", name, args)
+
     # ----------------------------------------------------------- admission
     @staticmethod
     def _footprint(req) -> int:
@@ -199,6 +212,10 @@ class Scheduler:
         partial stream into a lie."""
         m = RequestMetrics(rid=request.rid, prompt_len=len(request.prompt),
                            t_submit=time.monotonic())
+        # queued mark BEFORE the shed decision: even a request shed at
+        # the door gets a reconstructable queued -> terminal lifecycle
+        self._mark("req.queued", {"rid": request.rid,
+                                  "prompt_len": m.prompt_len})
         if (self.max_queue_depth is not None
                 and len(self.pending) >= self.max_queue_depth):
             sheddable = [i for i, (r, pm) in enumerate(self.pending)
@@ -228,6 +245,8 @@ class Scheduler:
         request already held a slot, so this is not new load."""
         m.preempts += 1
         m.t_admit = None
+        self._mark("req.requeue", {"rid": request.rid,
+                                   "preempts": m.preempts})
         self.pending.insert(0, (request, m))
 
     @property
@@ -295,6 +314,10 @@ class Scheduler:
                              f"use {TERMINAL_STATES}")
         metrics.t_done = time.monotonic()
         metrics.state = state
+        # single choke point for ALL terminal transitions (teardown,
+        # shed, cancel, expire) — the timeline's terminal mark
+        self._mark("req.terminal", {"rid": metrics.rid, "state": state,
+                                    "n_out": metrics.n_out})
         self.completed.append(metrics)
         for key, value in (("ttft_s", metrics.ttft),
                            ("tpot_s", metrics.tpot),

@@ -222,14 +222,18 @@ def restore_engine(eng, snap: dict, requests: dict | None = None) -> list:
         if req.output and m.preempts == 0:
             m.preempts = 1      # committed tokens: never sheddable
         # deliberate pending.append, not scheduler.add(): restore
-        # bypasses the bounded-queue shed policy
+        # bypasses the bounded-queue shed policy — so it emits its own
+        # queued mark to keep every lifecycle reconstructable
+        eng.scheduler._mark("req.queued", {"rid": rid,
+                                           "prompt_len": m.prompt_len,
+                                           "restored": True})
         eng.scheduler.pending.append((req, m))
         eng.stats.restored_requests += 1
         eng._c_restores.inc()
-        eng.tracer.instant("fault.restore", cat="fault",
-                           args={"rid": rid,
-                                 "committed": len(req.output),
-                                 "origin": entry["origin"]})
+        info = {"rid": rid, "committed": len(req.output),
+                "origin": entry["origin"]}
+        eng.tracer.instant("fault.restore", cat="fault", args=info)
+        eng.flight.record("fault", "fault.restore", info)
         restored.append(req)
     eng._g_queue_depth.set(eng.scheduler.queue_depth)
     return restored

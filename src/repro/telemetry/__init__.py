@@ -10,7 +10,21 @@ Three layers, threaded through the whole pipeline:
   summaries that replaced the full-sort percentile path.
 * ``profile`` — kernel launch profiling (warmup discard, best/p50/p95,
   effective GB/s vs the dense roofline) consumed by both benches.
+
+Second layer (DESIGN §14), request-scoped and always-on:
+
+* ``flightrec``  — bounded ring of recent request/fault events every
+  engine feeds unconditionally; the fault ladder dumps it to
+  ``FLIGHT_*.json`` so post-mortems never require a traced re-run.
+* ``timeline``   — reconstructs per-request lifecycles (queued →
+  prefill chunks → decode ticks → terminal state) from a live tracer,
+  a Chrome trace, or a JSONL event log.
+* ``regression`` — noise-aware perf-regression sentinel (exact vs
+  windowed one-sided tolerance bands) gated by CI via
+  ``benchmarks/bench_history.py``.
 """
+from repro.telemetry.flightrec import (FlightRecorder,  # noqa: F401
+                                       get_recorder, set_recorder)
 from repro.telemetry.metrics import (Counter, Gauge, Histogram,  # noqa: F401
                                      LATENCY_BUCKETS_S,
                                      REQUIRED_SERVE_METRICS, Registry,
@@ -18,6 +32,16 @@ from repro.telemetry.metrics import (Counter, Gauge, Histogram,  # noqa: F401
                                      log_buckets, validate_snapshot)
 from repro.telemetry.profile import (KernelProfiler,  # noqa: F401
                                      LaunchTiming, time_launch)
+from repro.telemetry.regression import (MetricSpec,  # noqa: F401
+                                        PerfRegressionError,
+                                        assert_no_regression, compare,
+                                        format_findings)
+from repro.telemetry.timeline import (RequestTimeline, Segment,  # noqa: F401
+                                      build_timelines, check_timelines,
+                                      format_timeline,
+                                      timelines_from_chrome,
+                                      timelines_from_jsonl,
+                                      timelines_from_tracer)
 from repro.telemetry.trace import (BREAKDOWN_SCHEMA_KEYS,  # noqa: F401
                                    NULL_TRACER, Span, Tracer, get_tracer,
                                    phase_breakdown, set_tracer,
@@ -31,4 +55,10 @@ __all__ = [
     "Span", "Tracer", "NULL_TRACER", "get_tracer", "set_tracer",
     "span_coverage", "phase_breakdown", "validate_chrome_trace",
     "BREAKDOWN_SCHEMA_KEYS",
+    "FlightRecorder", "get_recorder", "set_recorder",
+    "Segment", "RequestTimeline", "build_timelines",
+    "timelines_from_tracer", "timelines_from_chrome",
+    "timelines_from_jsonl", "check_timelines", "format_timeline",
+    "MetricSpec", "PerfRegressionError", "compare",
+    "assert_no_regression", "format_findings",
 ]

@@ -1,0 +1,177 @@
+"""Always-on flight recorder (DESIGN.md §14, telemetry/flightrec.py).
+
+The cost contract is pinned here: the disabled path is an allocation-free
+early return, the enabled path is one tuple into a preallocated ring that
+never grows past capacity, and files are written only by ``trip()`` when
+``autodump`` is on and the per-reason cooldown has passed.  The engine
+integration test asserts the "always-on" property itself: with the span
+tracer disabled, a served request still leaves its full lifecycle in the
+ring.
+"""
+import json
+import tracemalloc
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.sparse_model import sparsify_model
+from repro.models import factory
+from repro.serve.engine import Request, ServeEngine
+from repro.telemetry.flightrec import (FlightRecorder, get_recorder,
+                                       set_recorder)
+from repro.telemetry.metrics import Registry
+
+
+# --------------------------------------------------------------------------
+# ring semantics
+# --------------------------------------------------------------------------
+def test_capacity_must_be_positive():
+    with pytest.raises(ValueError):
+        FlightRecorder(capacity=0)
+
+
+def test_ring_bounded_and_oldest_first():
+    rec = FlightRecorder(capacity=16)
+    for i in range(100):
+        rec.record("step", f"ev{i}", {"i": i})
+    assert rec.recorded == 100
+    assert rec.dropped == 84
+    evs = rec.events()
+    assert len(evs) == 16
+    assert [e["args"]["i"] for e in evs] == list(range(84, 100))
+    assert [e["name"] for e in evs][0] == "ev84"
+    ts = [e["t_ns"] for e in evs]
+    assert ts == sorted(ts)
+    rec.clear()
+    assert rec.recorded == 0 and rec.events() == []
+
+
+def test_ring_memory_is_o_capacity():
+    """The ring is preallocated and overwritten in place — its identity
+    and length never change no matter how many events flow through."""
+    rec = FlightRecorder(capacity=32)
+    ring = rec._ring
+    for i in range(10 * rec.capacity):
+        rec.record("step", "ev", {"i": i})
+    assert rec._ring is ring and len(rec._ring) == rec.capacity
+    assert rec.dropped == 9 * rec.capacity
+
+
+def test_disabled_recorder_is_inert_and_allocation_free():
+    rec = FlightRecorder(capacity=16, enabled=False)
+    args = {"rid": 0}               # caller-built payload, reused
+    tracemalloc.start()
+    for _ in range(1000):
+        rec.record("request", "req.queued", args)   # warm the code path
+    snap1 = tracemalloc.take_snapshot()
+    for _ in range(100_000):
+        rec.record("request", "req.queued", args)
+    snap2 = tracemalloc.take_snapshot()
+    tracemalloc.stop()
+    # allocations attributed to flightrec.py across 100k disabled calls
+    # must be a constant interpreter residue (<0.01 bytes/call), never
+    # O(calls) — the early return touches no heap per event
+    mine = [s for s in snap2.compare_to(snap1, "filename")
+            if "flightrec" in s.traceback[0].filename]
+    leaked = sum(s.size_diff for s in mine)
+    assert leaked < 1024, \
+        f"disabled record() allocated {leaked} bytes over 100k calls"
+    assert rec.recorded == 0 and rec.events() == []
+    assert rec.pressure() is False
+    assert rec.trip("anything") is None
+
+
+# --------------------------------------------------------------------------
+# dumping: trip() gating, cooldown, file format
+# --------------------------------------------------------------------------
+def test_dump_file_format(tmp_path):
+    rec = FlightRecorder(capacity=8, dump_dir=str(tmp_path))
+    reg = Registry()
+    reg.counter("serve_quarantines_total").inc(3)
+    for i in range(3):
+        rec.record("fault", "fault.quarantine", {"rid": i})
+    path = rec.dump(reason="quarantine", registry=reg,
+                    provenance={"impl": "ref"})
+    assert path == f"{tmp_path}/FLIGHT_quarantine.json"
+    assert rec.dumps == [path]
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["flight"] is True and doc["reason"] == "quarantine"
+    assert doc["capacity"] == 8 and doc["recorded"] == 3
+    assert doc["dropped"] == 0
+    assert [e["name"] for e in doc["events"]] == ["fault.quarantine"] * 3
+    assert doc["provenance"] == {"impl": "ref"}
+    assert any(k.startswith("serve_quarantines_total")
+               for k in doc["metrics"])
+
+
+def test_trip_requires_autodump(tmp_path):
+    rec = FlightRecorder(dump_dir=str(tmp_path))   # autodump defaults off
+    rec.record("fault", "fault.quarantine", {"rid": 0})
+    assert rec.trip("quarantine") is None
+    assert list(tmp_path.iterdir()) == [] and rec.dumps == []
+
+
+def test_trip_cooldown_per_reason(tmp_path):
+    rec = FlightRecorder(dump_dir=str(tmp_path), autodump=True,
+                         min_dump_interval_s=3600.0)
+    rec.record("fault", "fault.quarantine", {"rid": 0})
+    first = rec.trip("quarantine")
+    assert first is not None
+    # a storm of same-reason trips inside the cooldown writes nothing new
+    assert all(rec.trip("quarantine") is None for _ in range(5))
+    # but a different reason has its own cooldown clock
+    assert rec.trip("shed_storm") is not None
+    assert len(rec.dumps) == 2
+
+
+def test_pressure_storm_threshold():
+    rec = FlightRecorder(storm_threshold=3, storm_window_s=60.0)
+    assert rec.pressure() is False
+    assert rec.pressure() is False
+    assert rec.pressure() is True          # third mark inside the window
+    # stays tripped while the marks remain in the window
+    assert rec.pressure() is True
+
+
+def test_process_default_recorder_swap():
+    prev = get_recorder()
+    try:
+        mine = FlightRecorder(capacity=4)
+        assert set_recorder(mine) is prev
+        assert get_recorder() is mine
+        # reset-to-fresh-default: enabled, autodump off, empty
+        fresh = set_recorder(None) and get_recorder()
+        assert fresh is not mine and fresh.enabled and not fresh.autodump
+    finally:
+        set_recorder(prev)
+
+
+# --------------------------------------------------------------------------
+# the always-on property: tracer off, lifecycle still lands in the ring
+# --------------------------------------------------------------------------
+def test_engine_feeds_ring_with_tracer_disabled():
+    cfg = get_config("llama7b-espim", reduced=True)
+    params = factory.init_params(cfg, jax.random.PRNGKey(0))
+    sparse = sparsify_model(cfg, params, 0.9, row_tile=32)
+    rec = FlightRecorder(capacity=512)     # autodump off: no files, ever
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=48, sparse=sparse,
+                      block_size=8, prefill_chunk=8, flight=rec)
+    rng = np.random.default_rng(0)
+    req = Request(rid=0, prompt=rng.integers(1, 400, 6).tolist(),
+                  max_new_tokens=4)
+    eng.submit(req)
+    steps = 0
+    while not req.done:
+        eng.step()
+        steps += 1
+        assert steps < 200
+    names = {e["name"] for e in rec.events()}
+    assert {"req.queued", "req.admit", "req.first_token", "req.terminal",
+            "prefill.chunk", "decode.step"} <= names, names
+    terminal = [e for e in rec.events() if e["name"] == "req.terminal"]
+    assert terminal[-1]["args"] == {"rid": 0, "state": "completed",
+                                    "n_out": 4}
+    assert rec.dumps == []                 # always-on never means files

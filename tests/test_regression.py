@@ -1,0 +1,207 @@
+"""Perf-regression sentinel (DESIGN.md §14): tolerance semantics in
+``repro.telemetry.regression`` and headline extraction / ledger / gate
+in ``benchmarks/bench_history.py`` — including a check of the real
+checked-in smoke artifacts against the real checked-in baselines (the
+same gate ``scripts/ci.sh`` runs)."""
+import json
+import pathlib
+import sys
+
+import pytest
+
+from repro.telemetry.regression import (MetricSpec, PerfRegressionError,
+                                        assert_no_regression, compare,
+                                        format_findings)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))           # benchmarks/ is a cwd package
+from benchmarks import bench_history    # noqa: E402
+
+
+# --------------------------------------------------------------------------
+# MetricSpec / compare semantics
+# --------------------------------------------------------------------------
+def test_metric_spec_validation():
+    with pytest.raises(ValueError):
+        MetricSpec("x", "bigger_is_nicer")
+    with pytest.raises(ValueError):
+        MetricSpec("x", "exact", rel_tol=-0.1)
+
+
+def test_exact_semantics():
+    specs = [MetricSpec("bytes", "exact")]
+    base = {"bytes": 4096.0}
+    assert compare(base, {"bytes": 4096.0}, specs)[0]["ok"]
+    f = compare(base, {"bytes": 4097.0}, specs)[0]
+    assert not f["ok"] and "drifted" in f["detail"]
+    # a tiny rel_tol admits float slop but nothing structural
+    specs = [MetricSpec("bytes", "exact", rel_tol=1e-6)]
+    assert compare(base, {"bytes": 4096.001}, specs)[0]["ok"]
+    assert not compare(base, {"bytes": 4100.0}, specs)[0]["ok"]
+
+
+def test_higher_better_uses_window_lo():
+    # baseline window [90, 110]: the floor is lo/(1+tol) = 30
+    specs = [MetricSpec("tok_s", "higher_better", rel_tol=2.0)]
+    base = {"tok_s": {"value": 100.0, "lo": 90.0, "hi": 110.0}}
+    assert compare(base, {"tok_s": 31.0}, specs)[0]["ok"]
+    f = compare(base, {"tok_s": 29.0}, specs)[0]
+    assert not f["ok"] and f["bound"] == pytest.approx(30.0)
+    assert "[90, 110]" in f["detail"]
+
+
+def test_lower_better_uses_window_hi():
+    # ceiling is hi*(1+tol) = 0.6
+    specs = [MetricSpec("ttft", "lower_better", rel_tol=2.0)]
+    base = {"ttft": {"value": 0.15, "lo": 0.1, "hi": 0.2}}
+    assert compare(base, {"ttft": 0.59}, specs)[0]["ok"]
+    f = compare(base, {"ttft": 0.61}, specs)[0]
+    assert not f["ok"] and f["bound"] == pytest.approx(0.6)
+
+
+def test_bare_number_baseline_is_degenerate_window():
+    specs = [MetricSpec("v", "higher_better", rel_tol=0.0)]
+    assert compare({"v": 5.0}, {"v": 5.0}, specs)[0]["ok"]
+    assert not compare({"v": 5.0}, {"v": 4.9}, specs)[0]["ok"]
+
+
+def test_spec_absent_from_baseline_is_skipped():
+    specs = [MetricSpec("new_metric", "exact")]
+    assert compare({}, {"new_metric": 1.0}, specs) == []
+
+
+def test_metric_missing_from_observed_fails():
+    specs = [MetricSpec("v", "exact")]
+    f = compare({"v": 1.0}, {}, specs)[0]
+    assert not f["ok"] and f["observed"] is None
+    assert "missing" in f["detail"]
+    assert "MISSING" in format_findings([f])
+
+
+def test_assert_no_regression_message_names_the_offender():
+    specs = [MetricSpec("single_stream.sparse.tok_s", "higher_better",
+                        rel_tol=2.0),
+             MetricSpec("pad_frac", "exact")]
+    base = {"single_stream.sparse.tok_s": {"value": 100.0, "lo": 90.0,
+                                           "hi": 110.0},
+            "pad_frac": 0.125}
+    ok = assert_no_regression(base, {"single_stream.sparse.tok_s": 95.0,
+                                     "pad_frac": 0.125}, specs,
+                              label="serve")
+    assert len(ok) == 2 and all(f["ok"] for f in ok)
+    with pytest.raises(PerfRegressionError) as ei:
+        assert_no_regression(base, {"single_stream.sparse.tok_s": 9.0,
+                                    "pad_frac": 0.125}, specs,
+                             label="serve")
+    msg = str(ei.value)
+    # the offender, its baseline window, and the observed value — the
+    # CI-log contract
+    assert "single_stream.sparse.tok_s" in msg
+    assert "[90, 110]" in msg and "9" in msg
+    assert "pad_frac" not in msg.split("out of band")[1]
+    assert ei.value.findings and len(ei.value.findings) == 2
+
+
+# --------------------------------------------------------------------------
+# bench_history: headline extraction, fingerprint, ledger, gate
+# --------------------------------------------------------------------------
+def _serve_doc():
+    return {
+        "bench": "serve", "smoke": True,
+        "provenance": {"backend": "cpu", "impl": "ref", "quant": "none",
+                       "attn": "dense", "pallas_interpret": False,
+                       "packs": "abc123"},
+        "scenarios": {"single_stream": {"modes": {"sparse": {
+            "throughput_tok_s": 100.0, "throughput_p50_tok_s": 90.0,
+            "bytes_per_token": 4096,
+            "ttft_s": {"p50": 0.1, "p95": 0.2},
+            "tpot_s": {"p50": 0.01, "p95": 0.02},
+        }}}},
+        "telemetry": {"pad_frac": 0.125},
+    }
+
+
+def test_headline_serve_extraction():
+    h = bench_history.headline_serve(_serve_doc())
+    assert h["single_stream.sparse.tok_s"] == {
+        "value": 100.0, "lo": 90.0, "hi": 100.0}
+    assert h["single_stream.sparse.ttft_p95_s"] == {
+        "value": 0.2, "lo": 0.1, "hi": 0.2}
+    assert h["single_stream.sparse.bytes_per_token"]["value"] == 4096.0
+    assert h["pad_frac"]["value"] == 0.125
+
+
+def test_headline_kernels_extraction():
+    doc = {"smoke_result": {
+        "fused_layer_us": 50.0, "fused_layer_p50_us": 45.0,
+        "fused_layer_p95_us": 60.0, "dense_layer_us": 200.0,
+        "max_rel_err": 1e-6,
+        "quant": {"int8": {"fused_layer_us": 40.0, "bytes_per_token": 2048,
+                           "bits_per_nnz": 9.0, "max_rel_err": 5e-3}},
+        "attn_sparse": {"sparse_step_us": 300.0, "bytes_per_token": 8192,
+                        "max_rel_err": 2e-6},
+    }, "summary": {"min_speedup_at_B_ge_8": 1.4}}
+    h = bench_history.headline_kernels(doc)
+    assert h["fused_layer_us"] == {"value": 50.0, "lo": 45.0, "hi": 60.0}
+    assert h["quant.int8.bits_per_nnz"]["value"] == 9.0
+    assert h["attn_sparse.sparse_step_us"]["value"] == 300.0
+    assert h["summary.min_speedup_at_B_ge_8"]["value"] == 1.4
+
+
+def test_fingerprint_tracks_provenance_not_results():
+    doc = _serve_doc()
+    fp = bench_history.fingerprint(doc)
+    assert fp == bench_history.fingerprint(doc)   # stable
+    faster = _serve_doc()
+    faster["scenarios"]["single_stream"]["modes"]["sparse"][
+        "throughput_tok_s"] = 999.0
+    assert bench_history.fingerprint(faster) == fp   # results don't key
+    other = _serve_doc()
+    other["provenance"]["quant"] = "int4"
+    assert bench_history.fingerprint(other) != fp    # provenance does
+
+
+def test_append_baseline_check_round_trip(tmp_path):
+    doc = _serve_doc()
+    hist = tmp_path / "H.jsonl"
+    line = bench_history.append(doc, str(hist))
+    assert line["bench"] == "serve" and line["smoke"]
+    on_disk = json.loads(hist.read_text())
+    assert on_disk["metrics"] == line["metrics"]
+    assert on_disk["fingerprint"] == bench_history.fingerprint(doc)
+
+    base = bench_history.make_baseline(doc)
+    # same doc against its own baseline always passes
+    findings = bench_history.check(doc, base)
+    assert findings and all(f["ok"] for f in findings)
+    # a 10x throughput cliff trips the windowed gate
+    bad = _serve_doc()
+    m = bad["scenarios"]["single_stream"]["modes"]["sparse"]
+    m["throughput_tok_s"] /= 10.0
+    m["throughput_p50_tok_s"] /= 10.0
+    with pytest.raises(PerfRegressionError) as ei:
+        bench_history.check(bad, base)
+    assert "single_stream.sparse.tok_s" in str(ei.value)
+    # an exact invariant drift trips too, regardless of size
+    bad2 = _serve_doc()
+    bad2["scenarios"]["single_stream"]["modes"]["sparse"][
+        "bytes_per_token"] = 4095
+    with pytest.raises(PerfRegressionError):
+        bench_history.check(bad2, base)
+
+
+@pytest.mark.parametrize("artifact,baseline", [
+    ("BENCH_serve_smoke.json", "benchmarks/baselines/serve_smoke.json"),
+    ("BENCH_kernels_smoke.json", "benchmarks/baselines/kernels_smoke.json"),
+])
+def test_checked_in_smokes_pass_their_baselines(artifact, baseline):
+    """The artifacts and baselines committed together must agree — the
+    exact gate ``scripts/ci.sh`` runs."""
+    apath, bpath = REPO / artifact, REPO / baseline
+    if not apath.exists() or not bpath.exists():
+        pytest.skip(f"{artifact} not present in this checkout")
+    doc = json.loads(apath.read_text())
+    base = json.loads(bpath.read_text())
+    assert base["baseline"] is True
+    findings = bench_history.check(doc, base)
+    assert findings and all(f["ok"] for f in findings)

@@ -274,6 +274,43 @@ def test_prometheus_golden():
     assert r.to_prometheus() == golden
 
 
+def test_snapshot_golden_and_deterministic():
+    """``Registry.snapshot()`` is the substrate the flight recorder dumps
+    and the bench docs embed: its key ORDER and value shapes are pinned
+    here so two registries fed the same instruments — in any insertion
+    order — serialize identically (diffable dumps, stable baselines)."""
+    def build(order):
+        r = tm.Registry({"model": "m"})
+        ops = {
+            "a": lambda: r.counter("req_total", state="ok").inc(2),
+            "b": lambda: r.counter("req_total", state="shed").inc(),
+            "c": lambda: r.gauge("occ").set(0.5),
+            "d": lambda: [r.histogram("lat_s", buckets=(0.1, 1.0))
+                          .observe(v) for v in (0.05, 0.5)],
+        }
+        for k in order:
+            ops[k]()
+        return r.snapshot()
+
+    snap = build("abcd")
+    golden_keys = [
+        'lat_s{model="m"}',
+        'occ{model="m"}',
+        'req_total{model="m",state="ok"}',
+        'req_total{model="m",state="shed"}',
+    ]
+    assert list(snap) == golden_keys         # sorted names, sorted labels
+    assert snap['occ{model="m"}'] == 0.5
+    assert snap['req_total{model="m",state="ok"}'] == 2
+    hist = snap['lat_s{model="m"}']
+    assert hist["count"] == 2 and hist["sum"] == pytest.approx(0.55)
+    assert {"min", "max", "mean", "p50", "p95"} <= set(hist)
+    # insertion order never leaks into the serialization
+    for order in ("dcba", "bdac"):
+        assert json.dumps(build(order), sort_keys=False) == \
+            json.dumps(snap, sort_keys=False)
+
+
 def test_validate_snapshot_sparse_gate():
     snap = {f"{name}{{x=\"1\"}}": 0 for name in tm.REQUIRED_SERVE_METRICS}
     tm.validate_snapshot(snap)

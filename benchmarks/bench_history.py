@@ -99,7 +99,7 @@ def fingerprint(doc: dict) -> str:
     prov = doc.get("provenance") or {}
     subset = {k: prov.get(k)
               for k in ("backend", "impl", "quant", "attn",
-                        "pallas_interpret", "packs")}
+                        "pallas_interpret", "packs", "schedule")}
     subset["bench"] = doc.get("bench", doc.get("schema"))
     subset["smoke"] = bool(doc.get("smoke"))
     blob = json.dumps(subset, sort_keys=True)

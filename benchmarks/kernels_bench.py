@@ -262,6 +262,11 @@ def _bench_batched_decode(rows: list[str], report: dict) -> None:
                 "speedup_vs_prev": round(prev["us"] / best["us"], 3),
                 "bucketed_configs": detail,
                 "quant": quant_rows,
+                # which schedule won this row: an exhaustive chunk sweep,
+                # not the autotuner (the "autotune" section holds those)
+                "schedule": {"source": "sweep", "tuned": False,
+                             "chunk_cols": best["chunk_cols"],
+                             "epilogue": None},
             }
             report["batched_decode"].append(entry)
             rows.append(csv_row(
@@ -271,6 +276,78 @@ def _bench_batched_decode(rows: list[str], report: dict) -> None:
                 f"speedup_vs_prev={entry['speedup_vs_prev']:.2f}x;"
                 f"pad_frac={best['pad_frac']:.3f}"
                 f"(was {prev['pad_frac']:.3f})"))
+
+
+def _bench_autotune(rows: list[str], report: dict) -> None:
+    """Per-shape schedule autotuning (PR 10): search once per (shape,
+    quant) cell, assert the warm re-tune is a pure fingerprint-keyed
+    cache hit (zero candidate benchmarks), and time the tuned schedule
+    against the hand-picked default on the same launch path."""
+    from repro.autotune import (PlanCache, autotune_pack,
+                                reset_search_stats, search_stats)
+    from repro.quant import quantize_pack
+
+    rng = np.random.default_rng(2)
+    cache = PlanCache()
+    b = DECODE_BATCH[0]
+    for name, r, c, s in DECODE_SHAPES:
+        w = magnitude_prune(rng.standard_normal((r, c)).astype(np.float32), s)
+        pack = pack_ell(w)
+        x = jnp.asarray(rng.standard_normal((c, b)), jnp.float32)
+        for quant in (None, "int4"):
+            reset_search_stats()
+            plan = autotune_pack(pack, b=b, quant=quant, cache=cache,
+                                 max_candidates=3)
+            searched = search_stats["benchmarks"]
+            plan2 = autotune_pack(pack, b=b, quant=quant, cache=cache,
+                                  max_candidates=3)
+            cache_hit = (plan2.source == "cache"
+                         and search_stats["benchmarks"] == searched)
+
+            def launch_us(chunk_cols, schedule):
+                cp = chunk_pack(pack, chunk_cols)
+                cols = jnp.asarray(cp.cols, jnp.int32)
+                if quant is None:
+                    vals = jnp.asarray(cp.values)
+
+                    def fn():
+                        return ops.espim_spmv_batched(
+                            vals, cols, x, chunk_cols=cp.chunk_cols,
+                            impl="ref", schedule=schedule)
+                else:
+                    plane = quantize_pack(cp, default_spec(quant))
+                    codes = jnp.asarray(plane.device_codes())
+                    scales = jnp.asarray(plane.scales)
+
+                    def fn():
+                        return ops.espim_spmv_batched_quant(
+                            codes, cols, scales, x,
+                            chunk_cols=cp.chunk_cols,
+                            group_rows=plane.group_rows,
+                            impl="ref", schedule=schedule)
+                qn = quant or "fp"
+                return _time(fn, iters=3,
+                             label=f"autotune_{qn}/{name}/B{b}").best_us
+
+            default_us = launch_us(ops.DEFAULT_CHUNK_COLS, None)
+            tuned_us = launch_us(plan.schedule.chunk_cols, plan.schedule)
+            entry = {
+                "shape": name, "rows": r, "cols": c, "sparsity": s, "B": b,
+                "quant": quant or "fp",
+                "schedule": plan.to_provenance(),
+                "cache_hit": cache_hit,
+                "searched_benchmarks": searched,
+                "default_us": round(default_us, 1),
+                "tuned_us": round(tuned_us, 1),
+                "speedup_vs_default": round(
+                    default_us / max(tuned_us, 1e-9), 3),
+            }
+            report["autotune"].append(entry)
+            rows.append(csv_row(
+                f"kernels/autotune/{name}_{quant or 'fp'}_B{b}", tuned_us,
+                f"default_us={default_us:.1f};"
+                f"speedup={entry['speedup_vs_default']:.2f}x;"
+                f"cc={plan.schedule.chunk_cols};cache_hit={cache_hit}"))
 
 
 def _smoke(report: dict) -> None:
@@ -399,6 +476,11 @@ def check_schema(report: dict, smoke: bool) -> None:
         assert (e["quant"]["int4"]["bytes_per_mv"]
                 < e["quant"]["int8"]["bytes_per_mv"]
                 < e["quant"]["fp"]["bytes_per_mv"])
+        assert "schedule" in e, "batched_decode.schedule missing"
+    assert report["autotune"], "autotune section empty on a full run"
+    for e in report["autotune"]:
+        assert e["cache_hit"], f"autotune.{e['shape']}: warm re-tune missed"
+        assert e["schedule"]["tuned"] and e["schedule"]["source"] == "search"
 
 
 def run(smoke: bool = False) -> list[str]:
@@ -407,16 +489,23 @@ def run(smoke: bool = False) -> list[str]:
     report = {
         "schema": "espim-kernels-bench/v3",
         "backend": jax.default_backend(),
-        "provenance": ops.provenance(impl="ref", quant="sweep"),
+        # the smoke's fused decode layer and the serving engine both run
+        # the act(gate)·up epilogue fused into the gate+up launch (PR 10)
+        "provenance": ops.provenance(
+            impl="ref", quant="sweep",
+            schedule={"source": "default", "tuned": False,
+                      "epilogue": "glu"}),
         "smoke": smoke,
         "unbatched": [],
         "batched_decode": [],
+        "autotune": [],
     }
     if smoke:
         _smoke(report)
     else:
         _bench_unbatched(rows, report)
         _bench_batched_decode(rows, report)
+        _bench_autotune(rows, report)
         by_case = {f"{e['shape']}/B{e['B']}": e
                    for e in report["batched_decode"] if e["B"] >= 8}
         report["summary"] = {

@@ -95,6 +95,11 @@ QUANT_MODES = ("int8", "int4")
 ATTN_MODES = (("", "mlp", "dense"), ("_attn", "all", "sparse"))
 SPARSE_MODES = tuple(f"sparse{a}{q}" for a, _, _ in ATTN_MODES
                      for q in ("", "_int8", "_int4"))
+# the schedule every serving mode row runs under (PR 10): the default
+# chunking — deterministic pack bytes for the exact sentinel specs —
+# with the act(gate)·up epilogue fused into the gate+up SpMV launch
+# (bit-identical to the unfused reference; tests/test_autotune.py)
+SERVE_SCHEDULE = {"source": "default", "tuned": False, "epilogue": "glu"}
 
 
 def make_trace(rng, n_requests, prompt_lens, out_lens, mean_gap_steps):
@@ -322,6 +327,68 @@ def bench_overload(cfg, params, *, smoke: bool, seed: int,
     return {"pack": sparse["fingerprint"], "runs": runs}
 
 
+def bench_autotune(cfg, params, *, b: int = 1,
+                   max_candidates: int = 3) -> dict:
+    """Schedule autotuning on the serving model's own layer-0 gate
+    matrix (magnitude-pruned at the serving sparsity): one measured
+    search, one warm re-tune that must be a pure cache hit (zero
+    candidate benchmarks — the warm-``pack_to_device`` contract), and
+    the tuned schedule timed against the hand-picked default at the
+    single-stream batch width."""
+    import jax.numpy as jnp
+
+    from repro.autotune import (PlanCache, autotune_pack,
+                                reset_search_stats, search_stats)
+    from repro.core.pruning import magnitude_prune
+    from repro.core.sparse_format import chunk_pack, pack_ell
+    from repro.telemetry.profile import time_launch
+
+    w = magnitude_prune(
+        np.asarray(params["layers"]["mlp"]["w_gate"][0], np.float32).T,
+        SPARSITY)
+    pack = pack_ell(w)
+    cache = PlanCache()
+    reset_search_stats()
+    plan = autotune_pack(pack, b=b, cache=cache,
+                         max_candidates=max_candidates)
+    searched_benchmarks = search_stats["benchmarks"]
+    plan2 = autotune_pack(pack, b=b, cache=cache,
+                          max_candidates=max_candidates)
+    cached_benchmarks = search_stats["benchmarks"] - searched_benchmarks
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((pack.n_cols, b)), jnp.float32)
+
+    def best_us(chunk_cols, schedule):
+        cp = chunk_pack(pack, chunk_cols)
+        vals = jnp.asarray(cp.values)
+        cols = jnp.asarray(cp.cols, jnp.int32)
+
+        def fn():
+            return ops.espim_spmv_batched(vals, cols, x,
+                                          chunk_cols=cp.chunk_cols,
+                                          impl="ref", schedule=schedule)
+        return time_launch(fn, iters=3, warmup=1,
+                           label=f"autotune.serve.{chunk_cols}").best_us
+
+    default_us = best_us(ops.DEFAULT_CHUNK_COLS, None)
+    tuned_us = best_us(plan.schedule.chunk_cols, plan.schedule)
+    reset_search_stats()
+    return {
+        "shape": list(w.shape),
+        "sparsity": SPARSITY,
+        "b": b,
+        "plan": plan.to_provenance(),
+        "cached_plan": plan2.to_provenance(),
+        "cache_hit": plan2.source == "cache",
+        "searched_benchmarks": searched_benchmarks,
+        "cached_benchmarks": cached_benchmarks,
+        "default_us": round(default_us, 1),
+        "tuned_us": round(tuned_us, 1),
+        "speedup_vs_default": round(default_us / max(tuned_us, 1e-9), 3),
+    }
+
+
 def bench_crash(cfg, params, *, smoke: bool, seed: int,
                 tracer=None) -> dict:
     """Kill/restore drill at bench scale: one random kill point per
@@ -351,6 +418,7 @@ def check_schema(doc: dict) -> None:
             assert m["attn"] == ("sparse" if "_attn" in mode else "dense")
             if mode != "dense":
                 assert "bytes_per_token" in m and "bits_per_nnz" in m, mode
+                assert m["schedule"]["epilogue"] == "glu", mode
         # quantization must shrink the weight bytes a decode token streams
         for a in ("", "_attn"):
             assert (scen["modes"][f"sparse{a}_int4"]["bytes_per_token"]
@@ -371,6 +439,7 @@ def check_schema(doc: dict) -> None:
     assert "provenance" in doc and "quant" in doc["provenance"]
     assert doc["provenance"]["attn"] == "sweep"
     assert doc["provenance"]["packs"], "pack fingerprints missing"
+    assert doc["provenance"]["schedule"]["epilogue"] == "glu"
     if "fault_drill" in doc:
         assert set(doc["fault_drill"]["faults"]), "empty fault drill"
     if "overload" in doc:
@@ -554,6 +623,10 @@ def main():
             res[label]["quant"] = sparses[label]["quant"]
             res[label]["attn"] = ("sparse" if sparses[label]["attn_sparse"]
                                   else "dense")
+            # which kernel schedule served this row: the engine runs the
+            # hand-picked default chunking (deterministic bytes metrics)
+            # with the act(gate)·up epilogue fused into the gate+up launch
+            res[label]["schedule"] = dict(SERVE_SCHEDULE)
             res[label]["bytes_per_token"] = st["bytes_per_token"]
             res[label]["packed_bytes_per_token"] = st[
                 "packed_bytes_per_token"]
@@ -621,7 +694,8 @@ def main():
         "provenance": ops.provenance(
             impl="ref", quant=cfg.espim_quant, attn="sweep",
             packs={label: sp["fingerprint"]
-                   for label, sp in sparses.items() if sp is not None}),
+                   for label, sp in sparses.items() if sp is not None},
+            schedule=SERVE_SCHEDULE),
         "scenarios": {"single_stream": single, "batched": batched},
         # headline fields = the single_stream (paper B=1 MV) scenario;
         # "modes" kept as its alias for cross-PR continuity
@@ -653,6 +727,13 @@ def main():
                                          seed=args.seed)
         doc["crash_drill"] = bench_crash(cfg, params, smoke=True,
                                          seed=args.seed)
+        # schedule autotuning on the model's own gate matrix: search once,
+        # assert the warm re-tune is a pure cache hit, time tuned vs
+        # default (PR 10)
+        doc["autotune"] = bench_autotune(cfg, params)
+        assert doc["autotune"]["cache_hit"], "warm re-tune missed the cache"
+        assert doc["autotune"]["cached_benchmarks"] == 0, \
+            "cache hit ran candidate benchmarks"
     doc["flight_dumps"] = flight.dumps
     check_schema(doc)
     with open(args.out, "w") as f:

@@ -57,6 +57,72 @@ PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" ESPIM_IMPL=ref \
     --out BENCH_overload_smoke.json
 test -f BENCH_overload_smoke.json && echo "BENCH_overload_smoke.json written"
 
+echo "== autotune smoke: budgeted search, warm cache hit, fused-epilogue parity =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" ESPIM_IMPL=ref python - <<'EOF'
+import os, tempfile
+
+import jax, numpy as np, jax.numpy as jnp
+
+from repro.autotune import PlanCache, autotune_pack, reset_search_stats, \
+    search_stats
+from repro.core.pruning import magnitude_prune
+from repro.core.sparse_format import chunk_pack, pack_ell
+from repro.kernels import ops
+from repro.models.layers import act_fn
+
+# budgeted search (<= 2 candidate benchmarks per shape), persisted cache
+rng = np.random.default_rng(0)
+cache = PlanCache(os.path.join(tempfile.mkdtemp(), "plans.json"))
+plans = {}
+for name, r, c in (("wq", 256, 256), ("w2", 128, 512)):
+    w = magnitude_prune(rng.standard_normal((r, c)).astype(np.float32), 0.9)
+    reset_search_stats()
+    plans[name] = autotune_pack(pack_ell(w), b=4, cache=cache,
+                                max_candidates=2, iters=1, warmup=0)
+    assert plans[name].source == "search"
+    assert search_stats["benchmarks"] <= 2, search_stats
+# second invocation must be 100% cache hit: zero candidate benchmarks —
+# rebuild the identical packs from the same seed (the cache key is
+# content-addressed, so same bytes -> same key)
+reset_search_stats()
+rng = np.random.default_rng(0)
+for name, r, c in (("wq", 256, 256), ("w2", 128, 512)):
+    w = magnitude_prune(rng.standard_normal((r, c)).astype(np.float32), 0.9)
+    p = autotune_pack(pack_ell(w), b=4, cache=cache, max_candidates=2,
+                      iters=1, warmup=0)
+    assert p.source == "cache", (name, p.source)
+    assert p.schedule == plans[name].schedule
+assert search_stats["benchmarks"] == 0, \
+    f"warm cache ran {search_stats['benchmarks']} benchmarks"
+
+# fused GLU epilogue bit-identical to the unfused reference (fp + int4)
+w = magnitude_prune(rng.standard_normal((128, 256)).astype(np.float32), 0.9)
+cp = chunk_pack(pack_ell(w), 128)
+v, cl = jnp.asarray(cp.values), jnp.asarray(cp.cols, jnp.int32)
+x = jnp.asarray(rng.standard_normal((256, 4)), jnp.float32)
+acc = ops.espim_spmv_batched(v, cl, x, chunk_cols=128, impl="ref")
+want = act_fn("silu")(acc[:64]) * acc[64:]
+got = ops.espim_spmv_batched(v, cl, x, chunk_cols=128, impl="ref",
+                             epilogue="glu")
+assert (np.asarray(got) == np.asarray(want)).all(), "fp GLU fusion diverged"
+from repro.quant import default_spec, quantize_pack
+plane = quantize_pack(cp, default_spec("int4"))
+codes = jnp.asarray(plane.device_codes())
+srow = jnp.asarray(plane.row_scales().astype(np.float32))
+acc_q = ops.espim_spmv_batched_quant(codes, cl, None, x, chunk_cols=128,
+                                     group_rows=plane.group_rows,
+                                     impl="ref") * srow[:, None]
+want_q = act_fn("silu")(acc_q[:64]) * acc_q[64:]
+got_q = ops.espim_spmv_batched_quant(codes, cl, None, x, chunk_cols=128,
+                                     group_rows=plane.group_rows, impl="ref",
+                                     epilogue="glu", srow=srow)
+assert (np.asarray(got_q) == np.asarray(want_q)).all(), \
+    "int4 GLU fusion diverged"
+print("autotune smoke ok: budgeted search (<=2 benches/shape), second "
+      "invocation 100% cache hit (0 benchmarks), GLU epilogue bit-exact "
+      "fp+int4")
+EOF
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 

@@ -1,0 +1,38 @@
+"""Per-shape SDDS schedule autotuning (DESIGN.md §15).
+
+ESPIM's bet is that the sparsity is static and known offline, so every
+scheduling decision can be made before inference.  The TPU adaptation left
+four kernel-schedule knobs as hand-picked constants (chunk width, row/width
+block sizes, gather formulation); SparseP shows the partitioning choice
+dominates PIM SpMV performance across shapes and sparsities.  This package
+closes that gap:
+
+* ``core.sdds.enumerate_schedules`` is the candidate space, filtered by
+  the kernels' own legality constraints;
+* a transparent cost model (VMEM footprint, pad fraction, launch count)
+  ranks the candidates;
+* the top-k are benchmarked for real with ``telemetry.profile.time_launch``
+  on the actual uploaded planes;
+* the winner persists in a JSON plan cache keyed by the pack's
+  plan-independent integrity fingerprint (``core.integrity``) plus the
+  launch context (batch, quant mode, impl, backend) — retune happens the
+  moment the pack bytes change, and a warm cache makes
+  ``ops.pack_to_device`` skip the search entirely (asserted via
+  ``search_stats`` in the tests and the ci.sh smoke).
+"""
+from repro.autotune.cache import (PlanCache, default_cache, pack_cache_key,
+                                  reset_default_cache)
+from repro.autotune.tuner import (TunedPlan, autotune_pack, reset_search_stats,
+                                  schedule_cost, search_stats)
+
+__all__ = [
+    "PlanCache",
+    "default_cache",
+    "reset_default_cache",
+    "pack_cache_key",
+    "TunedPlan",
+    "autotune_pack",
+    "schedule_cost",
+    "search_stats",
+    "reset_search_stats",
+]

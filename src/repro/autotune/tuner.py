@@ -1,0 +1,241 @@
+"""Candidate ranking + measured search for SDDS kernel schedules.
+
+The pipeline (DESIGN.md §15): enumerate the legal schedule space for the
+pack's shape (``core.sdds.enumerate_schedules``), deduplicate candidates
+that lower identically for the chosen impl, rank all of them with the
+cost model below, benchmark only the ``max_candidates`` cheapest with
+``telemetry.profile.time_launch`` on the real uploaded planes, and keep
+the measured winner.
+
+Cost model — three transparent terms, no fitted constants:
+
+* **traffic**: bytes the launch actually moves — value plane (narrowed by
+  the quant mode), index plane, one x slab per chunk, the accumulator —
+  inflated by the candidate's chunk pad fraction (pad slots move bytes
+  and multiply zeros);
+* **launch count**: the 3-D grid size (row tiles x chunks x l-blocks),
+  charged a fixed per-step overhead equivalent (``LAUNCH_COST_BYTES``) —
+  the per-token launch overhead PR 3 measured is linear in grid steps;
+* **VMEM pressure**: candidates whose per-step working set (value+index
+  blocks, the x slab, the accumulator) exceeds ``VMEM_BUDGET_BYTES`` are
+  charged quadratically — they thrash the very residency bound
+  ``chunk_cols`` exists to enforce.
+
+``search_stats`` counts candidate benchmarks performed; the warm-cache
+contract (second ``pack_to_device`` of an identical pack performs ZERO
+candidate benchmarks) is asserted against it in tests and ci.sh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.autotune.cache import PlanCache, pack_cache_key
+from repro.core.sdds import (DEFAULT_SCHEDULE, KernelSchedule,
+                             enumerate_schedules)
+from repro.core.sparse_format import ELLPack, chunk_pack
+from repro.telemetry.profile import time_launch
+
+__all__ = ["TunedPlan", "autotune_pack", "schedule_cost", "search_stats",
+           "reset_search_stats", "LAUNCH_COST_BYTES", "VMEM_BUDGET_BYTES"]
+
+LAUNCH_COST_BYTES = 4096          # fixed per-grid-step overhead equivalent
+VMEM_BUDGET_BYTES = 8 << 20       # per-step working-set budget
+
+search_stats = {"searches": 0, "benchmarks": 0, "hits": 0, "misses": 0}
+
+
+def reset_search_stats() -> None:
+    for k in search_stats:
+        search_stats[k] = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedPlan:
+    """The autotuner's verdict for one (pack, launch context).
+
+    ``source`` records how the plan was obtained — ``"search"`` (measured
+    now), ``"cache"`` (fingerprint-keyed hit, zero benchmarks) or
+    ``"default"`` (tuning skipped / nothing legal beyond the default) —
+    and rides into ``Provenance.schedule`` so bench rows distinguish
+    tuned runs.
+    """
+
+    schedule: KernelSchedule
+    source: str                    # "search" | "cache" | "default"
+    key: str
+    best_us: float | None = None
+    candidates: int = 0            # benchmarks performed for this plan
+
+    def to_provenance(self) -> dict:
+        return {
+            "source": self.source,
+            "tuned": self.source != "default",
+            "cache_key": self.key,
+            "chunk_cols": self.schedule.chunk_cols,
+            "block_r": self.schedule.block_r,
+            "block_l": self.schedule.block_l,
+            "gather": self.schedule.gather,
+            "best_us": self.best_us,
+            "candidates": self.candidates,
+        }
+
+
+def _value_bytes(quant) -> float:
+    bits = getattr(quant, "bits", None)
+    if bits is None and isinstance(quant, str):
+        bits = {"int8": 8, "int4": 4}.get(quant)
+    return {8: 1.0, 4: 0.5}.get(bits, 4.0)
+
+
+def schedule_cost(s: KernelSchedule, *, r_pad: int, n_chunks: int,
+                  chunk_width: int, b: int, quant=None,
+                  pad_frac: float = 0.0) -> float:
+    """Rank-only cost in byte equivalents (lower is better)."""
+    eff_br = math.gcd(r_pad, s.block_r)
+    eff_bl = min(s.block_l, max(8, chunk_width))
+    lc_pad = -(-chunk_width // eff_bl) * eff_bl
+    grid = (r_pad // eff_br) * n_chunks * (lc_pad // eff_bl)
+    vb = _value_bytes(quant)
+    cells = r_pad * n_chunks * lc_pad
+    traffic = (cells * (vb + 4.0)                 # value + index planes
+               + n_chunks * s.chunk_cols * b * 4.0  # one x slab per chunk
+               + r_pad * b * 4.0)                 # accumulator
+    traffic *= 1.0 + pad_frac
+    vmem = (eff_br * eff_bl * (vb + 4.0)
+            + s.chunk_cols * b * 4.0 + eff_br * b * 4.0)
+    over = max(0.0, vmem / VMEM_BUDGET_BYTES - 1.0)
+    return traffic + LAUNCH_COST_BYTES * grid + traffic * over * over
+
+
+def _quant_name(quant) -> str | None:
+    if quant is None:
+        return None
+    if isinstance(quant, str):
+        return quant
+    return {8: "int8", 4: "int4"}.get(getattr(quant, "bits", None))
+
+
+def _chunked_for(pack, cc: int, chunk_cache: dict):
+    if cc not in chunk_cache:
+        chunk_cache[cc] = (chunk_pack(pack, cc)
+                           if isinstance(pack, ELLPack) else pack)
+    return chunk_cache[cc]
+
+
+def _launch_fn(cp, x, s: KernelSchedule, impl: str, quant):
+    """The benchmarked closure: the SAME ops-layer call the serving path
+    makes, with the candidate schedule applied."""
+    from repro.kernels import ops
+    cols = jnp.asarray(cp.cols, jnp.int32)
+    if quant is None:
+        vals = jnp.asarray(cp.values)
+
+        def fn():
+            return ops.espim_spmv_batched(
+                vals, cols, x, chunk_cols=cp.chunk_cols, impl=impl,
+                schedule=s)
+    else:
+        from repro.quant import QuantSpec, default_spec, quantize_pack
+        spec = quant if isinstance(quant, QuantSpec) else default_spec(quant)
+        plane = cp.qplane
+        if plane is None or plane.spec != spec:
+            plane = quantize_pack(cp, spec)
+        codes = jnp.asarray(plane.device_codes())
+        scales = jnp.asarray(plane.scales)
+        group_rows = plane.group_rows
+
+        def fn():
+            return ops.espim_spmv_batched_quant(
+                codes, cols, scales, x, chunk_cols=cp.chunk_cols,
+                group_rows=group_rows, impl=impl, schedule=s)
+    return fn
+
+
+def autotune_pack(pack, *, b: int = 8, quant=None, impl: str | None = None,
+                  cache: PlanCache | None = None,
+                  max_candidates: int = 3, iters: int = 3,
+                  warmup: int = 1) -> TunedPlan:
+    """Pick a kernel schedule for ``pack`` under the given launch context.
+
+    ``pack`` is a plain ``ELLPack`` (full search: the chunk pass is part
+    of the schedule) or an ``ELLChunkedPack`` (``chunk_cols`` pinned by
+    the artifact; block/gather knobs only).  ``cache`` short-circuits the
+    whole search on a fingerprint hit.  ``max_candidates`` bounds how many
+    cost-ranked candidates are actually benchmarked (the ci.sh smoke runs
+    with 2).
+    """
+    from repro.kernels import ops
+    impl = ops._resolve(impl)
+    backend = jax.default_backend()
+    qname = _quant_name(quant)
+    key = pack_cache_key(pack, b=b, quant=qname, impl=impl, backend=backend)
+
+    if cache is not None:
+        entry = cache.get(key)
+        if entry is not None:
+            search_stats["hits"] += 1
+            return TunedPlan(schedule=KernelSchedule(**entry["schedule"]),
+                             source="cache", key=key,
+                             best_us=entry.get("best_us"),
+                             candidates=0)
+        search_stats["misses"] += 1
+
+    search_stats["searches"] += 1
+    r_pad = pack.r_pad
+    n_cols = pack.n_cols
+    if isinstance(pack, ELLPack):
+        cands = enumerate_schedules(r_pad=r_pad, n_cols=n_cols, quant=qname)
+    else:
+        cands = [dataclasses.replace(s, chunk_cols=pack.chunk_cols)
+                 for s in enumerate_schedules(
+                     r_pad=r_pad, n_cols=n_cols, quant=qname,
+                     chunk_cols_options=(pack.chunk_cols,))
+                 if s.chunk_cols == pack.chunk_cols]
+    seen: set = set()
+    deduped = []
+    for s in cands:
+        ek = s.effective_key(impl)
+        if ek not in seen:
+            seen.add(ek)
+            deduped.append(s)
+    if not deduped:
+        return TunedPlan(schedule=DEFAULT_SCHEDULE, source="default",
+                         key=key)
+
+    chunk_cache: dict = {}
+    ranked = []
+    for s in deduped:
+        cp = _chunked_for(pack, s.chunk_cols, chunk_cache)
+        ranked.append((schedule_cost(
+            s, r_pad=r_pad, n_chunks=cp.n_chunks,
+            chunk_width=cp.chunk_width, b=b, quant=quant,
+            pad_frac=cp.plan.chunk_pad_frac), s))
+    ranked.sort(key=lambda t: t[0])
+    top = [s for _, s in ranked[:max(1, max_candidates)]]
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n_cols, b)), jnp.float32)
+    best = None
+    for s in top:
+        cp = _chunked_for(pack, s.chunk_cols, chunk_cache)
+        fn = _launch_fn(cp, x, s, impl, quant)
+        t = time_launch(fn, iters=iters, warmup=warmup,
+                        label=f"autotune.{s.chunk_cols}.{s.block_r}."
+                              f"{s.block_l}.{s.gather}")
+        search_stats["benchmarks"] += 1
+        if best is None or t.best_us < best[0]:
+            best = (t.best_us, s)
+
+    plan = TunedPlan(schedule=best[1], source="search", key=key,
+                     best_us=best[0], candidates=len(top))
+    if cache is not None:
+        cache.put(key, {"schedule": dataclasses.asdict(plan.schedule),
+                        "best_us": plan.best_us,
+                        "candidates": plan.candidates,
+                        "created_by": "search"})
+    return plan

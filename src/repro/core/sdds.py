@@ -38,6 +38,7 @@ executes the dataflow and checks it against a numpy dot product.
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 
 import numpy as np
@@ -58,6 +59,10 @@ __all__ = [
     "PackGroupSpec",
     "validate_group_specs",
     "decoder_layer_groups",
+    "KernelSchedule",
+    "DEFAULT_SCHEDULE",
+    "schedule_legal",
+    "enumerate_schedules",
 ]
 
 
@@ -564,6 +569,103 @@ def decoder_layer_groups(gated: bool = True, attn: bool = True,
                           compose_with="gateup", output="take"),
         ]
     return tuple(specs)
+
+
+# --------------------------------------------------------------------------
+# Kernel schedule space (the autotuner's candidate set — DESIGN.md §15)
+#
+# SDDS's premise is that every scheduling decision can be made offline
+# because the sparsity is static.  The TPU adaptation has four such
+# decisions left as hand-picked constants: the column-chunk width (x-slab
+# VMEM residency and the chunk pass itself), the kernel's row/width block
+# sizes, and the gather formulation.  ``KernelSchedule`` names one point in
+# that space; ``enumerate_schedules`` + ``schedule_legal`` produce the
+# candidate set the autotuner ranks and benchmarks.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class KernelSchedule:
+    """One candidate SDDS kernel schedule for the chunked-ELL SpMV.
+
+    ``chunk_cols`` is the offline chunk pass's slab width (re-chunking the
+    pack is part of applying the schedule); ``block_r``/``block_l`` are the
+    Pallas grid block sizes; ``gather`` picks the vectorized block-wide
+    gather or the serial per-l loop.  On the ``ref`` lowering only
+    ``chunk_cols`` is live — the rest ride along so one plan record covers
+    both backends.
+    """
+
+    chunk_cols: int = 512
+    block_r: int = 128
+    block_l: int = 128
+    gather: str = "block"
+
+    def fingerprint(self) -> str:
+        return plan_fingerprint(self)
+
+    def effective_key(self, impl: str) -> tuple:
+        """The knobs that actually change the launched computation for
+        ``impl`` — candidates identical under this key are deduplicated
+        before benchmarking (the ref lowering ignores the block sizes)."""
+        if impl == "ref":
+            return ("ref", self.chunk_cols)
+        return ("pallas", self.chunk_cols, self.block_r, self.block_l,
+                self.gather)
+
+
+DEFAULT_SCHEDULE = KernelSchedule()
+
+
+def schedule_legal(s: KernelSchedule, *, r_pad: int, n_cols: int,
+                   quant: str | None = None) -> bool:
+    """Candidate legality for a pack of ``r_pad`` packed rows over
+    ``n_cols`` input columns, mirroring the kernels' own constraints:
+
+    * the row block must shrink to a sublane-aligned divisor of R_pad
+      (``_pad_inputs`` raises below gcd 8);
+    * ``chunk_cols`` must be positive and is capped at ``n_cols`` by the
+      chunk pass, so wider candidates collapse onto the single-chunk one;
+    * nibble-packed int4 planes need an even ``block_l`` so nibble pairs
+      never straddle blocks (the kernel rounds up — an odd candidate is
+      just a duplicate of its even neighbour, so reject it);
+    * ``gather`` must name a kernel formulation.
+    """
+    if s.chunk_cols <= 0 or s.block_r <= 0 or s.block_l <= 0:
+        return False
+    if s.gather not in ("block", "loop"):
+        return False
+    if math.gcd(r_pad, s.block_r) < 8:
+        return False
+    if s.chunk_cols > max(1, n_cols):
+        return False        # collapses onto the chunk_cols == n_cols point
+    if quant == "int4" and s.block_l % 2:
+        return False
+    return True
+
+
+def enumerate_schedules(*, r_pad: int, n_cols: int, quant: str | None = None,
+                        chunk_cols_options=(256, 512, 1024),
+                        block_r_options=(64, 128),
+                        block_l_options=(64, 128, 256),
+                        gathers=("block", "loop")) -> list:
+    """All legal candidates over the knob grid, default schedule first.
+    ``chunk_cols == n_cols`` (single chunk) is always included — on small
+    matrices it is often the only legal slab width."""
+    ccs = sorted({min(cc, max(1, n_cols))
+                  for cc in (*chunk_cols_options, n_cols)})
+    out = []
+    for cc in ccs:
+        for br in block_r_options:
+            for bl in block_l_options:
+                for g in gathers:
+                    s = KernelSchedule(chunk_cols=cc, block_r=br,
+                                       block_l=bl, gather=g)
+                    if schedule_legal(s, r_pad=r_pad, n_cols=n_cols,
+                                      quant=quant):
+                        out.append(s)
+    default = DEFAULT_SCHEDULE
+    if schedule_legal(default, r_pad=r_pad, n_cols=n_cols, quant=quant):
+        out = [default] + [s for s in out if s != default]
+    return out
 
 
 # --------------------------------------------------------------------------

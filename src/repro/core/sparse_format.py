@@ -261,6 +261,12 @@ class ELLChunkedPack:
     plan: ChunkPlan
     qplane: object = None   # QuantizedValuePlane (repro.quant.qpack)
     fingerprint: dict | None = None     # see ELLPack.fingerprint
+    # The tuned kernel schedule this layout was chunked under (a
+    # repro.autotune.TunedPlan), or None for the hand-picked default.
+    # Advisory metadata: integrity fingerprints deliberately exclude it
+    # (the pack bytes are what they are regardless of who chose Lc), so
+    # carrying a plan never invalidates an existing fingerprint.
+    schedule: object = None
 
     @property
     def r_pad(self) -> int:
@@ -280,7 +286,8 @@ class ELLChunkedPack:
 
 
 def chunk_pack(pack: ELLPack, chunk_cols: int,
-               width_multiple: int = 8) -> ELLChunkedPack:
+               width_multiple: int = 8,
+               schedule=None) -> ELLChunkedPack:
     """Re-layout a row-tile ELL pack into the column-chunked format.
 
     Runs the SDDS chunk pass (``chunk_cells``) per packed row: cells are
@@ -288,6 +295,10 @@ def chunk_pack(pack: ELLPack, chunk_cols: int,
     uniform chunk width Lc is the global max per-(row, chunk) count
     rounded to ``width_multiple`` (the lockstep-width discipline of the
     plain pack, applied per chunk).
+
+    ``schedule`` optionally records the autotuned plan that picked this
+    ``chunk_cols`` (carried on the pack as advisory metadata, excluded
+    from the integrity fingerprint).
     """
     if chunk_cols <= 0:
         raise ValueError(f"chunk_cols must be positive, got {chunk_cols}")
@@ -342,6 +353,7 @@ def chunk_pack(pack: ELLPack, chunk_cols: int,
         chunk_cols=chunk_cols,
         stats=stats,
         plan=plan,
+        schedule=schedule,
     )
     out.fingerprint = integrity.fingerprint_pack(out)
     return out

@@ -93,8 +93,7 @@ def _to_device(pack: BucketedStackedPack) -> dict:
         buckets = [
             {"q": jnp.asarray(plane.device_codes()),     # (L, HR, K, Lc[/2])
              "cols": jnp.asarray(b["cols"], jnp.int32),
-             "srow": jnp.asarray(
-                 np.repeat(plane.scales, plane.group_rows, axis=-1)),
+             "srow": jnp.asarray(plane.row_scales()),
              "valid": b["valid"]}
             for b, plane in zip(pack.buckets, pack.qplanes)
         ]
@@ -461,17 +460,32 @@ def _scan_bufs(sparse: dict):
 
 
 def _bucket_spmv(pack: dict, buf: tuple, g: int, xt: jnp.ndarray,
-                 impl: str) -> jnp.ndarray:
+                 impl: str, epilogue: str | None = None,
+                 act: str = "silu") -> jnp.ndarray:
     """One bucket's SpMV launch, fp or quantized per the pack's meta.
     Quantized launches return the code-domain accumulator and dequantize
-    with one multiply by the pre-expanded per-row scales."""
+    with one multiply by the pre-expanded per-row scales.
+
+    ``epilogue="glu"`` fuses act(gate)·up into the launch (half-major
+    gate+up bucket, DESIGN.md §15): the fused lowerings replay the exact
+    op order of the unfused path — dequant-once then gate — so the output
+    is bit-identical, in one launch instead of three ops."""
     if pack["quant"] is not None:
         codes, cols, srow = buf
+        if epilogue == "glu":
+            return ops.espim_spmv_batched_quant(
+                codes, cols, None, xt, chunk_cols=pack["chunk_cols"],
+                group_rows=pack["quant"][g]["group_rows"], impl=impl,
+                epilogue="glu", act=act, srow=srow)
         yp = ops.espim_spmv_batched_quant(
             codes, cols, None, xt, chunk_cols=pack["chunk_cols"],
             group_rows=pack["quant"][g]["group_rows"], impl=impl)
         return yp * srow[:, None]
     vals, cols = buf
+    if epilogue == "glu":
+        return ops.espim_spmv_batched(vals, cols, xt,
+                                      chunk_cols=pack["chunk_cols"],
+                                      impl=impl, epilogue="glu", act=act)
     return ops.espim_spmv_batched(vals, cols, xt,
                                   chunk_cols=pack["chunk_cols"], impl=impl)
 
@@ -541,12 +555,19 @@ def _pruned_qkv(cfg: ModelConfig, px: dict, attn_p: dict, hn: jnp.ndarray):
 
 
 def _fused_mlp(cfg: ModelConfig, sparse: dict, bufs: dict, hn: jnp.ndarray,
-               impl: str) -> jnp.ndarray:
+               impl: str, epilogue: bool = True) -> jnp.ndarray:
     """One layer's MLP through the fused packs.
 
     hn (B, T, d_model) -> (B, T, d_model).  Decode runs T=1 (the hot
     path); chunked prefill feeds T=chunk tokens — the kernels see B*T
     columns either way, and x stays in (in, B*T) layout throughout.
+
+    ``epilogue=True`` (default) folds act(gate)·up into the gate+up SpMV
+    launch itself (the ``fuse="halves"`` contract makes this legal: both
+    halves share one balance perm, so the product is an in-kernel
+    elementwise at a fixed row offset).  ``epilogue=False`` keeps the
+    op-level epilogue as the parity reference — the two are bit-identical
+    by construction.
     """
     from repro.models.layers import act_fn
     act = act_fn(cfg.activation)
@@ -556,14 +577,19 @@ def _fused_mlp(cfg: ModelConfig, sparse: dict, bufs: dict, hn: jnp.ndarray,
     xt = hn.reshape(-1, hn.shape[-1]).T.astype(jnp.float32)   # (in, B*T)
 
     parts = []
-    for yp, rg in zip(_group_apply(gu, bufs["gateup"], xt, impl),
-                      gu["bucket_rows"]):
-        if sparse["gated"]:
-            # gate rows and up rows of the bucket share packed order: the
-            # product needs no unscatter (act(0)*0 == 0 on pad rows)
-            parts.append(act(yp[:rg]) * yp[rg:])
-        else:
-            parts.append(act(yp))
+    if sparse["gated"] and epilogue:
+        for g, buf in enumerate(bufs["gateup"]["bufs"]):
+            parts.append(_bucket_spmv(gu, buf, g, xt, impl,
+                                      epilogue="glu", act=cfg.activation))
+    else:
+        for yp, rg in zip(_group_apply(gu, bufs["gateup"], xt, impl),
+                          gu["bucket_rows"]):
+            if sparse["gated"]:
+                # gate rows and up rows of the bucket share packed order:
+                # the product needs no unscatter (act(0)*0 == 0 on pad rows)
+                parts.append(act(yp[:rg]) * yp[rg:])
+            else:
+                parts.append(act(yp))
     inter = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
 
     y = _group_take(bufs["down"],
@@ -597,7 +623,7 @@ def _proj_xs(sparse: dict, proj_path: str):
 
 def _layer_stack(cfg: ModelConfig, params: dict, sparse: dict, cache: dict,
                  h, attn_step, attn_core, impl: str, unroll: bool,
-                 proj_path: str = "kernel"):
+                 proj_path: str = "kernel", epilogue: bool = True):
     """Shared layer loop for decode/prefill: scan by default; ``unroll``
     keeps the per-layer Python loop as the parity reference.
 
@@ -633,7 +659,7 @@ def _layer_stack(cfg: ModelConfig, params: dict, sparse: dict, cache: dict,
         if not mlp_sparse:
             h = h + T.mlp_apply(cfg, lp["mlp"], hn)
         elif proj_path == "kernel":
-            h = h + _fused_mlp(cfg, sparse, px, hn, impl)
+            h = h + _fused_mlp(cfg, sparse, px, hn, impl, epilogue=epilogue)
         else:
             h = h + _pruned_mlp(cfg, sparse, px, hn)
         return h, (kc, vc)
@@ -653,11 +679,15 @@ def _layer_stack(cfg: ModelConfig, params: dict, sparse: dict, cache: dict,
 
 def decode_step_sparse(cfg: ModelConfig, params: dict, sparse: dict,
                        cache: dict, batch: dict, impl: str = "ref",
-                       unroll: bool = False):
+                       unroll: bool = False, epilogue: bool = True):
     """transformer.decode_step with ESPIM-format projections — every
     per-token MV runs through the packed kernels when ``sparse`` covers
     the whole layer (``sparsify_model``), or just the MLPs when it was
-    built by the ``sparsify_mlps`` preset (dense attention)."""
+    built by the ``sparsify_mlps`` preset (dense attention).
+
+    ``epilogue=True`` (default) runs the gate+up MLP buckets with the
+    act(gate)·up epilogue fused into the SpMV launch; ``epilogue=False``
+    is the bit-identical unfused reference (tests assert the parity)."""
     tokens = batch["tokens"]
     h = T.embed_tokens(cfg, params, tokens)
 
@@ -670,7 +700,8 @@ def decode_step_sparse(cfg: ModelConfig, params: dict, sparse: dict,
         return out, kc, vc
 
     h, k_new, v_new = _layer_stack(cfg, params, sparse, cache, h, attn_step,
-                                   attn_core, impl, unroll)
+                                   attn_core, impl, unroll,
+                                   epilogue=epilogue)
     logits = T.logits_from_hidden(cfg, params, h)
     new_cache = {"k": k_new, "v": v_new, "len": cache["len"] + 1}
     return logits, new_cache
@@ -678,7 +709,8 @@ def decode_step_sparse(cfg: ModelConfig, params: dict, sparse: dict,
 
 def prefill_chunk_sparse(cfg: ModelConfig, params: dict, sparse: dict,
                          cache: dict, batch: dict, impl: str = "ref",
-                         unroll: bool = False, proj_path: str = "dense"):
+                         unroll: bool = False, proj_path: str = "dense",
+                         epilogue: bool = True):
     """transformer.prefill_chunk for the ESPIM-format engine: a C-token
     chunk lands at cache["len"]..  Same contract as
     ``factory.prefill_chunk``.
@@ -706,7 +738,7 @@ def prefill_chunk_sparse(cfg: ModelConfig, params: dict, sparse: dict,
 
     h, k_new, v_new = _layer_stack(cfg, params, sparse, cache, h, attn_step,
                                    attn_core, impl, unroll,
-                                   proj_path=proj_path)
+                                   proj_path=proj_path, epilogue=epilogue)
     logits = T.logits_from_hidden(cfg, params, h)
     new_cache = {"k": k_new, "v": v_new, "len": start + n_valid}
     return logits, new_cache

@@ -41,7 +41,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = ["espim_spmv_pallas", "espim_spmv_batched_pallas",
-           "espim_spmv_batched_quant_pallas"]
+           "espim_spmv_batched_quant_pallas",
+           "espim_spmv_batched_glu_pallas",
+           "espim_spmv_batched_quant_glu_pallas",
+           "espim_spmv_batched_res_pallas"]
 
 
 def _check_chunked(values: jnp.ndarray, cols: jnp.ndarray) -> None:
@@ -328,6 +331,290 @@ def espim_spmv_batched_quant_pallas(
         out_shape=jax.ShapeDtypeStruct((r_pad, b), jnp.float32),
         interpret=interpret,
     )(values, cols, scales, x)
+
+
+# --------------------------------------------------------------------------
+# Fused decode epilogues (DESIGN.md §15)
+#
+# PR 3 measured the residual cost of losing to dense as per-token launch
+# overhead BETWEEN SpMV calls: act(gate)·up and the residual add run as
+# separate XLA ops over the (R_pad, B) accumulator.  Both fold into the
+# kernel's own partial-accumulate epilogue:
+#
+# * GLU — the gate+up group packs its halves half-major ((2, Rg) row
+#   blocks) under ONE balance perm, so gate row r and up row r sit at the
+#   same packed position of their halves and act(gate)·up needs no
+#   unscatter.  The kernel views the value/index planes as (2, Rg, K, Lc),
+#   accumulates BOTH halves' (RT, B) partials in the out block, and the
+#   LAST grid step rewrites half 0 with act(acc_g)·acc_u in-register —
+#   zero extra memory traffic, one launch instead of launch + two
+#   elementwise passes.
+# * residual — an extra (RT, B) operand block rides in and is added once
+#   at the last grid step (legal for ``output="take"`` groups when the
+#   caller supplies the residual pre-permuted to packed order).
+#
+# The quantized GLU variants dequantize the two halves' accumulators with
+# the per-row scales at the same last step — after the reduce, before the
+# activation, the exact order the unfused serving path uses.
+# --------------------------------------------------------------------------
+def _epilogue_act(name: str):
+    from repro.kernels.ref import epilogue_act
+    return epilogue_act(name)
+
+
+def _acc_step(partial, out_ref):
+    k = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when((k == 0) & (j == 0))
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when((k != 0) | (j != 0))
+    def _acc():
+        out_ref[...] = out_ref[...] + partial
+
+
+def _is_last_step():
+    k = pl.program_id(1)
+    j = pl.program_id(2)
+    return ((k == pl.num_programs(1) - 1)
+            & (j == pl.num_programs(2) - 1))
+
+
+def _glu_kernel(values_ref, cols_ref, x_ref, out_ref, *, act):
+    """Half-major gated step: values/cols blocks are (2, RT, LC) — gate
+    half 0, up half 1 — accumulated into a (2, RT, B) out block; the last
+    grid step rewrites half 0 with act(gate) * up (half 1 is scratch the
+    host-side wrapper drops)."""
+    vals = values_ref[...].astype(jnp.float32)           # (2, RT, LC)
+    cols = cols_ref[...]
+    x = x_ref[...]                                       # (CC, B)
+    gathered = jnp.take(x, cols, axis=0).astype(jnp.float32)
+    _acc_step(jnp.sum(vals[..., None] * gathered, axis=2), out_ref)
+
+    @pl.when(_is_last_step())
+    def _epilogue():
+        acc = out_ref[...]
+        out_ref[0] = _epilogue_act(act)(acc[0]) * acc[1]
+
+
+def _glu_quant_kernel(values_ref, cols_ref, srow_ref, x_ref, out_ref, *,
+                      act, packed):
+    """Quantized half-major gated step: int8 codes (or nibble-packed
+    uint8) accumulate in the code domain; the last grid step dequantizes
+    both halves with the per-row scales, THEN applies act(gate) * up —
+    the unfused path's exact op order."""
+    from repro.kernels.ref import nibble_unpack_ref
+    vals = values_ref[...]
+    if packed:
+        vals = nibble_unpack_ref(vals)
+    vals = vals.astype(jnp.float32)                      # (2, RT, LC)
+    cols = cols_ref[...]
+    x = x_ref[...]                                       # (CC, B)
+    gathered = jnp.take(x, cols, axis=0).astype(jnp.float32)
+    _acc_step(jnp.sum(vals[..., None] * gathered, axis=2), out_ref)
+
+    @pl.when(_is_last_step())
+    def _epilogue():
+        y = out_ref[...] * srow_ref[...][..., None]      # (2, RT, B)
+        out_ref[0] = _epilogue_act(act)(y[0]) * y[1]
+
+
+def _spmv_batched_res_kernel(values_ref, cols_ref, x_ref, res_ref, out_ref):
+    """The batched kernel with a fused residual add: the pre-permuted
+    (RT, B) residual block is added once at the last grid step."""
+    vals = values_ref[...].astype(jnp.float32)           # (RT, LC)
+    cols = cols_ref[...]
+    x = x_ref[...]                                       # (CC, B)
+    gathered = jnp.take(x, cols, axis=0).astype(jnp.float32)
+    _acc_step(jnp.sum(vals[..., None] * gathered, axis=1), out_ref)
+
+    @pl.when(_is_last_step())
+    def _epilogue():
+        out_ref[...] = out_ref[...] + res_ref[...]
+
+
+def _halve(arr: jnp.ndarray) -> jnp.ndarray:
+    """(2*Rg, ...) half-major plane -> (2, Rg, ...)."""
+    if arr.shape[0] % 2:
+        raise ValueError(
+            f"GLU epilogue needs a half-major (2*Rg, ...) pack; got "
+            f"{arr.shape[0]} rows")
+    return arr.reshape(2, arr.shape[0] // 2, *arr.shape[1:])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk_cols", "act", "block_r", "block_l", "interpret"),
+)
+def espim_spmv_batched_glu_pallas(
+    values: jnp.ndarray,
+    cols: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    chunk_cols: int,
+    act: str = "silu",
+    block_r: int = 128,
+    block_l: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """act(gate) * up (Rg, B) f32 from a half-major (2*Rg, K, Lc) gate+up
+    pack — the epilogue-fused gated-MLP launch."""
+    _check_chunked(values, cols)
+    values = _halve(values)
+    cols = _halve(cols)
+    _, rg, n_chunks, lc = values.shape
+    if rg % block_r:
+        block_r = math.gcd(rg, block_r)
+        if block_r < 8:
+            raise ValueError(
+                f"Rg={rg} has no sublane-aligned row block "
+                f"(gcd with requested block_r gives {block_r})")
+    block_l = min(block_l, max(8, lc))
+    pad_l = (-lc) % block_l
+    if pad_l:
+        values = jnp.pad(values, ((0, 0), (0, 0), (0, 0), (0, pad_l)))
+        cols = jnp.pad(cols, ((0, 0), (0, 0), (0, 0), (0, pad_l)))
+        lc += pad_l
+    m_pad = n_chunks * chunk_cols - x.shape[0]
+    if m_pad < 0:
+        raise ValueError(
+            f"x has {x.shape[0]} rows > n_chunks*chunk_cols = "
+            f"{n_chunks * chunk_cols}")
+    if m_pad:
+        x = jnp.pad(x, ((0, m_pad), (0, 0)))
+    grid = (rg // block_r, n_chunks, lc // block_l)
+    b = x.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_glu_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2, block_r, None, block_l),
+                         lambda i, k, j: (0, i, k, j)),
+            pl.BlockSpec((2, block_r, None, block_l),
+                         lambda i, k, j: (0, i, k, j)),
+            pl.BlockSpec((chunk_cols, b), lambda i, k, j: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((2, block_r, b), lambda i, k, j: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, rg, b), jnp.float32),
+        interpret=interpret,
+    )(values, cols, x)
+    return out[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk_cols", "act", "block_r", "block_l", "interpret"),
+)
+def espim_spmv_batched_quant_glu_pallas(
+    values: jnp.ndarray,
+    cols: jnp.ndarray,
+    srow: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    chunk_cols: int,
+    act: str = "silu",
+    block_r: int = 128,
+    block_l: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Quantized epilogue-fused gated launch: int8 codes or nibble-packed
+    uint8 (width mismatch vs ``cols``), pre-expanded per-row f32 scales
+    ``srow`` (2*Rg,); returns act(gate) * up (Rg, B) f32."""
+    _check_chunked(values, cols)
+    r2, n_chunks, lc = cols.shape
+    packed = values.shape[-1] != lc
+    if packed:
+        if lc % 2:
+            cols = jnp.pad(cols, ((0, 0), (0, 0), (0, 1)))
+            lc += 1
+        if 2 * values.shape[-1] != lc:
+            raise ValueError(
+                f"nibble-packed values width {values.shape[-1]} does not "
+                f"match cols width {cols.shape[-1]}")
+    values = _halve(values)
+    cols = _halve(cols)
+    srow = _halve(srow)
+    rg = values.shape[1]
+    if rg % block_r:
+        block_r = math.gcd(rg, block_r)
+        if block_r < 8:
+            raise ValueError(
+                f"Rg={rg} has no sublane-aligned row block "
+                f"(gcd with requested block_r gives {block_r})")
+    block_l = min(block_l, max(8, lc))
+    if packed:
+        block_l += block_l % 2
+    pad_l = (-lc) % block_l
+    if pad_l:
+        cols = jnp.pad(cols, ((0, 0), (0, 0), (0, 0), (0, pad_l)))
+        pad_v = pad_l // 2 if packed else pad_l
+        values = jnp.pad(values, ((0, 0), (0, 0), (0, 0), (0, pad_v)))
+        lc += pad_l
+    m_pad = n_chunks * chunk_cols - x.shape[0]
+    if m_pad < 0:
+        raise ValueError(
+            f"x has {x.shape[0]} rows > n_chunks*chunk_cols = "
+            f"{n_chunks * chunk_cols}")
+    if m_pad:
+        x = jnp.pad(x, ((0, m_pad), (0, 0)))
+    grid = (rg // block_r, n_chunks, lc // block_l)
+    b = x.shape[1]
+    block_v = block_l // 2 if packed else block_l
+    out = pl.pallas_call(
+        functools.partial(_glu_quant_kernel, act=act, packed=packed),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2, block_r, None, block_v),
+                         lambda i, k, j: (0, i, k, j)),
+            pl.BlockSpec((2, block_r, None, block_l),
+                         lambda i, k, j: (0, i, k, j)),
+            pl.BlockSpec((2, block_r), lambda i, k, j: (0, i)),
+            pl.BlockSpec((chunk_cols, b), lambda i, k, j: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((2, block_r, b), lambda i, k, j: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, rg, b), jnp.float32),
+        interpret=interpret,
+    )(values, cols, srow, x)
+    return out[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk_cols", "block_r", "block_l", "interpret"),
+)
+def espim_spmv_batched_res_pallas(
+    values: jnp.ndarray,
+    cols: jnp.ndarray,
+    x: jnp.ndarray,
+    residual: jnp.ndarray,
+    *,
+    chunk_cols: int,
+    block_r: int = 128,
+    block_l: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y_packed (R_pad, B) f32 = chunked-ELL @ x + residual, the residual
+    add fused into the last grid step (``residual`` already in packed row
+    order — the ``output="take"`` contract lets the caller permute it
+    once, statically)."""
+    values, cols, x, grid, block_r, block_l = _pad_inputs(
+        values, cols, x, chunk_cols, block_r, block_l)
+    b = x.shape[1]
+    return pl.pallas_call(
+        _spmv_batched_res_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, None, block_l), lambda i, k, j: (i, k, j)),
+            pl.BlockSpec((block_r, None, block_l), lambda i, k, j: (i, k, j)),
+            pl.BlockSpec((chunk_cols, b), lambda i, k, j: (k, 0)),
+            pl.BlockSpec((block_r, b), lambda i, k, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, b), lambda i, k, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((values.shape[0], b), jnp.float32),
+        interpret=interpret,
+    )(values, cols, x, residual)
 
 
 @functools.partial(

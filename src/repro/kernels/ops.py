@@ -23,11 +23,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.sdds import KernelSchedule
 from repro.core.sparse_format import ELLChunkedPack, ELLPack, chunk_pack
 from repro.kernels import ref as _ref
 from repro.kernels.dense_mv import dense_mv_pallas
-from repro.kernels.espim_spmv import (espim_spmv_batched_pallas,
+from repro.kernels.espim_spmv import (espim_spmv_batched_glu_pallas,
+                                      espim_spmv_batched_pallas,
+                                      espim_spmv_batched_quant_glu_pallas,
                                       espim_spmv_batched_quant_pallas,
+                                      espim_spmv_batched_res_pallas,
                                       espim_spmv_pallas)
 from repro.telemetry.trace import get_tracer
 
@@ -106,11 +110,17 @@ class Provenance:
     pallas_interpret: bool
     packs: dict | None
     env: dict
+    # the chosen kernel schedule (PR 10): ``None`` = pre-autotune caller;
+    # else {"source": "default"|"search"|"cache", "tuned": bool,
+    # "chunk_cols"/"block_r"/"block_l"/"gather", "epilogue": ...} — bench
+    # rows and trace headers carry it so history windows can distinguish
+    # tuned/fused runs from default-schedule ones
+    schedule: dict | None = None
 
     @classmethod
     def collect(cls, impl: str | None = None, quant: str | None = None,
-                attn: str | None = None,
-                packs: dict | None = None) -> "Provenance":
+                attn: str | None = None, packs: dict | None = None,
+                schedule: dict | None = None) -> "Provenance":
         return cls(
             backend=jax.default_backend(),
             impl=_resolve(impl),
@@ -120,6 +130,7 @@ class Provenance:
             packs=dict(packs) if packs else None,
             env={ENV_IMPL: os.environ.get(ENV_IMPL) or None,
                  ENV_INTERPRET: os.environ.get(ENV_INTERPRET) or None},
+            schedule=dict(schedule) if schedule else None,
         )
 
     def to_dict(self) -> dict:
@@ -132,20 +143,50 @@ class Provenance:
             "attn": self.attn,
             "pallas_interpret": self.pallas_interpret,
             "packs": dict(self.packs) if self.packs else None,
+            "schedule": dict(self.schedule) if self.schedule else None,
             "env": dict(self.env),
         }
 
 
 def provenance(impl: str | None = None, quant: str | None = None,
-               attn: str | None = None, packs: dict | None = None) -> dict:
+               attn: str | None = None, packs: dict | None = None,
+               schedule: dict | None = None) -> dict:
     """Backward-compatible functional form: ``Provenance.collect(...)
     .to_dict()`` (see the dataclass for field semantics)."""
     return Provenance.collect(impl=impl, quant=quant, attn=attn,
-                              packs=packs).to_dict()
+                              packs=packs, schedule=schedule).to_dict()
+
+
+def _block_kw(schedule: KernelSchedule | None, gather: bool = False) -> dict:
+    """Pallas block/gather kwargs from a tuned schedule (``None`` keeps
+    the kernel defaults — the pre-autotune behaviour)."""
+    if schedule is None:
+        return {}
+    kw = {"block_r": schedule.block_r, "block_l": schedule.block_l}
+    if gather:
+        kw["gather"] = schedule.gather
+    return kw
+
+
+def _check_chunk_cols(cols, x, chunk_cols) -> int:
+    if chunk_cols is None:
+        raise ValueError(
+            "chunk_cols is required for the chunked (R_pad, K, Lc) layout; "
+            f"got cols of shape {cols.shape}")
+    cc = int(chunk_cols)
+    n_chunks = cols.shape[1]
+    if n_chunks > 1 and n_chunks * cc - x.shape[0] >= cc:
+        # the last chunk would sit entirely past x: chunk_cols cannot be
+        # the width this pack was built with (silent-corruption guard)
+        raise ValueError(
+            f"chunk_cols={cc} inconsistent with pack: {n_chunks} chunks x "
+            f"{cc} cols span past x of length {x.shape[0]}")
+    return cc
 
 
 def _dispatch_spmv(values, cols, x, chunk_cols, impl,
-                   plain_ref, chunked_ref, pallas_kernel) -> jnp.ndarray:
+                   plain_ref, chunked_ref, pallas_kernel,
+                   pallas_kw: dict | None = None) -> jnp.ndarray:
     """Layout/impl dispatch shared by the (un)batched ops: plain
     (R_pad, L) packs lower through the reference only; chunked
     (R_pad, K, Lc) packs pick the Pallas kernel or the chunked ref."""
@@ -156,26 +197,16 @@ def _dispatch_spmv(values, cols, x, chunk_cols, impl,
                 "the Pallas kernels consume the column-chunked layout; "
                 "re-pack with pack_ell_chunked (plain ELL is ref-only)")
         return plain_ref(values, cols, x)
-    if chunk_cols is None:
-        raise ValueError(
-            "chunk_cols is required for the chunked (R_pad, K, Lc) layout; "
-            f"got values of shape {values.shape}")
-    cc = int(chunk_cols)
-    n_chunks = values.shape[1]
-    if n_chunks > 1 and n_chunks * cc - x.shape[0] >= cc:
-        # the last chunk would sit entirely past x: chunk_cols cannot be
-        # the width this pack was built with (silent-corruption guard)
-        raise ValueError(
-            f"chunk_cols={cc} inconsistent with pack: {n_chunks} chunks x "
-            f"{cc} cols span past x of length {x.shape[0]}")
+    cc = _check_chunk_cols(cols, x, chunk_cols)
     if impl == "ref":
         return chunked_ref(values, cols, x, cc)
     return pallas_kernel(values, cols, x, chunk_cols=cc,
-                         interpret=_interpret())
+                         interpret=_interpret(), **(pallas_kw or {}))
 
 
 def espim_spmv(values, cols, x, *, chunk_cols: int | None = None,
-               impl: str | None = None) -> jnp.ndarray:
+               impl: str | None = None,
+               schedule: KernelSchedule | None = None) -> jnp.ndarray:
     """ELL sparse MV -> (R_pad,) f32.
 
     Chunked layout: values/cols (R_pad, K, Lc) + ``chunk_cols``.
@@ -183,22 +214,69 @@ def espim_spmv(values, cols, x, *, chunk_cols: int | None = None,
     """
     return _dispatch_spmv(values, cols, x, chunk_cols, impl,
                           _ref.espim_spmv_ref, _ref.espim_spmv_chunked_ref,
-                          espim_spmv_pallas)
+                          espim_spmv_pallas, _block_kw(schedule))
 
 
 def espim_spmv_batched(values, cols, x, *, chunk_cols: int | None = None,
-                       impl: str | None = None) -> jnp.ndarray:
-    """Batched ELL sparse MV: x (M, B) -> (R_pad, B) f32 (see espim_spmv)."""
-    return _dispatch_spmv(values, cols, x, chunk_cols, impl,
-                          _ref.espim_spmv_batched_ref,
-                          _ref.espim_spmv_batched_chunked_ref,
-                          espim_spmv_batched_pallas)
+                       impl: str | None = None,
+                       schedule: KernelSchedule | None = None,
+                       epilogue: str | None = None, act: str = "silu",
+                       residual=None) -> jnp.ndarray:
+    """Batched ELL sparse MV: x (M, B) -> (R_pad, B) f32 (see espim_spmv).
+
+    ``schedule`` applies a tuned ``core.sdds.KernelSchedule``'s block and
+    gather choices to the Pallas lowering (``chunk_cols`` stays the
+    pack's — re-chunking is an offline transform, not a launch knob).
+
+    ``epilogue`` fuses a decode epilogue into the launch (DESIGN.md §15):
+
+    * ``"glu"`` — values/cols hold a half-major (2*Rg, K, Lc) gate+up
+      group sharing one balance perm; returns act(gate) * up (Rg, B) in
+      packed order (legal under the ``fuse="halves"`` contract).
+    * ``"residual"`` — adds ``residual`` (R_pad, B), ALREADY in packed row
+      order, at the kernel's last accumulate step (legal for
+      ``output="take"`` groups: the add commutes with the static take
+      when the caller permutes the residual once, offline).
+    """
+    if epilogue is None:
+        return _dispatch_spmv(values, cols, x, chunk_cols, impl,
+                              _ref.espim_spmv_batched_ref,
+                              _ref.espim_spmv_batched_chunked_ref,
+                              espim_spmv_batched_pallas,
+                              _block_kw(schedule, gather=True))
+    impl = _resolve(impl)
+    if values.ndim != 3:
+        raise ValueError(
+            f"epilogue={epilogue!r} needs the column-chunked layout; got "
+            f"values of shape {values.shape}")
+    cc = _check_chunk_cols(cols, x, chunk_cols)
+    if epilogue == "glu":
+        if impl == "ref":
+            return _ref.espim_spmv_batched_chunked_glu_ref(
+                values, cols, x, cc, act)
+        return espim_spmv_batched_glu_pallas(
+            values, cols, x, chunk_cols=cc, act=act,
+            interpret=_interpret(), **_block_kw(schedule))
+    if epilogue == "residual":
+        if residual is None:
+            raise ValueError("epilogue='residual' needs the residual "
+                             "operand (packed row order)")
+        if impl == "ref":
+            return _ref.espim_spmv_batched_chunked_ref(
+                values, cols, x, cc) + residual
+        return espim_spmv_batched_res_pallas(
+            values, cols, x, residual, chunk_cols=cc,
+            interpret=_interpret(), **_block_kw(schedule))
+    raise ValueError(f"unknown epilogue {epilogue!r}")
 
 
 def espim_spmv_batched_quant(values, cols, scales, x, *,
                              chunk_cols: int | None = None,
                              group_rows: int = 1,
-                             impl: str | None = None) -> jnp.ndarray:
+                             impl: str | None = None,
+                             schedule: KernelSchedule | None = None,
+                             epilogue: str | None = None, act: str = "silu",
+                             srow=None, residual=None) -> jnp.ndarray:
     """Quantized batched ELL sparse MV: int8 codes (or nibble-packed uint8
     — inferred from the width mismatch vs ``cols``) + one f32 scale per
     ``group_rows`` packed rows; x (M, B) -> (R_pad, B) f32.
@@ -207,11 +285,47 @@ def espim_spmv_batched_quant(values, cols, scales, x, *,
     fused serving path folds its per-row scales into one precomputed
     multiply per bucket instead of one repeat+multiply per launch.
 
+    ``schedule`` applies a tuned schedule's block sizes to the Pallas
+    lowering.  ``epilogue="glu"`` fuses dequant + act(gate)·up: the
+    half-major (2*Rg, K, Lc) code plane accumulates in the code domain,
+    the pre-expanded per-row scales ``srow`` (2*Rg,) dequantize both
+    halves ONCE after the reduce, then the gated product — the exact op
+    order of the unfused path, one launch.  ``epilogue="residual"`` adds
+    the packed-order residual to the scaled output (op-level for the
+    quant family — the scale multiply dominates the epilogue).
+
     Same dispatch policy as the fp ops (``ESPIM_IMPL`` pin wins); the
     plain (R_pad, L) layout lowers through the reference as a one-chunk
     plane.
     """
     impl = _resolve(impl)
+    if epilogue == "glu":
+        if srow is None:
+            raise ValueError("epilogue='glu' needs srow (pre-expanded "
+                             "per-row scales, half-major)")
+        if cols.ndim != 3:
+            raise ValueError(
+                "epilogue='glu' needs the column-chunked layout; got "
+                f"cols of shape {cols.shape}")
+        cc = _check_chunk_cols(cols, x, chunk_cols)
+        if impl == "ref":
+            return _ref.espim_spmv_batched_chunked_quant_glu_ref(
+                values, cols, srow, x, cc, act)
+        return espim_spmv_batched_quant_glu_pallas(
+            values, cols, srow, x, chunk_cols=cc, act=act,
+            interpret=_interpret(), **_block_kw(schedule))
+    if epilogue == "residual":
+        if residual is None:
+            raise ValueError("epilogue='residual' needs the residual "
+                             "operand (packed row order)")
+        y = espim_spmv_batched_quant(
+            values, cols, scales, x, chunk_cols=chunk_cols,
+            group_rows=group_rows, impl=impl, schedule=schedule)
+        if scales is None and srow is not None:
+            y = y * srow[:, None]
+        return y + residual
+    if epilogue is not None:
+        raise ValueError(f"unknown epilogue {epilogue!r}")
     if scales is None and impl != "ref":
         # unit scales through the kernel's own scaling path (exact)
         scales = jnp.ones(1, jnp.float32)
@@ -224,22 +338,13 @@ def espim_spmv_batched_quant(values, cols, scales, x, *,
         return _ref.espim_spmv_batched_chunked_quant_ref(
             values[:, None, :], cols[:, None, :], scales, x,
             x.shape[0], group_rows)
-    if chunk_cols is None:
-        raise ValueError(
-            "chunk_cols is required for the chunked (R_pad, K, Lc) layout; "
-            f"got cols of shape {cols.shape}")
-    cc = int(chunk_cols)
-    n_chunks = cols.shape[1]
-    if n_chunks > 1 and n_chunks * cc - x.shape[0] >= cc:
-        raise ValueError(
-            f"chunk_cols={cc} inconsistent with pack: {n_chunks} chunks x "
-            f"{cc} cols span past x of length {x.shape[0]}")
+    cc = _check_chunk_cols(cols, x, chunk_cols)
     if impl == "ref":
         return _ref.espim_spmv_batched_chunked_quant_ref(
             values, cols, scales, x, cc, group_rows)
     return espim_spmv_batched_quant_pallas(
         values, cols, scales, x, chunk_cols=cc, group_rows=group_rows,
-        interpret=_interpret())
+        interpret=_interpret(), **_block_kw(schedule))
 
 
 def dense_mv(w, x, *, impl: str | None = None) -> jnp.ndarray:
@@ -317,7 +422,8 @@ jax.tree_util.register_pytree_node(
 
 def pack_to_device(pack: ELLPack | ELLChunkedPack, dtype=jnp.float32,
                    chunk_cols: int = DEFAULT_CHUNK_COLS,
-                   quant=None, verify: bool = True
+                   quant=None, verify: bool = True,
+                   autotune: bool = False, tune: dict | None = None
                    ) -> EspimWeights | QuantEspimWeights:
     """Move an offline pack onto the device arrays the kernels consume.
 
@@ -326,6 +432,16 @@ def pack_to_device(pack: ELLPack | ELLChunkedPack, dtype=jnp.float32,
     ("int8" | "int4" | a ``repro.quant.QuantSpec``) quantizes the value
     plane on the way up (or reuses an already-attached ``pack.qplane``)
     and returns ``QuantEspimWeights``.
+
+    ``autotune=True`` asks ``repro.autotune`` for a schedule first: a
+    plan-cache hit (keyed by the pack's plan-free fingerprint + launch
+    context) skips the search entirely; a miss benchmarks the cost-ranked
+    candidates and persists the winner.  The tuned ``chunk_cols`` replaces
+    the argument for the chunk pass, and the ``TunedPlan`` rides on the
+    returned weights as a non-pytree ``.schedule`` attribute so serving
+    code and bench provenance can report it.  ``tune`` forwards extra
+    ``autotune_pack`` kwargs (``b``, ``max_candidates``, ``iters``,
+    ``cache``, ...).
 
     ``verify=True`` (default) runs ``core.integrity.verify_pack`` on the
     host pack before upload: bounds validation always, plus a fingerprint
@@ -336,8 +452,19 @@ def pack_to_device(pack: ELLPack | ELLChunkedPack, dtype=jnp.float32,
     tr = get_tracer()
     with tr.span("pack.to_device", cat="pack",
                  args={"quant": getattr(quant, "bits", quant) or "none",
-                       "verify": verify}):
-        return _pack_to_device(pack, dtype, chunk_cols, quant, verify, tr)
+                       "verify": verify, "autotune": autotune}):
+        plan = None
+        if autotune:
+            from repro.autotune import autotune_pack, default_cache
+            kw = dict(tune or {})
+            kw.setdefault("cache", default_cache())
+            with tr.span("pack.autotune", cat="pack"):
+                plan = autotune_pack(pack, quant=quant, **kw)
+            if isinstance(pack, ELLPack):
+                chunk_cols = plan.schedule.chunk_cols
+        w = _pack_to_device(pack, dtype, chunk_cols, quant, verify, tr)
+        w.schedule = plan          # aux metadata, invisible to the pytree
+        return w
 
 
 def _pack_to_device(pack, dtype, chunk_cols, quant, verify, tr):

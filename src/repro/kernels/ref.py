@@ -29,7 +29,35 @@ __all__ = [
     "dequantize_plane_ref",
     "dense_mv_ref",
     "scatter_rows_ref",
+    "epilogue_act",
+    "glu_epilogue_ref",
+    "espim_spmv_batched_chunked_glu_ref",
+    "espim_spmv_batched_chunked_quant_glu_ref",
 ]
+
+
+def epilogue_act(name: str):
+    """Activation for the fused kernel epilogues.  A local map (instead of
+    ``repro.models.layers.act_fn``) keeps the kernels package free of a
+    models dependency; entries must stay bit-identical to ``act_fn``'s."""
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        import functools
+        return functools.partial(jax.nn.gelu, approximate=True)
+    if name == "relu":
+        return jax.nn.relu
+    if name == "relu2":
+        return lambda v: jnp.square(jax.nn.relu(v))
+    raise ValueError(f"unknown epilogue activation {name!r}")
+
+
+def glu_epilogue_ref(acc: jnp.ndarray, act: str) -> jnp.ndarray:
+    """act(gate) * up over a half-major (2*Rg, ...) packed accumulator —
+    gate rows first, up rows second, halves sharing one balance perm so
+    the product stays in packed order (act(0) * 0 == 0 on pad rows)."""
+    rg = acc.shape[0] // 2
+    return epilogue_act(act)(acc[:rg]) * acc[rg:]
 
 
 def espim_spmv_ref(values: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray
@@ -168,6 +196,35 @@ def espim_spmv_batched_chunked_quant_ref(codes: jnp.ndarray,
         return acc
     srow = jnp.repeat(scales, group_rows, axis=-1)
     return acc * srow[:, None]
+
+
+def espim_spmv_batched_chunked_glu_ref(values: jnp.ndarray,
+                                       cols: jnp.ndarray, x: jnp.ndarray,
+                                       chunk_cols: int, act: str
+                                       ) -> jnp.ndarray:
+    """Epilogue-fused gated MV: the half-major (2*Rg, K, Lc) gate+up pack
+    through the SAME per-chunk gather-accumulate as the unfused lowering,
+    with act(gate) * up applied to the (2*Rg, B) accumulator in the same
+    jitted graph — returns (Rg, B) f32 in packed order.  Identical
+    accumulation order means the fused output is bit-identical to running
+    the unfused op and the epilogue separately."""
+    acc = espim_spmv_batched_chunked_ref(values, cols, x, chunk_cols)
+    return glu_epilogue_ref(acc, act)
+
+
+def espim_spmv_batched_chunked_quant_glu_ref(codes: jnp.ndarray,
+                                             cols: jnp.ndarray,
+                                             srow: jnp.ndarray,
+                                             x: jnp.ndarray, chunk_cols: int,
+                                             act: str) -> jnp.ndarray:
+    """Quantized epilogue-fused gated MV: code-domain accumulate (scales
+    owned by the caller as pre-expanded per-row ``srow``), dequantize the
+    (2*Rg, B) accumulator with ONE multiply, then act(gate) * up — the
+    exact op sequence the unfused serving path runs, fused into one call.
+    Returns (Rg, B) f32 in packed order."""
+    acc = espim_spmv_batched_chunked_quant_ref(codes, cols, None, x,
+                                               chunk_cols, 1)
+    return glu_epilogue_ref(acc * srow[:, None], act)
 
 
 def dense_mv_ref(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:

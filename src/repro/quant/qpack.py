@@ -134,13 +134,22 @@ class QuantizedValuePlane:
         return code + meta
 
     # ------------------------------------------------------------ transforms
-    def _row_scales(self) -> np.ndarray:
+    def row_scales(self) -> np.ndarray:
+        """Per-row scales, pre-expanded from the per-group table
+        (``np.repeat`` over the row axis).  This is the ``srow`` operand
+        of the fused serving path and of the kernel GLU epilogue
+        (``ops.espim_spmv_batched_quant(..., epilogue="glu", srow=...)``):
+        expanding once offline folds the whole dequant into a single
+        multiply per launch."""
         return np.repeat(self.scales, self.group_rows, axis=-1)
+
+    # backwards-compatible private alias (pre-PR-10 name)
+    _row_scales = row_scales
 
     def dequantize(self) -> np.ndarray:
         """Reconstruct the fp32 value plane: q * scale per row group."""
         return (self.q.astype(np.float32)
-                * self._row_scales()[..., :, None, None])
+                * self.row_scales()[..., :, None, None])
 
     def device_codes(self) -> np.ndarray:
         """The array the kernels gather: nibble-packed uint8 (last dim

@@ -1,0 +1,387 @@
+"""PR 10: schedule autotuning, the fingerprint-keyed plan cache, and the
+fused decode epilogues.
+
+Contracts under test
+--------------------
+* any *legal* candidate schedule produces bit-identical SpMV output
+  (fp / int8 / int4, incl. odd-Lc nibble packing) — a schedule is a
+  performance knob, never a semantics knob;
+* the plan cache round-trips through JSON and invalidates the moment the
+  pack bytes change (fingerprint-keyed);
+* a warm cache makes the second tune of an identical pack perform ZERO
+  candidate benchmarks (``autotune.search_stats``);
+* the epilogue-fused engine is bit-identical to the unfused reference,
+  greedy tokens included.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import autotune
+from repro.autotune import (PlanCache, TunedPlan, autotune_pack,
+                            pack_cache_key, reset_search_stats,
+                            schedule_cost, search_stats)
+from repro.configs.registry import get_config
+from repro.core import sparse_model as SM
+from repro.core.sdds import (DEFAULT_SCHEDULE, KernelSchedule,
+                             enumerate_schedules, schedule_legal)
+from repro.core.sparse_format import chunk_pack, pack_ell
+from repro.kernels import ops
+from repro.models import factory
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _int_pack(n_rows=96, n_cols=300, density=0.12, seed=0):
+    """Integer-valued f32 pack: sums are exact in fp32, so every legal
+    schedule (any accumulation order) must be bit-identical."""
+    rng = np.random.default_rng(seed)
+    w = rng.integers(-3, 4, (n_rows, n_cols)).astype(np.float32)
+    w *= rng.random((n_rows, n_cols)) < density
+    return pack_ell(w), rng
+
+
+def _unscatter(cp, y):
+    perm = np.asarray(cp.perm)
+    out = np.zeros((cp.n_rows,) + y.shape[1:], np.float32)
+    keep = perm >= 0
+    out[perm[keep]] = np.asarray(y)[keep]
+    return out
+
+
+# --------------------------------------------------------------------------
+# 1) candidate space legality
+# --------------------------------------------------------------------------
+def test_enumerated_schedules_are_legal():
+    cands = enumerate_schedules(r_pad=128, n_cols=700)
+    assert cands, "empty candidate space"
+    for s in cands:
+        assert schedule_legal(s, r_pad=128, n_cols=700)
+    # the hand-picked default leads when legal (tie-break stability)
+    assert cands[0].effective_key("pallas") == \
+        DEFAULT_SCHEDULE.effective_key("pallas") or \
+        not schedule_legal(DEFAULT_SCHEDULE, r_pad=128, n_cols=700)
+    # chunk widths never exceed the matrix
+    assert all(s.chunk_cols <= 700 for s in cands)
+
+
+def test_int4_candidates_have_even_block_l():
+    for s in enumerate_schedules(r_pad=128, n_cols=700, quant="int4"):
+        assert s.block_l % 2 == 0
+    assert not schedule_legal(KernelSchedule(block_l=65), r_pad=128,
+                              n_cols=700, quant="int4")
+
+
+def test_schedule_cost_penalizes_padding_and_launches():
+    kw = dict(r_pad=128, n_chunks=2, chunk_width=64, b=8)
+    s = KernelSchedule(chunk_cols=256)
+    assert schedule_cost(s, **kw, pad_frac=0.5) > \
+        schedule_cost(s, **kw, pad_frac=0.0)
+    # smaller blocks -> more grid steps -> higher launch charge
+    small = KernelSchedule(chunk_cols=256, block_r=8, block_l=8)
+    assert schedule_cost(small, **kw) > schedule_cost(s, **kw)
+    # narrower value plane is cheaper traffic
+    assert schedule_cost(s, **kw, quant="int4") < schedule_cost(s, **kw)
+
+
+# --------------------------------------------------------------------------
+# 2) any legal schedule is bit-identical (fp / int8 / int4, odd Lc)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("quant", [None, "int8", "int4"])
+def test_legal_schedules_bit_identical(quant):
+    pack, rng = _int_pack()
+    x = jnp.asarray(rng.integers(-3, 4, (pack.n_cols, 4)), jnp.float32)
+    base = None
+    for s in enumerate_schedules(r_pad=pack.r_pad, n_cols=pack.n_cols,
+                                 quant=quant)[:6]:
+        cp = chunk_pack(pack, s.chunk_cols)
+        cols = jnp.asarray(cp.cols, jnp.int32)
+        if quant is None:
+            y = ops.espim_spmv_batched(jnp.asarray(cp.values), cols, x,
+                                       chunk_cols=cp.chunk_cols, impl="ref",
+                                       schedule=s)
+        else:
+            from repro.quant import default_spec, quantize_pack
+            plane = quantize_pack(cp, default_spec(quant))
+            srow = plane.row_scales().astype(np.float32)
+            y = ops.espim_spmv_batched_quant(
+                jnp.asarray(plane.device_codes()), cols, None, x,
+                chunk_cols=cp.chunk_cols, group_rows=plane.group_rows,
+                impl="ref", schedule=s) * srow[:, None]
+        out = _unscatter(cp, y)
+        if base is None:
+            base = out
+        else:
+            np.testing.assert_array_equal(out, base, err_msg=repr(s))
+
+
+def test_odd_lc_nibble_schedule_parity():
+    """width_multiple=1 produces odd chunk widths — the int4 nibble pack
+    pads a column; the launch must still be exact."""
+    pack, rng = _int_pack(n_rows=64, n_cols=150, density=0.15, seed=3)
+    x = jnp.asarray(rng.integers(-2, 3, (150, 3)), jnp.float32)
+    from repro.quant import default_spec, quantize_pack
+    outs = []
+    for cc in (64, 150):
+        cp = chunk_pack(pack, cc, width_multiple=1)
+        plane = quantize_pack(cp, default_spec("int4"))
+        srow = plane.row_scales().astype(np.float32)
+        y = ops.espim_spmv_batched_quant(
+            jnp.asarray(plane.device_codes()),
+            jnp.asarray(cp.cols, jnp.int32), None, x,
+            chunk_cols=cp.chunk_cols, group_rows=plane.group_rows,
+            impl="ref") * srow[:, None]
+        outs.append(_unscatter(cp, y))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+# --------------------------------------------------------------------------
+# 3) plan cache: round-trip, persistence, fingerprint invalidation
+# --------------------------------------------------------------------------
+def test_plan_cache_roundtrip(tmp_path):
+    path = str(tmp_path / "plans.json")
+    cache = PlanCache(path)
+    cache.put("k1", {"schedule": {"chunk_cols": 256, "block_r": 64,
+                                  "block_l": 128, "gather": "block"},
+                     "best_us": 12.5, "candidates": 3,
+                     "created_by": "search"})
+    # a fresh instance loads the persisted table
+    warm = PlanCache(path)
+    entry = warm.get("k1")
+    assert entry is not None and entry["best_us"] == 12.5
+    assert warm.hits == 1 and warm.misses == 0
+    assert warm.get("nope") is None and warm.misses == 1
+    # corrupt file -> empty table, no crash
+    with open(path, "w") as f:
+        f.write("{not json")
+    assert len(PlanCache(path)) == 0
+
+
+def test_cache_key_invalidates_on_pack_mutation():
+    pack, _ = _int_pack(seed=5)
+    k1 = pack_cache_key(pack, b=8, quant=None, impl="ref", backend="cpu")
+    # same content, same key (recompute is deterministic)
+    pack2, _ = _int_pack(seed=5)
+    assert pack_cache_key(pack2, b=8, quant=None, impl="ref",
+                          backend="cpu") == k1
+    # flip one value -> fingerprint moves -> key moves
+    pack2.values[0, 0] += 1.0
+    from repro.core.integrity import fingerprint_pack
+    pack2.fingerprint = fingerprint_pack(pack2)
+    assert pack_cache_key(pack2, b=8, quant=None, impl="ref",
+                          backend="cpu") != k1
+    # launch context is part of the key
+    assert pack_cache_key(pack, b=16, quant=None, impl="ref",
+                          backend="cpu") != k1
+    assert pack_cache_key(pack, b=8, quant="int4", impl="ref",
+                          backend="cpu") != k1
+
+
+def test_cache_key_is_plan_free():
+    """The same weight content keys identically no matter which chunk
+    width a previous tune picked (else a retune could never hit)."""
+    pack, _ = _int_pack(seed=7)
+    kw = dict(b=8, quant=None, impl="ref", backend="cpu")
+    k_plain = pack_cache_key(pack, **kw)
+    assert pack_cache_key(pack, **kw) == k_plain
+    # chunked variants of the same pack key off their exact planes —
+    # different chunkings are different artifacts, but each is stable
+    c1 = pack_cache_key(chunk_pack(pack, 64), **kw)
+    c2 = pack_cache_key(chunk_pack(pack, 64), **kw)
+    assert c1 == c2
+
+
+# --------------------------------------------------------------------------
+# 4) warm cache -> zero candidate benchmarks
+# --------------------------------------------------------------------------
+def test_warm_cache_skips_search():
+    pack, _ = _int_pack()
+    cache = PlanCache()
+    reset_search_stats()
+    plan = autotune_pack(pack, b=4, cache=cache, max_candidates=2,
+                         iters=1, warmup=0)
+    assert plan.source == "search"
+    assert search_stats["benchmarks"] == 2
+    n = search_stats["benchmarks"]
+    plan2 = autotune_pack(pack, b=4, cache=cache, max_candidates=2,
+                          iters=1, warmup=0)
+    assert plan2.source == "cache"
+    assert plan2.schedule == plan.schedule
+    assert search_stats["benchmarks"] == n, "cache hit ran benchmarks"
+    reset_search_stats()
+
+
+def test_pack_to_device_autotune_attaches_plan(tmp_path):
+    pack, _ = _int_pack()
+    cache = PlanCache(str(tmp_path / "plans.json"))
+    tune = {"b": 4, "cache": cache, "max_candidates": 2, "iters": 1,
+            "warmup": 0}
+    reset_search_stats()
+    w = ops.pack_to_device(pack, autotune=True, tune=tune)
+    assert isinstance(w.schedule, TunedPlan)
+    assert w.schedule.source == "search"
+    assert w.chunk_cols == w.schedule.schedule.chunk_cols
+    n = search_stats["benchmarks"]
+    # second upload of the identical pack: plan-cache hit, ZERO benchmarks
+    w2 = ops.pack_to_device(pack, autotune=True, tune=tune)
+    assert w2.schedule.source == "cache"
+    assert search_stats["benchmarks"] == n
+    assert w2.chunk_cols == w.chunk_cols
+    # the persisted JSON is the real carrier (file round-trip, not memory)
+    doc = json.load(open(cache.path))
+    assert doc["schema"] == "espim-plan-cache/v1"
+    assert w.schedule.key in doc["plans"]
+    # plain (non-tuned) uploads still work and carry no plan
+    assert ops.pack_to_device(pack).schedule is None
+    reset_search_stats()
+
+
+def test_tuned_plan_provenance_shape():
+    plan = TunedPlan(schedule=KernelSchedule(chunk_cols=256), source="search",
+                     key="abc", best_us=9.0, candidates=3)
+    d = plan.to_provenance()
+    assert d["tuned"] is True and d["source"] == "search"
+    assert d["chunk_cols"] == 256 and d["cache_key"] == "abc"
+    prov = ops.provenance(impl="ref", schedule=d)
+    assert prov["schedule"]["source"] == "search"
+    # pre-autotune callers keep a null field (schema stays stable)
+    assert ops.provenance(impl="ref")["schedule"] is None
+
+
+def test_bench_history_fingerprint_forks_on_schedule():
+    import importlib.util as iu
+    spec = iu.spec_from_file_location(
+        "bench_history", "benchmarks/bench_history.py")
+    bh = iu.module_from_spec(spec)
+    spec.loader.exec_module(bh)
+    base = {"bench": "serve", "provenance": {"backend": "cpu", "impl": "ref"}}
+    tuned = {"bench": "serve",
+             "provenance": {"backend": "cpu", "impl": "ref",
+                            "schedule": {"source": "search", "tuned": True}}}
+    assert bh.fingerprint(base) != bh.fingerprint(tuned)
+
+
+# --------------------------------------------------------------------------
+# 5) epilogue fusion: ops-level and engine-level parity
+# --------------------------------------------------------------------------
+def test_ops_glu_epilogue_bit_exact_vs_unfused():
+    rng = np.random.default_rng(11)
+    rg, m, b = 64, 256, 4
+    w = (rng.standard_normal((2 * rg, m))
+         * (rng.random((2 * rg, m)) < 0.15)).astype(np.float32)
+    cp = chunk_pack(pack_ell(w), 128)
+    v = jnp.asarray(cp.values)
+    c = jnp.asarray(cp.cols, jnp.int32)
+    x = jnp.asarray(rng.standard_normal((m, b)), jnp.float32)
+    from repro.models.layers import act_fn
+    acc = ops.espim_spmv_batched(v, c, x, chunk_cols=cp.chunk_cols,
+                                 impl="ref")
+    want = act_fn("silu")(acc[:rg]) * acc[rg:]
+    got = ops.espim_spmv_batched(v, c, x, chunk_cols=cp.chunk_cols,
+                                 impl="ref", epilogue="glu")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # Pallas variant: different accumulation order, tight relative tol
+    gp = ops.espim_spmv_batched(v, c, x, chunk_cols=cp.chunk_cols,
+                                impl="pallas", epilogue="glu")
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # residual epilogue
+    res = jnp.asarray(rng.standard_normal((2 * rg, b)), jnp.float32)
+    got_r = ops.espim_spmv_batched(v, c, x, chunk_cols=cp.chunk_cols,
+                                   impl="ref", epilogue="residual",
+                                   residual=res)
+    np.testing.assert_array_equal(np.asarray(got_r), np.asarray(acc + res))
+    gp_r = ops.espim_spmv_batched(v, c, x, chunk_cols=cp.chunk_cols,
+                                  impl="pallas", epilogue="residual",
+                                  residual=res)
+    np.testing.assert_allclose(np.asarray(gp_r), np.asarray(acc + res),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("quant", ["int8", "int4"])
+def test_ops_quant_glu_epilogue_bit_exact(quant):
+    rng = np.random.default_rng(13)
+    rg, m, b = 64, 256, 3
+    w = (rng.standard_normal((2 * rg, m))
+         * (rng.random((2 * rg, m)) < 0.15)).astype(np.float32)
+    cp = chunk_pack(pack_ell(w), 128)
+    from repro.quant import default_spec, quantize_pack
+    plane = quantize_pack(cp, default_spec(quant))
+    codes = jnp.asarray(plane.device_codes())
+    c = jnp.asarray(cp.cols, jnp.int32)
+    srow = jnp.asarray(plane.row_scales().astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((m, b)), jnp.float32)
+    from repro.models.layers import act_fn
+    acc = ops.espim_spmv_batched_quant(
+        codes, c, None, x, chunk_cols=cp.chunk_cols,
+        group_rows=plane.group_rows, impl="ref")
+    y = acc * srow[:, None]
+    want = act_fn("silu")(y[:rg]) * y[rg:]
+    got = ops.espim_spmv_batched_quant(
+        codes, c, None, x, chunk_cols=cp.chunk_cols,
+        group_rows=plane.group_rows, impl="ref", epilogue="glu", srow=srow)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    gq = ops.espim_spmv_batched_quant(
+        codes, c, None, x, chunk_cols=cp.chunk_cols,
+        group_rows=plane.group_rows, impl="pallas", epilogue="glu",
+        srow=srow)
+    np.testing.assert_allclose(np.asarray(gq), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_epilogue_requires_operands():
+    rng = np.random.default_rng(17)
+    w = (rng.standard_normal((64, 128))
+         * (rng.random((64, 128)) < 0.2)).astype(np.float32)
+    cp = chunk_pack(pack_ell(w), 64)
+    v, c = jnp.asarray(cp.values), jnp.asarray(cp.cols, jnp.int32)
+    x = jnp.asarray(rng.standard_normal((128, 2)), jnp.float32)
+    with pytest.raises(ValueError, match="residual"):
+        ops.espim_spmv_batched(v, c, x, chunk_cols=64, impl="ref",
+                               epilogue="residual")
+    with pytest.raises(ValueError, match="unknown epilogue"):
+        ops.espim_spmv_batched(v, c, x, chunk_cols=64, impl="ref",
+                               epilogue="rmsnorm")
+    with pytest.raises(ValueError, match="srow"):
+        ops.espim_spmv_batched_quant(v, c, None, x, chunk_cols=64,
+                                     impl="ref", epilogue="glu")
+    # plain 2-D layout cannot host a fused epilogue
+    with pytest.raises(ValueError, match="chunked"):
+        ops.espim_spmv_batched(v[:, 0], c[:, 0], x, impl="ref",
+                               epilogue="glu")
+
+
+@pytest.mark.parametrize("quant", [None, "int4"])
+def test_engine_fused_epilogue_greedy_parity(quant):
+    """The whole-layer engine with fused epilogues must be bit-identical
+    to the unfused default-schedule engine — logits AND greedy tokens."""
+    cfg = get_config("llama7b-espim", reduced=True)
+    params = factory.init_params(cfg, KEY)
+    sparse = SM.sparsify_model(cfg, params, 0.9, quant=quant)
+    cache_f = factory.init_cache(cfg, 2, 8)
+    cache_u = factory.init_cache(cfg, 2, 8)
+    toks = jax.random.randint(KEY, (2, 1), 0, cfg.vocab_size)
+    for _ in range(3):
+        lf, cache_f = SM.decode_step_sparse(cfg, params, sparse, cache_f,
+                                            {"tokens": toks}, epilogue=True)
+        lu, cache_u = SM.decode_step_sparse(cfg, params, sparse, cache_u,
+                                            {"tokens": toks}, epilogue=False)
+        np.testing.assert_array_equal(np.asarray(lf), np.asarray(lu))
+        tf = jnp.argmax(lf[:, -1], axis=-1)
+        tu = jnp.argmax(lu[:, -1], axis=-1)
+        np.testing.assert_array_equal(np.asarray(tf), np.asarray(tu))
+        toks = tf[:, None].astype(jnp.int32)
+
+
+def test_schedule_rides_on_chunked_pack():
+    pack, _ = _int_pack()
+    plan = TunedPlan(schedule=KernelSchedule(chunk_cols=128),
+                     source="search", key="k")
+    cp = chunk_pack(pack, plan.schedule.chunk_cols, schedule=plan)
+    assert cp.schedule is plan
+    # advisory metadata: the fingerprint ignores it
+    cp2 = chunk_pack(pack, plan.schedule.chunk_cols)
+    assert cp.fingerprint == cp2.fingerprint

@@ -378,9 +378,15 @@ def test_provenance_dataclass_stable():
     assert d == ops.provenance(impl="ref", quant="int8", attn="sparse",
                                packs={"g": "abc"})
     assert list(d) == ["backend", "impl", "quant", "attn",
-                      "pallas_interpret", "packs", "env"]
+                      "pallas_interpret", "packs", "schedule", "env"]
     json.dumps(d)                                  # JSON-ready
     assert ops.Provenance.collect(impl="ref").packs is None
+    # pre-autotune callers keep a null schedule field (schema stability);
+    # tuned runs carry the TunedPlan.to_provenance() dict
+    assert d["schedule"] is None
+    tuned = ops.Provenance.collect(
+        impl="ref", schedule={"source": "search", "tuned": True})
+    assert tuned.to_dict()["schedule"]["tuned"] is True
 
 
 # ---------------------------------------------------------- engine traced
